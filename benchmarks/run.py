@@ -1,0 +1,44 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run              # quick scale
+    PYTHONPATH=src python -m benchmarks.run --full       # paper-scale msgs
+    PYTHONPATH=src python -m benchmarks.run --only fig6,tbl3
+
+Prints ``name,us_per_call,derived`` CSV rows (and writes them to
+``experiments/bench_results.csv``).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig1,fig6,tbl3")
+    ap.add_argument("--out", default="experiments/bench_results.csv")
+    args = ap.parse_args(argv)
+
+    from . import common as C
+    from . import paper_figs
+
+    scale = C.FULL if args.full else C.QUICK
+    names = (args.only.split(",") if args.only
+             else list(paper_figs.ALL))
+    t0 = time.time()
+    for name in names:
+        fn = paper_figs.ALL[name]
+        print(f"# --- {name} ({fn.__doc__.strip().splitlines()[0]}) ---",
+              flush=True)
+        fn(scale)
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text("\n".join(C.rows()) + "\n")
+    print(f"# done in {time.time()-t0:.0f}s -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Fabric what-if exploration: failures, convergence time, and transport.
+
+Shows the full §5.2 failure study on one small topology: how host-adaptive
+(REPS-style), switch-adaptive (quantized JSQ) and OFAN behave as routing
+convergence time G varies -- the paper's headline operational question
+("should operators rely on host-based LB or demand fast convergence from
+switch vendors?").
+
+    PYTHONPATH=src python examples/simulate_fabric.py
+"""
+import numpy as np
+
+from repro.net.topology import FatTree, LinkState, rho_max
+from repro.net import workloads, loopsim
+from repro.core import lb_schemes as lbs
+
+
+def main():
+    tree = FatTree(4)
+    rng = np.random.default_rng(42)
+    links = LinkState.random_failures(tree, 0.08, rng)
+    n_dead = int((~links.ea).sum() + (~links.ac).sum())
+    print(f"fat-tree k=4 ({tree.n_hosts} hosts); {n_dead} failed links")
+
+    wl = workloads.permutation(tree, 64, np.random.default_rng(1),
+                               inter_pod_only=True)
+    rho = rho_max(tree, links, wl.flow_src, wl.flow_dst)
+    print(f"rho_max under failures: {rho:.3f} (Appendix A)\n")
+
+    rtt = 87
+    print(f"{'G':>10s} {'host AR (REPS)':>16s} {'switch AR':>12s} "
+          f"{'OFAN':>8s}   (CCT slots; lower is better)")
+    for g_label, g in [("0", 0), ("1 RTT", rtt), ("16 RTT", 16 * rtt),
+                       ("infinite", None)]:
+        row = []
+        for name in ("host_pkt_ar", "switch_pkt_ar", "ofan"):
+            cfg = loopsim.LoopConfig(max_slots=20000, rho=float(rho),
+                                     rto_slots=250)
+            res = loopsim.simulate(tree, wl, lbs.by_name(name), cfg, seed=0,
+                                   links=links, g_converge=g)
+            row.append(res.cct_slots)
+        print(f"{g_label:>10s} {row[0]:16.0f} {row[1]:12.0f} {row[2]:8.0f}")
+
+    print("\npaper takeaway: host AR tracks failures end-to-end and wins at "
+          "large G; all converge once routing state is updated (G=0).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""End-to-end training driver: train a ~100M-parameter dense LM for a few
+hundred steps on the synthetic ngram stream and watch the loss fall.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+Uses the full production stack (sharded train step, AdamW, counter-based
+data, async checkpoints via the resilient loop) on a 1-device mesh.  The
+model is a bespoke ~100M config of the phi-4 family (not the reduced smoke
+config).
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.models.registry import Model
+from repro.models import sharding as sh
+from repro.train import train_step as ts
+from repro.train import data as data_mod
+from repro.train import fault_tolerance as ft_mod
+
+
+def config_100m():
+    base = get_config("phi4-mini-3.8b")
+    return dataclasses.replace(
+        base, name="phi4-100m", n_layers=8, d_model=512, n_heads=8,
+        n_kv_heads=4, head_dim=64, d_ff=1536, vocab=8192,
+        dtype="float32", microbatch=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args(argv)
+
+    cfg = config_100m()
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params")
+
+    tcfg = ts.TrainConfig(learning_rate=1e-3, warmup_steps=50)
+    state = ts.make_train_state(model, params, tcfg)
+    step = jax.jit(ts.build_train_step(model, tcfg), donate_argnums=(0,))
+
+    dcfg = data_mod.DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                               global_batch=args.global_batch)
+    batches = lambda s: {"tokens": jnp.asarray(
+        data_mod.batch_for_step(dcfg, s))}
+
+    losses = []
+
+    def cb(s, m, dt):
+        losses.append(float(m["loss"]))
+        if s % 20 == 0:
+            print(f"step {s:4d}  loss {losses[-1]:.4f}  ({dt*1e3:.0f} ms)",
+                  flush=True)
+
+    loop = ft_mod.ResilientLoop(
+        step, state, ft_mod.FTConfig(ckpt_dir=args.ckpt_dir, ckpt_every=100),
+        health_cb=lambda m: print(f"[ft] {m}"))
+    loop.run(batches, args.steps, cb)
+    print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({'improved' if losses[-1] < losses[0] else 'NO IMPROVEMENT'})")
+    assert losses[-1] < losses[0], "training failed to reduce loss"
+
+
+if __name__ == "__main__":
+    main()

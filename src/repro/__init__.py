@@ -1,0 +1,15 @@
+"""repro — "Load Balancing for AI Training Workloads" as a multi-pod JAX
+framework.
+
+Public API quick map:
+
+    repro.configs.base.get_config(name)      architecture configs
+    repro.models.registry.get_model(name)    uniform model API
+    repro.net.{topology,workloads,fastsim,loopsim}   the fabric simulators
+    repro.core.{lb_schemes,ofan,theory}      the paper's contribution
+    repro.collectives.{engine,planner}       DR-rotation collective engine
+    repro.train / repro.serve                training & serving substrate
+    repro.launch.{mesh,dryrun,roofline,perf} multi-pod tooling
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,41 @@
+"""Public attention entry point used by the model zoo.
+
+``backend``:
+  * 'auto'   -- Pallas kernel on TPU, jnp reference elsewhere (interpret-mode
+                Pallas is far too slow for real training steps on CPU);
+  * 'pallas' -- force the kernel (interpret=True off-TPU: used by tests);
+  * 'xla'    -- the pure-jnp reference.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, causal: bool = True, scale=None,
+              backend: str = "auto", block_q: int = 128, block_k: int = 128):
+    """q (B,Hq,Sq,Dk); k (B,Hkv,Sk,Dk); v (B,Hkv,Sk,Dv) -> (B,Hq,Sq,Dv).
+
+    Dv != Dk and long sequences route through the chunked XLA path."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "xla"
+    mixed_dims = v.shape[-1] != k.shape[-1]
+    long_seq = k.shape[2] > 1024
+    if backend == "xla":
+        if mixed_dims or long_seq:
+            return _ref.mha_chunked(q, k, v, causal=causal, scale=scale,
+                                    block_k=min(512, k.shape[2]))
+        return _ref.mha(q, k, v, causal=causal, scale=scale)
+    if backend == "pallas":
+        if mixed_dims:
+            return _ref.mha_chunked(q, k, v, causal=causal, scale=scale)
+        return _kernel.flash_attention(
+            q, k, v, causal=causal, scale=scale, block_q=block_q,
+            block_k=block_k, interpret=not _on_tpu())
+    raise ValueError(backend)

@@ -1,0 +1,93 @@
+"""Pure-jnp oracle for causal GQA flash attention (+ a memory-bounded
+chunked variant -- 'flash in XLA' -- used for long sequences on the CPU/XLA
+backend; peak memory O(S * block) instead of O(S^2))."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha(q, k, v, *, causal: bool = True, scale: float | None = None,
+        logit_soft_cap: float | None = None):
+    """Reference attention.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) with Hq % Hkv == 0 (GQA).
+    Returns (B, Hq, Sq, D) in q's dtype; math in float32.
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    if logit_soft_cap is not None:
+        logits = logit_soft_cap * jnp.tanh(logits / logit_soft_cap)
+    if causal:
+        Sk = k.shape[2]
+        # queries are the last Sq positions of the Sk context
+        qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+        kpos = jnp.arange(Sk)[None, :]
+        mask = kpos <= qpos
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def mha_chunked(q, k, v, *, causal: bool = True, scale: float | None = None,
+                block_k: int = 512):
+    """Online-softmax attention scanning kv blocks: O(Sq*block) memory.
+
+    Same semantics as ``mha``; supports Dv != Dk.  This is the XLA-level
+    equivalent of the Pallas kernel, used on non-TPU backends for long
+    sequences and by MLA (d_k=192, d_v=128)."""
+    B, Hq, Sq, Dk = q.shape
+    _, Hkv, Sk, _ = k.shape
+    Dv = v.shape[-1]
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (Dk ** 0.5)
+    if Sk % block_k:
+        pad = (-Sk) % block_k
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        # padded keys masked below via positions
+    Skp = k.shape[2]
+    nb = Skp // block_k
+    qf = q.astype(jnp.float32) * scale
+    qg = qf.reshape(B, Hkv, group, Sq, Dk)
+    kb = k.astype(jnp.float32).reshape(B, Hkv, nb, block_k, Dk)
+    vb = v.astype(jnp.float32).reshape(B, Hkv, nb, block_k, Dv)
+    qpos = jnp.arange(Sq) + (Sk - Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kj, vj, j = inp
+        s = jnp.einsum("bkgqd,bktd->bkgqt", qg, kj)
+        kpos = j * block_k + jnp.arange(block_k)
+        ok = kpos[None, :] < Sk
+        if causal:
+            ok = ok & (kpos[None, :] <= qpos[:, None])
+        s = jnp.where(ok[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqt,bktd->bkgqd", p, vj)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, group, Sq), -1e30)
+    l0 = jnp.zeros((B, Hkv, group, Sq))
+    a0 = jnp.zeros((B, Hkv, group, Sq, Dv))
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kb, 2, 0), jnp.moveaxis(vb, 2, 0),
+         jnp.arange(nb)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Hq, Sq, Dv).astype(q.dtype)

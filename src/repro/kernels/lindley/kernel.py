@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: segmented max-plus (Lindley) scan.
+
+The fast fabric engine's hot spot: a segmented running maximum over packets
+sorted by (queue, arrival).  TPU mapping:
+
+  * the packet stream is tiled into VMEM blocks of ``block`` elements
+    (a multiple of 128 for lane alignment);
+  * the TPU grid executes sequentially, so a single SMEM scalar carries the
+    running maximum of the open segment across blocks;
+  * within a block the segmented scan is a Hillis–Steele doubling scan
+    (log2(block) vector steps on the VPU) over (value, flag) pairs --
+    identical algebra to the associative_scan oracle in ``ref.py``.
+
+Flags are passed as int32 (bool VMEM blocks are awkward on TPU); any nonzero
+means "segment start".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -3.0e38  # python float: jnp scalars would be captured consts in pallas
+
+
+def _scan_block(v, f):
+    """In-block segmented cummax via doubling; v (B,), f (B,) bool."""
+    B = v.shape[0]
+    shift = 1
+    while shift < B:
+        vp = jnp.concatenate([jnp.full((shift,), NEG), v[:-shift]])
+        fp = jnp.concatenate([jnp.zeros((shift,), bool), f[:-shift]])
+        v = jnp.where(f, v, jnp.maximum(v, vp))
+        f = f | fp
+        shift *= 2
+    return v, f
+
+
+def _kernel(v_ref, f_ref, o_ref, carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[0] = NEG
+
+    v = v_ref[...]
+    f = f_ref[...] != 0
+    sv, sf = _scan_block(v, f)
+    # positions with no flag anywhere before them in this block continue the
+    # previous block's open segment:
+    carry = carry_ref[0]
+    out = jnp.where(sf, sv, jnp.maximum(sv, carry))
+    o_ref[...] = out
+    carry_ref[0] = out[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def segmented_cummax(v: jnp.ndarray, flags: jnp.ndarray, *,
+                     block: int = 1024, interpret: bool = True) -> jnp.ndarray:
+    """Segmented running max of ``v`` resetting where ``flags`` is set.
+
+    Pads to a block multiple (padding opens a fresh segment so it never
+    contaminates real data).  ``interpret=True`` runs the kernel body in
+    Python on CPU (this container); on TPU pass interpret=False.
+    """
+    n = v.shape[0]
+    v = jnp.asarray(v, jnp.float32)
+    f = jnp.asarray(flags).astype(jnp.int32)
+    npad = (-n) % block
+    if npad:
+        v = jnp.concatenate([v, jnp.full((npad,), NEG)])
+        f = jnp.concatenate([f, jnp.ones((npad,), jnp.int32)])
+    total = v.shape[0]
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(total // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((total,), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.float32)],
+        interpret=interpret,
+    )(v, f)
+    return out[:n]

@@ -1,0 +1,38 @@
+"""Jit'd public wrapper for the Lindley segmented-scan kernel.
+
+``backend``:
+  * ``xla``     -- associative_scan oracle (default on CPU: interpret-mode
+                   Pallas is orders of magnitude slower than XLA);
+  * ``pallas``  -- the TPU kernel (interpret=True on CPU for validation);
+  * ``auto``    -- pallas on TPU, xla elsewhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def segmented_cummax(v, flags, backend: str = "auto", block: int = 1024):
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "xla"
+    if backend == "xla":
+        return _ref.segmented_cummax(v, flags)
+    if backend == "pallas":
+        return _kernel.segmented_cummax(v, flags, block=block,
+                                        interpret=not _on_tpu())
+    raise ValueError(backend)
+
+
+def lindley_departures(arrival_sorted, seg_start, service: float = 1.0,
+                       backend: str = "auto"):
+    n = arrival_sorted.shape[0]
+    idx = jnp.arange(n, dtype=jnp.float32) * service
+    m = segmented_cummax(arrival_sorted - idx, seg_start, backend=backend)
+    return m + idx + service

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the segmented max-plus (Lindley) scan.
+
+``segmented_cummax(v, flags)`` returns the running maximum of ``v`` that
+resets at every True in ``flags`` (segment starts).  This is the inner loop of
+the fast fabric engine: with packets sorted by (queue, arrival), departure
+times are ``d_i = i + 1 + segmented_cummax(a - i)`` (Lindley recursion in
+max-plus form).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segmented_cummax(v: jnp.ndarray, flags: jnp.ndarray) -> jnp.ndarray:
+    """Oracle via ``jax.lax.associative_scan`` on (value, flag) pairs."""
+    v = jnp.asarray(v, jnp.float32)
+    flags = jnp.asarray(flags, bool)
+
+    def combine(a, b):
+        va, fa = a
+        vb, fb = b
+        return jnp.where(fb, vb, jnp.maximum(va, vb)), fa | fb
+
+    out, _ = jax.lax.associative_scan(combine, (v, flags))
+    return out
+
+
+def segmented_cummax_serial(v, flags):
+    """Sequential reference (used by hypothesis tests as a second oracle)."""
+    import numpy as np
+    v = np.asarray(v, np.float32)
+    flags = np.asarray(flags, bool)
+    out = np.empty_like(v)
+    cur = -np.inf
+    for i in range(len(v)):
+        cur = v[i] if flags[i] else max(cur, v[i])
+        out[i] = cur
+    return out
+
+
+def lindley_departures(arrival_sorted: jnp.ndarray, seg_start: jnp.ndarray,
+                       service: float = 1.0) -> jnp.ndarray:
+    """Departure times for FIFO unit-rate queues: packets sorted by
+    (queue, arrival); ``seg_start`` marks the first packet of each queue."""
+    n = arrival_sorted.shape[0]
+    idx = jnp.arange(n, dtype=jnp.float32) * service
+    m = segmented_cummax(arrival_sorted - idx, seg_start)
+    return m + idx + service

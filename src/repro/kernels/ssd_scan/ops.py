@@ -1,0 +1,37 @@
+"""Public wrapper for the Mamba2 SSD scan.
+
+``backend``: 'auto' (pallas on TPU, chunked-jnp elsewhere), 'pallas',
+'chunked' (jnp closed form), 'scan' (sequential oracle).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssd(x, dt, A, B_mat, C, *, chunk: int = 64, backend: str = "auto"):
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "chunked"
+    L = x.shape[1]
+    pad = (-L) % chunk
+    if pad and backend in ("pallas", "chunked"):
+        zp = lambda a: jnp.pad(a, [(0, 0), (0, pad)] +
+                               [(0, 0)] * (a.ndim - 2))
+        x, dt, B_mat, C = zp(x), zp(dt), zp(B_mat), zp(C)
+    if backend == "pallas":
+        y = _kernel.ssd_scan(x, dt, A, B_mat, C, chunk=chunk,
+                             interpret=not _on_tpu())
+    elif backend == "chunked":
+        y = _ref.ssd_chunked(x, dt, A, B_mat, C, chunk=chunk)
+    elif backend == "scan":
+        y = _ref.ssd_scan(x, dt, A, B_mat, C)
+    else:
+        raise ValueError(backend)
+    return y[:, :L]

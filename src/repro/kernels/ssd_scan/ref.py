@@ -1,0 +1,127 @@
+"""Pure-jnp oracle for the Mamba2 SSD (state-space duality) scan.
+
+Semantics (scalar-per-head A, the Mamba2 parameterization):
+
+    h_t = exp(A_h * dt_t) * h_{t-1} + dt_t * (B_t  outer  x_t)
+    y_t = C_t . h_t                       (contract the state dim N)
+
+shapes: x (B, L, H, P); dt (B, L, H); A (H,) (negative);
+B_mat, C (B, L, G, N) with H % G == 0 (grouped B/C a la GQA).
+Returns y (B, L, H, P).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan(x, dt, A, B_mat, C):
+    Bsz, L, H, P = x.shape
+    G = B_mat.shape[2]
+    N = B_mat.shape[3]
+    assert H % G == 0
+    rep = H // G
+    Bh = jnp.repeat(B_mat, rep, axis=2)       # (B, L, H, N)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    def per_bh(xbh, dtbh, a, Bbh, Cbh):
+        # xbh (L, P), dtbh (L,), Bbh/Cbh (L, N)
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            h = jnp.exp(a * dtt) * h + dtt * (bt[:, None] * xt[None, :])
+            y = ct @ h                         # (P,)
+            return h, y
+        h0 = jnp.zeros((Bbh.shape[1], xbh.shape[1]), jnp.float32)
+        _, y = jax.lax.scan(step, h0, (xbh.astype(jnp.float32),
+                                       dtbh.astype(jnp.float32),
+                                       Bbh.astype(jnp.float32),
+                                       Cbh.astype(jnp.float32)))
+        return y
+
+    f = jax.vmap(jax.vmap(per_bh, in_axes=(1, 1, 0, 1, 1), out_axes=1),
+                 in_axes=(0, 0, None, 0, 0), out_axes=0)
+    y = f(x, dt, A.astype(jnp.float32), Bh, Ch)
+    return y.astype(x.dtype)
+
+
+def ssd_chunked(x, dt, A, B_mat, C, chunk: int = 64):
+    """Chunked closed form (the algorithm the Pallas kernel implements);
+    mathematically identical to ``ssd_scan`` -- used as the model's
+    CPU-efficient path and as a second oracle."""
+    Bsz, L, H, P = x.shape
+    G, N = B_mat.shape[2], B_mat.shape[3]
+    rep = H // G
+    assert L % chunk == 0
+    Q = chunk
+    nc = L // Q
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nc, Q, H)
+    Bf = jnp.repeat(B_mat, rep, axis=2).astype(jnp.float32).reshape(
+        Bsz, nc, Q, H, N)
+    Cf = jnp.repeat(C, rep, axis=2).astype(jnp.float32).reshape(
+        Bsz, nc, Q, H, N)
+    Af = A.astype(jnp.float32)
+
+    lam = jnp.cumsum(Af[None, None, None, :] * dtf, axis=2)   # (B,nc,Q,H)
+
+    # intra-chunk: S[i,j] = (C_i.B_j) exp(lam_i - lam_j) dt_j for j<=i
+    Sdot = jnp.einsum("bcqhn,bckhn->bchqk", Cf, Bf)
+    dec = jnp.exp(lam[:, :, :, None, :] - lam[:, :, None, :, :])  # (B,nc,Q,K,H)
+    dec = jnp.moveaxis(dec, -1, 2)                                # (B,nc,H,Q,K)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    S = jnp.where(mask[None, None, None], Sdot * dec
+                  * jnp.moveaxis(dtf, 2, 3)[:, :, :, None, :], 0.0)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", S, xf)
+
+    # inter-chunk: carry states sequentially
+    lam_end = lam[:, :, -1, :]                                    # (B,nc,H)
+    # chunk state contribution: sum_j exp(lam_end - lam_j) dt_j B_j x_j^T
+    w = jnp.exp(lam_end[:, :, None, :] - lam) * dtf               # (B,nc,Q,H)
+    chunk_state = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", w, Bf, xf)
+
+    def carry_fn(h, inp):
+        cs, le = inp                       # (B,H,N,P), (B,H)
+        h_new = jnp.exp(le)[:, :, None, None] * h + cs
+        return h_new, h                    # emit state at chunk *start*
+    h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    _, h_starts = jax.lax.scan(
+        carry_fn, h0, (jnp.moveaxis(chunk_state, 1, 0),
+                       jnp.moveaxis(lam_end, 1, 0)))
+    h_starts = jnp.moveaxis(h_starts, 0, 1)                       # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp", Cf, h_starts,
+                         jnp.exp(lam))
+    y = (y_intra + y_inter).reshape(Bsz, L, H, P)
+    return y.astype(x.dtype)
+
+
+def ssd_final_state(x, dt, A, B_mat, C, chunk: int = 64):
+    """Final SSM state h_L (B, H, N, P) -- used by prefill to seed decode."""
+    Bsz, L, H, P = x.shape
+    G, N = B_mat.shape[2], B_mat.shape[3]
+    rep = H // G
+    pad = (-L) % chunk
+    if pad:
+        zp = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, dt, B_mat, C = zp(x), zp(dt), zp(B_mat), zp(C)
+    L2 = x.shape[1]
+    Q = chunk
+    nc = L2 // Q
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nc, Q, H)
+    Bf = jnp.repeat(B_mat, rep, axis=2).astype(jnp.float32).reshape(
+        Bsz, nc, Q, H, N)
+    Af = A.astype(jnp.float32)
+    lam = jnp.cumsum(Af[None, None, None, :] * dtf, axis=2)
+    lam_end = lam[:, :, -1, :]
+    w = jnp.exp(lam_end[:, :, None, :] - lam) * dtf
+    chunk_state = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", w, Bf, xf)
+
+    def carry_fn(h, inp):
+        cs, le = inp
+        return jnp.exp(le)[:, :, None, None] * h + cs, None
+    h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    h_final, _ = jax.lax.scan(carry_fn, h0,
+                              (jnp.moveaxis(chunk_state, 1, 0),
+                               jnp.moveaxis(lam_end, 1, 0)))
+    return h_final

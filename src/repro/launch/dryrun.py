@@ -1,0 +1,294 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first initialization.  Everything else follows.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and record memory/cost/collective analyses.
+(No __future__ import here: the XLA_FLAGS lines above must stay first.)
+
+For each cell:
+  * train_4k       lowers ``train_step`` (microbatched grad-accum + optimizer)
+  * prefill_32k    lowers ``prefill`` (forward + cache write)
+  * decode_32k     lowers ``decode_step`` (1 token against a 32k cache)
+  * long_500k      decode at 524288 context (sub-quadratic archs only)
+
+and each of the two meshes (16x16 single-pod; 2x16x16 multi-pod).  Success
+== ``.lower().compile()`` returns and ``memory_analysis`` fits the 16 GB/chip
+budget.  Results land in ``experiments/dryrun/<arch>__<shape>__<mesh>.json``
+including the §Roofline inputs (HLO flops/bytes + per-collective bytes
+parsed from the optimized HLO).
+
+Usage:
+  python -m repro.launch.dryrun --arch phi4-mini-3.8b --shape train_4k \
+      --mesh multi [--out experiments/dryrun]
+  python -m repro.launch.dryrun --all [--mesh both]
+"""
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SHAPES, applicable_shapes, get_config
+from ..models.registry import Model
+from ..models import sharding as sh
+from ..train import train_step as ts
+from ..train import optimizer as opt_mod
+from . import mesh as mesh_mod
+from . import hlo_analysis
+
+
+def _train_lowered(model: Model, shape, mesh, tcfg=None):
+    tcfg = tcfg or ts.TrainConfig()
+    step_fn = ts.build_train_step(model, tcfg)
+    specs = model.input_specs(shape)
+
+    param_shapes = model.param_shapes()
+    opt = opt_mod.make(model.cfg.optimizer, lr=tcfg.learning_rate)
+    state_shapes = {
+        "params": param_shapes,
+        "opt": jax.eval_shape(opt.init, param_shapes),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    state_sh = ts.shardings_for_state(model, mesh, tcfg)
+    batch_sh = ts.batch_shardings(model, mesh, specs)
+    jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None),
+                     donate_argnums=(0,))
+    return jitted.lower(state_shapes, specs)
+
+
+def _serve_lowered(model: Model, shape, mesh, kind: str):
+    from ..serve import serve_step as ss
+    # Baseline keeps the training (FSDP) weight layout for comparability;
+    # REPRO_SERVE_LAYOUT=tp switches to the serving layout (TP-only weights,
+    # sharding.serve_rules) -- the beyond-paper optimization measured in
+    # EXPERIMENTS.md §Perf.
+    if os.environ.get("REPRO_SERVE_LAYOUT") == "tp":
+        serve_rules = sh.serve_rules(model.cfg, mesh)
+        with sh.use_mesh(mesh, serve_rules):
+            return _serve_lowered_inner(model, shape, mesh, kind, ss)
+    return _serve_lowered_inner(model, shape, mesh, kind, ss)
+
+
+def _serve_lowered_inner(model: Model, shape, mesh, kind: str, ss):
+    specs = model.input_specs(shape)
+    B = shape.global_batch
+    n_front = 0
+    if model.cfg.family == "vlm":
+        n_front = specs.get("vision_embeds").shape[1] \
+            if "vision_embeds" in specs else 0
+    # decode: the cache holds exactly seq_len positions (divisible by the
+    # model axis for sequence sharding); the new token writes slot S-1.
+    max_len = shape.seq_len + (n_front if kind == "prefill" else 0)
+    cache_shapes_ = model.cache_shapes(B, max_len)
+    cache_sh = ss.cache_shardings(model, B, max_len, mesh, phase=kind)
+    p_sh = jax.tree_util.tree_map(
+        lambda ax, s: sh.named_sharding(ax, s.shape, mesh),
+        model.logical_axes(), model.param_shapes(),
+        is_leaf=lambda x: isinstance(x, tuple))
+    param_shapes = model.param_shapes()
+
+    if kind == "prefill":
+        def fn(params, batch, cache):
+            logits, cache = model.prefill(params, batch, cache)
+            return logits[:, -1:], cache
+        batch_sh = ts.batch_shardings(model, mesh, specs)
+        jitted = jax.jit(fn, in_shardings=(p_sh, batch_sh, cache_sh),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(2,))
+        return jitted.lower(param_shapes, specs, cache_shapes_)
+
+    def fn(params, tokens, cache, index):
+        return model.decode_step(params, tokens, cache, index)
+    tok_sh = sh.named_sharding(("batch", None), (B, 1), mesh)
+    jitted = jax.jit(fn, in_shardings=(p_sh, tok_sh, cache_sh, None),
+                     out_shardings=(None, cache_sh), donate_argnums=(2,))
+    return jitted.lower(param_shapes, specs["tokens"], cache_shapes_,
+                        jnp.int32(max_len - 1))
+
+
+# ---------------------------------------------------------------------------
+# Calibrated cost composition.
+#
+# XLA's cost_analysis() counts while-loop (scan) bodies ONCE, ignoring trip
+# counts, so a full-depth compile under-reports flops/bytes/collectives by
+# ~n_layers x microbatches.  We therefore lower small *unrolled* depth
+# variants (scan_unroll=True, microbatch=1, per-microbatch batch size) and
+# solve the linear system  cost(depths) = base + sum_s depth_s * slope_s,
+# then extrapolate to the full depths and multiply by the microbatch count.
+# Memory analysis comes from the true full-depth compile (the compiler models
+# loops correctly for buffers).
+# ---------------------------------------------------------------------------
+import dataclasses as _dc
+
+import numpy as _np
+
+
+def _probe_variants(cfg):
+    """Returns (variants, full_depths): each variant is (cfg_i, depth_vec)."""
+    if cfg.family == "encdec":
+        mk = lambda e, d: _dc.replace(cfg, n_layers=d, n_encoder_layers=e,
+                                      scan_unroll=True, microbatch=1)
+        return ([(mk(1, 1), (1, 1)), (mk(2, 1), (2, 1)), (mk(1, 2), (1, 2))],
+                (cfg.n_encoder_layers, cfg.n_layers))
+    if cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        mk = lambda g: _dc.replace(cfg, n_layers=g * k, scan_unroll=True,
+                                   microbatch=1)
+        return ([(mk(1), (1,)), (mk(2), (2,))],
+                (cfg.n_layers // k,))
+    if cfg.n_experts and cfg.n_dense_layers:
+        mk = lambda d, m: _dc.replace(cfg, n_layers=d + m, n_dense_layers=d,
+                                      scan_unroll=True, microbatch=1)
+        return ([(mk(1, 1), (1, 1)), (mk(2, 1), (2, 1)), (mk(1, 2), (1, 2))],
+                (cfg.n_dense_layers, cfg.n_layers - cfg.n_dense_layers))
+    mk = lambda d: _dc.replace(cfg, n_layers=d, scan_unroll=True,
+                               microbatch=1)
+    return ([(mk(1), (1,)), (mk(2), (2,))], (cfg.n_layers,))
+
+
+def _cell_costs(model, shape, mesh, kind):
+    if kind == "train":
+        lowered = _train_lowered(model, shape, mesh)
+    else:
+        lowered = _serve_lowered(model, shape, mesh, kind)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = hlo_analysis.collective_bytes(compiled)
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(coll["total_bytes"]),
+            coll)
+
+
+def calibrated_costs(cfg, shape, mesh, kind, microbatch: int):
+    """(flops, bytes, coll_bytes) per device per step, scan-corrected."""
+    variants, full_depths = _probe_variants(cfg)
+    # probe at the real per-microbatch batch size
+    mb = max(1, microbatch) if kind == "train" else 1
+    pshape = _dc.replace(shape, global_batch=max(shape.global_batch // mb, 1))
+    rows, targets = [], []
+    for vcfg, depths in variants:
+        m = Model(vcfg)
+        f, b, c, _ = _cell_costs(m, pshape, mesh, kind)
+        rows.append((1,) + tuple(depths))
+        targets.append((f, b, c))
+    A = _np.array(rows, float)
+    Y = _np.array(targets, float)
+    sol, *_ = _np.linalg.lstsq(A, Y, rcond=None)
+    full = _np.array((1,) + tuple(full_depths), float)
+    est = full @ sol
+    est = _np.maximum(est, 0.0)
+    scale = mb if kind == "train" else 1
+    return est[0] * scale, est[1] * scale, est[2] * scale
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = "experiments/dryrun",
+             smoke: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cfg = get_config(arch, smoke=smoke)
+    shape = SHAPES[shape_name]
+    if shape_name not in applicable_shapes(cfg):
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped",
+               "reason": "full-attention arch: long_500k needs "
+                         "sub-quadratic attention (DESIGN.md)"}
+        out = pathlib.Path(out_dir)
+        out.mkdir(parents=True, exist_ok=True)
+        (out / f"{arch}__{shape_name}__{mesh_name}.json").write_text(
+            json.dumps(rec, indent=2))
+        return rec
+    model = Model(cfg)
+    mesh_mod.require_devices(512 if multi_pod else 256)
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind}
+    rules = sh.rules_for(cfg)
+    try:
+        with sh.use_mesh(mesh, rules):
+            if shape.kind == "train":
+                lowered = _train_lowered(model, shape, mesh)
+            else:
+                lowered = _serve_lowered(model, shape, mesh, shape.kind)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        coll = hlo_analysis.collective_bytes(compiled)
+        # scan-corrected costs via calibrated composition
+        with sh.use_mesh(mesh, rules):
+            cal_f, cal_b, cal_c = calibrated_costs(
+                cfg, shape, mesh, shape.kind,
+                cfg.microbatch if shape.kind == "train" else 1)
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": hlo_analysis.memory_dict(mem),
+            "flops_raw": float(cost.get("flops", -1.0)),
+            "bytes_raw": float(cost.get("bytes accessed", -1.0)),
+            "collectives_raw": coll,
+            "flops": cal_f,
+            "bytes_accessed": cal_b,
+            "collectives": {"total_bytes": cal_c,
+                            "by_kind": coll.get("by_kind", {})},
+        })
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print(f"  memory: {rec['memory']}")
+        print(f"  flops={rec['flops']:.3e} bytes={rec['bytes_accessed']:.3e}"
+              f" collective_bytes={coll['total_bytes']:.3e}")
+    except Exception as e:  # noqa: BLE001
+        rec.update({"status": "fail", "error": repr(e),
+                    "traceback": traceback.format_exc()})
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: FAIL {e!r}")
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    fn = out / f"{arch}__{shape_name}__{mesh_name}.json"
+    fn.write_text(json.dumps(rec, indent=2, default=str))
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs (CI sanity of the dry-run path)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    from ..configs.base import list_architectures
+    archs = list_architectures() if (args.all or args.arch is None) \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape_name, mp, args.out,
+                               smoke=args.smoke)
+                n_fail += rec["status"] == "fail"
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""HLO post-compile analysis: collective byte accounting + memory digest.
+
+``cost_analysis()`` reports flops and bytes but NOT collective traffic; we
+parse the optimized HLO text and sum operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+attributing each to its mesh role where replica_groups allow.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Any, Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# shape like  bf16[16,1280,7168]{2,1,0}  or tuple (f32[...], f32[...])
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(compiled) -> Dict[str, Any]:
+    """Sum output-shape bytes per collective op kind from optimized HLO.
+
+    Uses the op's *result* shape (for a-g: gathered bytes; for a-r: reduced
+    tensor; r-s: scattered shard) as the per-device traffic proxy --
+    consistent across kinds and exactly what the roofline's
+    ``collective_bytes / (chips x link_bw)`` term wants.
+    """
+    try:
+        txt = compiled.as_text()
+    except Exception:   # some backends: use memory analysis only
+        return {"total_bytes": 0.0, "by_kind": {}, "count": 0}
+    by_kind: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    for line in txt.splitlines():
+        s = line.strip()
+        # ops look like:  %x = bf16[..]{..} all-gather(%y), replica_groups=...
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}]+)\s+"
+                     r"([\w\-]+)", s)
+        if not m:
+            continue
+        shape_str, opname = m.group(1), m.group(2)
+        base = opname.split(".")[0]
+        if base.endswith("-start"):
+            base = base[:-6]
+        if base in _COLLECTIVES:
+            by_kind[base] += _shape_bytes(shape_str)
+            counts[base] += 1
+    return {"total_bytes": float(sum(by_kind.values())),
+            "by_kind": dict(by_kind),
+            "count": int(sum(counts.values())),
+            "count_by_kind": dict(counts)}
+
+
+def memory_dict(mem) -> Dict[str, float]:
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        try:
+            out[attr] = float(getattr(mem, attr))
+        except Exception:
+            pass
+    if not out and isinstance(mem, dict):
+        out = {k: float(v) for k, v in mem.items()}
+    if not out:
+        out = {"repr": 0.0}
+    try:
+        live = (out.get("argument_size_in_bytes", 0)
+                + out.get("output_size_in_bytes", 0)
+                + out.get("temp_size_in_bytes", 0)
+                - out.get("alias_size_in_bytes", 0))
+        out["peak_estimate_bytes"] = live
+        out["peak_estimate_gib_per_device"] = live / (1 << 30)
+    except Exception:
+        pass
+    return out

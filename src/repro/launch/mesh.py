@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod: 2 pods x 256 chips as (pod=2, data=16, model=16); the 'pod' axis
+crosses the DCN fat-tree the paper's load-balancing study targets.
+
+Functions (not module-level constants) so importing never touches jax device
+state -- the dry-run must set XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def require_devices(n: int):
+    have = len(jax.devices())
+    if have < n:
+        raise RuntimeError(
+            f"mesh needs {n} devices but jax sees {have}; the dry-run must "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"BEFORE importing jax (see launch/dryrun.py)")

@@ -1,0 +1,126 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbing driver: re-lower a cell under named config variations
+and report the three roofline terms before/after.
+
+    python -m repro.launch.perf --arch deepseek-v3-671b --shape train_4k \
+        --mesh multi --variant moe_rotation --variant remat_dots ...
+
+Variants (composable):
+  remat_dots     remat saves matmul outputs (recompute flops down, mem up)
+  remat_nothing  full recompute (baseline policy)
+  moe_rotation   MoE AllToAll as DR rotation rounds (paper's discipline)
+  moe_a2a        XLA one-shot AllToAll (baseline)
+  cap_1_0 / cap_2_0   MoE capacity factor
+  mb_2 / mb_4 / mb_8 / mb_16   microbatch count
+  compress_bf16  cross-pod gradient compression
+  attn_block_256 chunked-attention block size
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from ..configs.base import SHAPES, get_config
+from ..models.registry import Model
+from ..models import sharding as sh
+from . import mesh as mesh_mod
+from . import dryrun as dr
+from . import hlo_analysis
+from .roofline import PEAK_FLOPS, HBM_BW, LINK_BW, model_flops_for
+
+
+def apply_variants(cfg, names):
+    tcfg_kw = {}
+    for v in names:
+        if v == "remat_dots":
+            cfg = dataclasses.replace(cfg, remat_policy="dots")
+        elif v == "remat_nothing":
+            cfg = dataclasses.replace(cfg, remat_policy="nothing")
+        elif v == "moe_rotation":
+            cfg = dataclasses.replace(cfg, moe_impl="rotation")
+        elif v == "moe_a2a":
+            cfg = dataclasses.replace(cfg, moe_impl="a2a")
+        elif v.startswith("cap_"):
+            cfg = dataclasses.replace(
+                cfg, capacity_factor=float(v[4:].replace("_", ".")))
+        elif v.startswith("mb_"):
+            cfg = dataclasses.replace(cfg, microbatch=int(v[3:]))
+        elif v == "compress_bf16":
+            tcfg_kw["compress_dcn"] = "bf16"
+        elif v == "no_remat":
+            cfg = dataclasses.replace(cfg, remat=False)
+        elif v == "serve_tp":
+            os.environ["REPRO_SERVE_LAYOUT"] = "tp" 
+        else:
+            raise ValueError(v)
+    return cfg, tcfg_kw
+
+
+def measure(arch, shape_name, multi_pod, variants=()):
+    cfg = get_config(arch)
+    cfg, tcfg_kw = apply_variants(cfg, variants)
+    shape = SHAPES[shape_name]
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    chips = 512 if multi_pod else 256
+    rules = sh.rules_for(cfg)
+    t0 = time.time()
+    with sh.use_mesh(mesh, rules):
+        if shape.kind == "train":
+            from ..train import train_step as ts
+            tcfg = ts.TrainConfig(**tcfg_kw)
+            lowered = dr._train_lowered(Model(cfg), shape, mesh, tcfg)
+        else:
+            lowered = dr._serve_lowered(Model(cfg), shape, mesh, shape.kind)
+        compiled = lowered.compile()
+        mem = hlo_analysis.memory_dict(compiled.memory_analysis())
+        f, b, c = dr.calibrated_costs(cfg, shape, mesh, shape.kind,
+                                      cfg.microbatch
+                                      if shape.kind == "train" else 1)
+    mf = model_flops_for(cfg, shape)
+    row = {
+        "variants": list(variants),
+        "flops": f, "bytes": b, "coll_bytes": c,
+        "t_compute": f / PEAK_FLOPS,
+        "t_memory": b / HBM_BW,
+        "t_collective": c / LINK_BW,
+        "peak_gib": mem.get("peak_estimate_gib_per_device", -1),
+        "model_flops": mf,
+        "wall_s": round(time.time() - t0, 1),
+    }
+    t = max(row["t_compute"], row["t_memory"], row["t_collective"])
+    row["dominant"] = ("compute" if t == row["t_compute"] else
+                       "memory" if t == row["t_memory"] else "collective")
+    row["roofline_fraction"] = (mf / (t * chips * PEAK_FLOPS)) if t > 0 else 0
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", choices=["single", "multi"], default="multi")
+    ap.add_argument("--variant", action="append", default=[])
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args(argv)
+    row = measure(args.arch, args.shape, args.mesh == "multi",
+                  tuple(args.variant))
+    if args.json:
+        print(json.dumps(row))
+    else:
+        print(f"{args.arch} x {args.shape} x {args.mesh} "
+              f"variants={row['variants']}")
+        print(f"  t_compute={row['t_compute']*1e3:.2f}ms "
+              f"t_memory={row['t_memory']*1e3:.2f}ms "
+              f"t_collective={row['t_collective']*1e3:.2f}ms "
+              f"dominant={row['dominant']}")
+        print(f"  roofline_fraction={row['roofline_fraction']:.3f} "
+              f"peak_gib={row['peak_gib']:.1f} wall={row['wall_s']}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,204 @@
+"""Roofline analysis over the dry-run artifacts.
+
+Per (arch x shape x mesh) cell, from the compiled module:
+
+  compute term     = HLO_FLOPs / (chips x 197e12 FLOP/s)        [bf16 MXU]
+  memory term      = HLO_bytes / (chips x 819e9 B/s)            [HBM]
+  collective term  = collective_bytes / (chips x 50e9 B/s)      [ICI link]
+
+cost_analysis() reports whole-module (per-device-program x chips? -- on the
+CPU backend it reports the per-program totals; we treat them as per-device
+and DIVIDE the global-batch model flops consistently, see note below).
+
+MODEL_FLOPS uses the 6*N*D rule (6 * params * tokens; N_active for MoE), so
+``model_flops / hlo_flops`` exposes remat/redundancy waste.
+
+Outputs ``experiments/roofline.csv`` + markdown for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Dict, Optional
+
+# TPU v5e-class hardware constants (per the assignment).
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / ICI link
+
+
+@dataclasses.dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    model_flops: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    useful_ratio: float
+    note: str = ""
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful model flops / (time-if-run-at-dominant-term * peak)."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (t * self.chips * PEAK_FLOPS)
+
+
+def params_count(cfg) -> Dict[str, float]:
+    """Total and active parameter counts from the config (analytic)."""
+    D, V = cfg.d_model, cfg.vocab
+    emb = V * D * (1 if cfg.tie_embeddings else 2)
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.mla:
+            qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+            dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+            H = cfg.n_heads
+            attn = (D * qr + qr * H * (dn + dr) + D * (kr + dr)
+                    + kr * H * dn + kr * H * dv + H * dv * D)
+        else:
+            H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            attn = D * H * hd + 2 * D * Hkv * hd + H * hd * D
+        n_moe = (cfg.n_layers - cfg.n_dense_layers) if cfg.n_experts else 0
+        n_dense = cfg.n_layers - n_moe
+        dense_mlp = 3 * D * cfg.d_ff
+        total = emb + cfg.n_layers * attn + n_dense * dense_mlp
+        active = total
+        if n_moe:
+            expert = 3 * D * cfg.moe_d_ff
+            shared = 3 * D * cfg.moe_d_ff * cfg.n_shared_experts
+            router = D * cfg.n_experts
+            total += n_moe * (cfg.n_experts * expert + shared + router)
+            active += n_moe * (cfg.experts_per_tok * expert + shared + router)
+        return {"total": float(total), "active": float(active)}
+    if cfg.family == "ssm":
+        din, H = cfg.ssm_d_inner, cfg.ssm_heads
+        G, N = cfg.ssm_groups, cfg.ssm_state
+        per = (D * (2 * din + 2 * G * N + H) + cfg.ssm_conv *
+               (din + 2 * G * N) + din * D + din + 3 * H)
+        total = emb + cfg.n_layers * per
+        return {"total": float(total), "active": float(total)}
+    if cfg.family == "hybrid":
+        din, H = cfg.ssm_d_inner, cfg.ssm_heads
+        G, N = cfg.ssm_groups, cfg.ssm_state
+        per = (D * (2 * din + 2 * G * N + H) + cfg.ssm_conv *
+               (din + 2 * G * N) + din * D + din + 3 * H)
+        Hh, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        shared = (D * Hh * hd + 2 * D * Hkv * hd + Hh * hd * D
+                  + 3 * D * cfg.d_ff)
+        total = emb + cfg.n_layers * per + shared
+        # the shared block runs n_layers/shared_attn_every times: active
+        # compute counts it per application
+        apps = cfg.n_layers // cfg.shared_attn_every
+        return {"total": float(total), "active": float(total
+                                                       + (apps - 1) * shared)}
+    if cfg.family == "encdec":
+        H, Hkv, hd, F = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_ff
+        enc = cfg.n_encoder_layers * (D * H * hd + 2 * D * Hkv * hd
+                                      + H * hd * D + 3 * D * F)
+        dec = cfg.n_layers * (2 * (D * H * hd + H * hd * D)
+                              + 2 * D * Hkv * hd + 3 * D * F)
+        total = emb + enc + dec + cfg.n_frontend_tokens * D
+        return {"total": float(total), "active": float(total)}
+    raise ValueError(cfg.family)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6*N*D rule on *decoder tokens processed* (training: 3 passes =>
+    6*N*T; prefill: 2*N*T; decode: 2*N per token * batch)."""
+    pc = params_count(cfg)
+    n_active = pc["active"]
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * B * S
+    if shape.kind == "prefill":
+        return 2.0 * n_active * B * S
+    return 2.0 * n_active * B * 1
+
+
+def analyze_record(rec: dict, cfg, shape) -> Optional[RooflineRow]:
+    if rec.get("status") != "ok":
+        return None
+    chips = 512 if rec["mesh"] == "pod2x16x16" else 256
+    hlo_flops = rec["flops"]
+    hlo_bytes = rec["bytes_accessed"]
+    coll = rec["collectives"]["total_bytes"]
+    mf = model_flops_for(cfg, shape)
+    # cost_analysis on SPMD modules reports per-device-program numbers; the
+    # whole-job totals are x chips.
+    t_compute = hlo_flops / PEAK_FLOPS
+    t_memory = hlo_bytes / HBM_BW
+    t_coll = coll / LINK_BW
+    dom = max((t_compute, "compute"), (t_memory, "memory"),
+              (t_coll, "collective"))[1]
+    useful = mf / (hlo_flops * chips) if hlo_flops > 0 else 0.0
+    return RooflineRow(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        kind=rec.get("kind", shape.kind), chips=chips,
+        hlo_flops=hlo_flops, hlo_bytes=hlo_bytes, coll_bytes=coll,
+        model_flops=mf, t_compute=t_compute, t_memory=t_memory,
+        t_collective=t_coll, dominant=dom, useful_ratio=useful)
+
+
+def load_all(dryrun_dir: str = "experiments/dryrun"):
+    from ..configs.base import SHAPES, get_config
+    rows = []
+    skips = []
+    for f in sorted(pathlib.Path(dryrun_dir).glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") == "skipped":
+            skips.append(rec)
+            continue
+        cfg = get_config(rec["arch"])
+        shape = SHAPES[rec["shape"]]
+        row = analyze_record(rec, cfg, shape)
+        if row:
+            rows.append(row)
+        else:
+            skips.append(rec)
+    return rows, skips
+
+
+def to_csv(rows, path: str):
+    hdr = ("arch,shape,mesh,kind,chips,hlo_flops,hlo_bytes,coll_bytes,"
+           "model_flops,t_compute_s,t_memory_s,t_collective_s,dominant,"
+           "useful_ratio,roofline_fraction")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"{r.arch},{r.shape},{r.mesh},{r.kind},{r.chips},"
+            f"{r.hlo_flops:.4e},{r.hlo_bytes:.4e},{r.coll_bytes:.4e},"
+            f"{r.model_flops:.4e},{r.t_compute:.4e},{r.t_memory:.4e},"
+            f"{r.t_collective:.4e},{r.dominant},{r.useful_ratio:.4f},"
+            f"{r.roofline_fraction:.4f}")
+    pathlib.Path(path).write_text("\n".join(lines) + "\n")
+    return path
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    ap.add_argument("--out", default="experiments/roofline.csv")
+    args = ap.parse_args(argv)
+    rows, skips = load_all(args.dryrun_dir)
+    to_csv(rows, args.out)
+    print(f"{len(rows)} cells analyzed, {len(skips)} skipped/failed "
+          f"-> {args.out}")
+    for r in sorted(rows, key=lambda r: r.roofline_fraction):
+        print(f"  {r.arch:22s} {r.shape:12s} {r.mesh:10s} dom={r.dominant:10s}"
+              f" frac={r.roofline_fraction:.3f} useful={r.useful_ratio:.3f}")
+
+
+if __name__ == "__main__":
+    main()

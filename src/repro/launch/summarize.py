@@ -1,0 +1,72 @@
+"""Generate the dry-run summary table + roofline markdown for EXPERIMENTS.md.
+
+    python -m repro.launch.summarize [--dryrun-dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from .roofline import load_all, to_csv, PEAK_FLOPS
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    ap.add_argument("--out-md", default="experiments/dryrun_summary.md")
+    ap.add_argument("--out-csv", default="experiments/roofline.csv")
+    args = ap.parse_args(argv)
+
+    rows, skips = load_all(args.dryrun_dir)
+    to_csv(rows, args.out_csv)
+
+    recs = {}
+    for f in sorted(pathlib.Path(args.dryrun_dir).glob("*.json")):
+        r = json.loads(f.read_text())
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+
+    lines = ["# Dry-run + roofline summary", "",
+             "| arch | shape | mesh | status | peak GiB/chip | HLO flops/dev"
+             " | coll bytes/dev | dominant | useful | roofline frac |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    by_key = {(r.arch, r.shape, r.mesh): r for r in rows}
+    for key in sorted(recs):
+        rec = recs[key]
+        if rec["status"] == "skipped":
+            lines.append(f"| {key[0]} | {key[1]} | {key[2]} | skip "
+                         f"(full-attn long ctx) | — | — | — | — | — | — |")
+            continue
+        if rec["status"] != "ok":
+            lines.append(f"| {key[0]} | {key[1]} | {key[2]} | FAIL | — | — "
+                         f"| — | — | — | — |")
+            continue
+        r = by_key.get(key)
+        gib = rec["memory"].get("peak_estimate_gib_per_device", -1)
+        lines.append(
+            f"| {key[0]} | {key[1]} | {key[2]} | ok | {gib:.1f} "
+            f"| {rec['flops']:.2e} | "
+            f"{rec['collectives']['total_bytes']:.2e} | "
+            f"{r.dominant if r else '—'} | "
+            f"{r.useful_ratio:.2f} | {r.roofline_fraction:.3f} |"
+            if r else
+            f"| {key[0]} | {key[1]} | {key[2]} | ok | {gib:.1f} | — | — | — "
+            f"| — | — |")
+    md = "\n".join(lines) + "\n"
+    pathlib.Path(args.out_md).write_text(md)
+    n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in recs.values() if r["status"] == "skipped")
+    n_fail = len(recs) - n_ok - n_skip
+    print(f"{n_ok} ok / {n_skip} skipped / {n_fail} failed "
+          f"-> {args.out_md}, {args.out_csv}")
+    # worst cells (hillclimb candidates)
+    for r in sorted(rows, key=lambda r: r.roofline_fraction)[:6]:
+        print(f"  worst: {r.arch} {r.shape} {r.mesh} frac="
+              f"{r.roofline_fraction:.3f} dom={r.dominant}")
+    for r in sorted(rows, key=lambda r: -r.t_collective)[:3]:
+        print(f"  most collective-bound: {r.arch} {r.shape} {r.mesh} "
+              f"t_coll={r.t_collective*1e3:.1f}ms dom={r.dominant}")
+
+
+if __name__ == "__main__":
+    main()

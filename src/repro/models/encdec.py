@@ -1,0 +1,224 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/audio frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, n_frames, D).  The encoder is a
+bidirectional transformer over frames with a learned positional table; the
+decoder is a causal transformer with cross-attention whose K/V are
+precomputed once from the encoder output (and cached for decode).
+
+Deviation note: the original uses learned absolute positions in the decoder
+(448 max); our assigned shapes stress 32k-token decoding, so the decoder
+self-attention uses RoPE instead (recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import sharding as sh
+from ..kernels.flash_attn import ops as attn_ops
+
+
+def param_shapes(cfg):
+    d = L.dtype_of(cfg)
+    sd = jax.ShapeDtypeStruct
+    D, H, Hkv, hd, F = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                        cfg.head_dim, cfg.d_ff)
+    ne, nd = cfg.n_encoder_layers, cfg.n_layers
+
+    enc_layer = {
+        "ln1": sd((ne, D), d), "ln2": sd((ne, D), d),
+        "wq": sd((ne, D, H * hd), d), "wk": sd((ne, D, Hkv * hd), d),
+        "wv": sd((ne, D, Hkv * hd), d), "wo": sd((ne, H * hd, D), d),
+        "w_gate": sd((ne, D, F), d), "w_up": sd((ne, D, F), d),
+        "w_down": sd((ne, F, D), d),
+    }
+    dec_layer = {
+        "ln1": sd((nd, D), d), "ln2": sd((nd, D), d), "ln3": sd((nd, D), d),
+        "wq": sd((nd, D, H * hd), d), "wk": sd((nd, D, Hkv * hd), d),
+        "wv": sd((nd, D, Hkv * hd), d), "wo": sd((nd, H * hd, D), d),
+        "xq": sd((nd, D, H * hd), d), "xk": sd((nd, D, Hkv * hd), d),
+        "xv": sd((nd, D, Hkv * hd), d), "xo": sd((nd, H * hd, D), d),
+        "w_gate": sd((nd, D, F), d), "w_up": sd((nd, D, F), d),
+        "w_down": sd((nd, F, D), d),
+    }
+    return {
+        "embed": sd((cfg.vocab, D), d),
+        "enc_pos": sd((cfg.n_frontend_tokens, D), d),
+        "enc_in": sd((cfg.frontend_dim or D, D), d),
+        "enc_norm": sd((D,), d),
+        "final_norm": sd((D,), d),
+        "lm_head": sd((D, cfg.vocab), d),
+        "encoder": enc_layer,
+        "decoder": dec_layer,
+    }
+
+
+def logical_axes(cfg):
+    shapes = param_shapes(cfg)
+
+    def ax(name, spec):
+        table = {
+            "embed": ("vocab", "fsdp"), "lm_head": ("fsdp", "vocab"),
+            "enc_pos": (None, "fsdp"), "enc_in": (None, "fsdp"),
+        }
+        if name in table:
+            return table[name]
+        if len(spec.shape) == 3:
+            if name in ("wo", "xo", "w_down"):
+                return (None, "model", "fsdp")
+            return (None, "fsdp", "model")
+        return (None,) * len(spec.shape)
+
+    out = {}
+    for k, v in shapes.items():
+        if isinstance(v, dict):
+            out[k] = {kk: ax(kk, vv) for kk, vv in v.items()}
+        else:
+            out[k] = ax(k, v)
+    return out
+
+
+def init_params(cfg, key):
+    shapes = param_shapes(cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(shapes)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, spec in zip(keys, leaves):
+        if len(spec.shape) >= 2:
+            w = (jax.random.normal(k, spec.shape, jnp.float32)
+                 * spec.shape[-2] ** -0.5)
+        else:
+            w = jnp.ones(spec.shape, jnp.float32)
+        out.append(w.astype(spec.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def encode(cfg, params, frames):
+    """frames (B, T, frontend_dim) -> (B, T, D)."""
+    x = frames.astype(L.dtype_of(cfg)) @ params["enc_in"]
+    x = x + params["enc_pos"][None, :x.shape[1]]
+    x = sh.constrain(x, "batch", None, None)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(carry, lp):
+        h = L.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        B, S, _ = h.shape
+        H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        q = (h @ lp["wq"]).reshape(B, S, H, hd)
+        k = (h @ lp["wk"]).reshape(B, S, Hkv, hd)
+        v = (h @ lp["wv"]).reshape(B, S, Hkv, hd)
+        attn = attn_ops.attention(
+            jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2),
+            jnp.moveaxis(v, 1, 2), causal=False, backend="xla")
+        y = carry + jnp.moveaxis(attn, 1, 2).reshape(B, S, H * hd) @ lp["wo"]
+        h2 = L.rms_norm(y, lp["ln2"], cfg.norm_eps)
+        y = y + L.swiglu(h2, lp["w_gate"], lp["w_up"], lp["w_down"])
+        return y, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"], unroll=cfg.scan_unroll)
+    return sh.constrain(L.rms_norm(x, params["enc_norm"], cfg.norm_eps),
+                        "batch", None, None)
+
+
+def _cross_kv(cfg, params, enc_out):
+    """Precompute decoder cross-attention K/V per layer: (nd, B, T, Hkv, hd)."""
+    B, T, D = enc_out.shape
+    Hkv, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def body(_, lp):
+        k = (enc_out @ lp["xk"]).reshape(B, T, Hkv, hd)
+        v = (enc_out @ lp["xv"]).reshape(B, T, Hkv, hd)
+        return None, (k, v)
+    _, (ks, vs) = jax.lax.scan(body, None, params["decoder"], unroll=cfg.scan_unroll)
+    ks = sh.constrain(ks, None, "batch", None, None, None)
+    vs = sh.constrain(vs, None, "batch", None, None, None)
+    return ks, vs
+
+
+def _dec_layer(cfg, lp, x, positions, self_cache, cross_kv, cache_index,
+               mode):
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    attn, nc = L.gqa_attention(h, lp, cfg, positions, self_cache,
+                               cache_index, mode)
+    x = x + attn
+    h = L.rms_norm(x, lp["ln3"], cfg.norm_eps)
+    x = x + L.cross_attention(
+        h, cross_kv, {"wq": lp["xq"], "wo": lp["xo"]}, cfg)
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + L.swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+    return x, nc
+
+
+def forward(cfg, params, tokens, *, frames=None, enc_out=None, mode="train",
+            cache=None, cache_index: int = 0, remat: Optional[bool] = None):
+    """Decoder forward.  Provide ``frames`` (train/prefill; encoder runs) or
+    a cache carrying precomputed cross K/V (decode)."""
+    remat = cfg.remat if remat is None else remat
+    caches = cache or {}
+    if enc_out is None and frames is not None:
+        enc_out = encode(cfg, params, frames)
+    if enc_out is not None:
+        xk, xv = _cross_kv(cfg, params, enc_out)
+    else:
+        xk, xv = caches["cross_k"], caches["cross_v"]
+
+    x = L.embed(tokens, params["embed"])
+    x = sh.constrain(x, "batch", None, None)
+    positions = cache_index + jnp.arange(x.shape[1])[None, :]
+
+    def body(lp, xx, pos, sc, kv, ci):
+        return _dec_layer(cfg, lp, xx, pos, sc, kv, ci, mode)
+    if remat and mode == "train":
+        body = jax.checkpoint(body, policy=L.remat_policy_of(cfg))
+
+    self_cache = caches.get("self")
+    if self_cache is None:
+        def scan_fn(carry, inp):
+            lp, k, v = inp
+            y, _ = body(lp, carry, positions, None, (k, v), 0)
+            return y, None
+        x, _ = jax.lax.scan(scan_fn, x, (params["decoder"], xk, xv), unroll=cfg.scan_unroll)
+        new_self = None
+    else:
+        def scan_fn(carry, inp):
+            lp, k, v, sc = inp
+            y, nc = body(lp, carry, positions, sc, (k, v), cache_index)
+            return y, nc
+        x, new_self = jax.lax.scan(scan_fn, x,
+                                   (params["decoder"], xk, xv, self_cache),
+                                   unroll=cfg.scan_unroll)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(x, params["lm_head"])
+    logits = sh.constrain(logits, "batch", None, "vocab")
+    if cache is not None:
+        return logits, {"self": new_self, "cross_k": xk, "cross_v": xv}
+    return logits
+
+
+def cache_shapes(cfg, batch: int, max_len: int):
+    d = L.dtype_of(cfg)
+    sd = jax.ShapeDtypeStruct
+    nd = cfg.n_layers
+    T = cfg.n_frontend_tokens
+    Hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "self": {"k": sd((nd, batch, max_len, Hkv, hd), d),
+                 "v": sd((nd, batch, max_len, Hkv, hd), d)},
+        "cross_k": sd((nd, batch, T, Hkv, hd), d),
+        "cross_v": sd((nd, batch, T, Hkv, hd), d),
+    }
+
+
+def cache_logical_axes(cfg):
+    return {
+        "self": {"k": (None, "batch", "seq_cache", "kv_heads", None),
+                 "v": (None, "batch", "seq_cache", "kv_heads", None)},
+        "cross_k": (None, "batch", None, None, None),
+        "cross_v": (None, "batch", None, None, None),
+    }

@@ -1,0 +1,172 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a *shared* transformer block
+(attention + MLP, single parameter copy) applied every ``shared_attn_every``
+layers.
+
+The shared block's parameters are reused at every application, but each
+application needs its own KV cache (activations differ), so the cache for
+the shared block is stacked (n_applications, ...).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import mamba2 as m2
+from . import sharding as sh
+
+
+def _n_apps(cfg):
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def param_shapes(cfg):
+    d = L.dtype_of(cfg)
+    sd = jax.ShapeDtypeStruct
+    D, H, Hkv, hd, F = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                        cfg.head_dim, cfg.d_ff)
+    p = {"embed": sd((cfg.vocab, D), d),
+         "final_norm": sd((D,), d),
+         "layers": m2.layer_shapes(cfg, cfg.n_layers),
+         "shared": {
+             "ln1": sd((D,), d), "ln2": sd((D,), d),
+             "wq": sd((D, H * hd), d), "wk": sd((D, Hkv * hd), d),
+             "wv": sd((D, Hkv * hd), d), "wo": sd((H * hd, D), d),
+             "w_gate": sd((D, F), d), "w_up": sd((D, F), d),
+             "w_down": sd((F, D), d),
+         }}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = sd((D, cfg.vocab), d)
+    return p
+
+
+def logical_axes(cfg):
+    base = m2.logical_axes(cfg)
+
+    shared = {"ln1": (None,), "ln2": (None,),
+              "wq": ("fsdp", "model"), "wk": ("fsdp", "model"),
+              "wv": ("fsdp", "model"), "wo": ("model", "fsdp"),
+              "w_gate": ("fsdp", "model"), "w_up": ("fsdp", "model"),
+              "w_down": ("model", "fsdp")}
+    out = {"embed": ("vocab", "fsdp"), "final_norm": (None,),
+           "layers": base["layers"], "shared": shared}
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ("fsdp", "vocab")
+    return out
+
+
+def init_params(cfg, key):
+    shapes = param_shapes(cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(shapes)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, spec in zip(keys, leaves):
+        if len(spec.shape) >= 2 and spec.shape[-1] > 8:
+            w = (jax.random.normal(k, spec.shape, jnp.float32)
+                 * spec.shape[-2] ** -0.5)
+        else:
+            w = jnp.ones(spec.shape, jnp.float32) * 0.1
+        out.append(w.astype(spec.dtype))
+    p = jax.tree_util.tree_unflatten(treedef, out)
+    p["layers"]["A_log"] = jnp.zeros_like(p["layers"]["A_log"])
+    p["layers"]["dt_bias"] = jnp.full_like(p["layers"]["dt_bias"], -2.0)
+    return p
+
+
+def _shared_block(cfg, p, x, positions, cache, cache_index, mode):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    attn, nc = L.gqa_attention(h, p, cfg, positions, cache, cache_index, mode)
+    x = x + attn
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + L.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+    return x, nc
+
+
+def forward(cfg, params, tokens, *, mode="train", cache=None,
+            cache_index: int = 0, remat: Optional[bool] = None):
+    remat = cfg.remat if remat is None else remat
+    x = L.embed(tokens, params["embed"])
+    x = sh.constrain(x, "batch", None, None)
+    B, S, _ = x.shape
+    positions = cache_index + jnp.arange(S)[None, :]
+    k = cfg.shared_attn_every
+    napp = _n_apps(cfg)
+
+    def mbody(lp, xx, lc):
+        return m2._layer(cfg, lp, xx, lc, mode)
+
+    def sbody(p_, xx, pos, c_, ci):
+        return _shared_block(cfg, p_, xx, pos, c_, ci, mode)
+    if remat and mode == "train":
+        mbody = jax.checkpoint(mbody, policy=L.remat_policy_of(cfg))
+        sbody = jax.checkpoint(sbody, policy=L.remat_policy_of(cfg))
+
+    # group mamba layers: (napp, k, ...) stacked params
+    lp = jax.tree_util.tree_map(
+        lambda a: a.reshape((napp, k) + a.shape[1:]), params["layers"])
+    caches = cache or {}
+    new_m, new_s = [], []
+    for g in range(napp):
+        glp = jax.tree_util.tree_map(lambda a: a[g], lp)
+        gc = (jax.tree_util.tree_map(lambda a: a[g], caches["mamba"])
+              if cache else None)
+        if gc is None:
+            def scan_fn(carry, inp):
+                y, _ = mbody(inp, carry, None)
+                return y, None
+            x, _ = jax.lax.scan(scan_fn, x, glp, unroll=cfg.scan_unroll)
+        else:
+            def scan_fn(carry, inp):
+                p_, c_ = inp
+                y, nc = mbody(p_, carry, c_)
+                return y, nc
+            x, nc = jax.lax.scan(scan_fn, x, (glp, gc), unroll=cfg.scan_unroll)
+            new_m.append(nc)
+        sc = (jax.tree_util.tree_map(lambda a: a[g], caches["shared"])
+              if cache else None)
+        x, snc = sbody(params["shared"], x, positions, sc, cache_index)
+        if snc is not None:
+            new_s.append(snc)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    logits = L.unembed(x, head if head is not None else params["embed"].T)
+    logits = sh.constrain(logits, "batch", None, "vocab")
+    if cache is not None:
+        new_cache = {
+            "mamba": jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *new_m),
+            "shared": jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *new_s),
+        }
+        return logits, new_cache
+    return logits
+
+
+def cache_shapes(cfg, batch: int, max_len: int):
+    d = L.dtype_of(cfg)
+    sd = jax.ShapeDtypeStruct
+    napp = _n_apps(cfg)
+    k = cfg.shared_attn_every
+    mc = m2.cache_shapes(cfg, batch)
+    # regroup mamba caches (L,...) -> (napp, k, ...)
+    mc = {kk: sd((napp, k) + v.shape[1:], v.dtype) for kk, v in mc.items()}
+    return {
+        "mamba": mc,
+        "shared": {
+            "k": sd((napp, batch, max_len, cfg.n_kv_heads, cfg.head_dim), d),
+            "v": sd((napp, batch, max_len, cfg.n_kv_heads, cfg.head_dim), d),
+        },
+    }
+
+
+def cache_logical_axes(cfg):
+    return {
+        "mamba": {"conv": (None, None, "batch", None, "model"),
+                  "ssm": (None, None, "batch", "model", None, None)},
+        "shared": {"k": (None, "batch", "seq_cache", "kv_heads", None),
+                   "v": (None, "batch", "seq_cache", "kv_heads", None)},
+    }

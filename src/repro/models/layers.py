@@ -1,0 +1,189 @@
+"""Shared neural building blocks (pure functions over param pytrees).
+
+Conventions:
+  * params are dicts of jnp arrays; layer-stacked params carry a leading
+    ``L`` axis and are consumed via ``lax.scan`` (small HLO, fast compiles
+    even for 61-layer models on 512 devices);
+  * math is float32 inside norms/softmax, params/activations in cfg.dtype;
+  * attention goes through ``repro.kernels.flash_attn.ops.attention``
+    (Pallas on TPU, jnp reference on CPU).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import sharding as sh
+from ..kernels.flash_attn import ops as attn_ops
+
+
+def dtype_of(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def remat_policy_of(cfg):
+    import jax
+    if getattr(cfg, "remat_policy", "nothing") == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    return jax.checkpoint_policies.nothing_saveable
+
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / embeddings
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = x @ w_gate
+    u = x @ w_up
+    return (jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u) @ w_down
+
+
+def embed(tokens, table):
+    return table[tokens]
+
+
+def unembed(x, table):
+    """Logits in float32 (loss stability)."""
+    return (x.astype(jnp.float32) @ table.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., S, H, D) or (..., S, D); positions (..., S)."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                      # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    if x.ndim == ang.ndim + 1:                         # has head axis
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (training / prefill / cached decode)
+# ---------------------------------------------------------------------------
+
+def gqa_attention(x, p, cfg, positions, cache=None, cache_index=0,
+                  mode: str = "train", backend: str = "auto"):
+    """Multi-head GQA attention with RoPE.
+
+    x (B, S, D).  ``cache``: optional dict {"k": (B, S_max, Hkv, hd),
+    "v": ...}.  ``mode``:
+      train   -- no cache; causal flash attention;
+      prefill -- causal flash attention over the S new tokens, cache written
+                 at [cache_index, cache_index+S);
+      decode  -- cache written, attention over the whole (padded) cache.
+    Returns (out, new_cache).
+    """
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # shard attention over 'model': by heads when divisible, else by query
+    # sequence (prefill/train) -- replicated attention on a non-dividing
+    # head count costs ~50 GB/device of activation gathers at 32k prefill
+    if (sh.resolve("model", H) is None and S > 1
+            and sh.resolve("seq_model", S) is not None):
+        q = sh.constrain(q, "batch", "seq_model", None, None)
+    else:
+        q = sh.constrain(q, "batch", None, "model", None)
+    k = sh.constrain(k, "batch", None, "kv_heads", None)
+    v = sh.constrain(v, "batch", None, "kv_heads", None)
+
+    new_cache = None
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
+            cache["k"].dtype), cache_index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
+            cache["v"].dtype), cache_index, axis=1)
+        new_cache = {"k": ck, "v": cv}
+
+    if mode == "decode":
+        assert new_cache is not None
+        kv_len = cache["k"].shape[1]
+        out = _cached_attention(q, new_cache["k"], new_cache["v"],
+                                cache_index + S, kv_len)
+        return out.reshape(B, S, H * hd) @ p["wo"], new_cache
+
+    out = attn_ops.attention(
+        jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2),
+        causal=True, backend=backend)
+    out = jnp.moveaxis(out, 1, 2).reshape(B, S, H * hd)
+    return out @ p["wo"], new_cache
+
+
+def _cached_attention(q, k, v, valid_len, kv_len):
+    """Decode/prefill attention over a (possibly padded) KV cache.
+
+    q (B, S, H, hd); k/v (B, S_max, Hkv, hd); positions >= valid_len masked.
+    Works with seq-sharded caches: the softmax reductions over the cache axis
+    are plain jnp reductions that GSPMD turns into cross-shard all-reduces.
+    """
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    # keep the (huge) cache in bf16; accumulate the contraction in f32 --
+    # halves decode HBM traffic vs casting k/v up front
+    qg = (q * (hd ** -0.5)).reshape(B, S, Hkv, group, hd)
+    logits = jnp.einsum("bskgd,btkd->bskgt", qg, k,
+                        preferred_element_type=jnp.float32)
+    # causal-and-valid: key t visible to query s iff t <= qpos_s (< valid_len)
+    qpos = valid_len - S + jnp.arange(S)
+    cmask = jnp.arange(kv_len)[None, :] <= qpos[:, None]     # (S, T)
+    logits = jnp.where(cmask[None, :, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bskgt,btkd->bskgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attention(x, enc_kv, p, cfg):
+    """x (B, S, D); enc_kv: precomputed (k, v) each (B, T, Hkv, hd)."""
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k, v = enc_kv
+    out = attn_ops.attention(
+        jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2),
+        causal=False, backend="xla")
+    return jnp.moveaxis(out, 1, 2).reshape(B, S, H * hd) @ p["wo"]
+
+
+def init_linear(key, shape, dtype, scale=None):
+    fan_in = shape[0]
+    if scale is None:
+        scale = fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)

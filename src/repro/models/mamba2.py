@@ -1,0 +1,228 @@
+"""Mamba2 (SSD) decoder — the attention-free family.
+
+Block: in_proj -> (z | x | B | C | dt); causal depthwise conv on (x|B|C);
+dt = softplus(dt + bias); SSD scan (Pallas kernel on TPU, chunked jnp on
+CPU); gated RMSNorm; out_proj.
+
+Decode keeps O(1)-in-sequence state: a (K-1)-deep conv cache and the
+(H, N, P) SSM state -- which is why this family (and the Zamba2 hybrid)
+are the ones that run the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import sharding as sh
+from ..kernels.ssd_scan import ops as ssd_ops
+from ..kernels.ssd_scan import ref as ssd_ref
+
+
+def _dims(cfg):
+    din = cfg.ssm_d_inner
+    H = cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    G = cfg.ssm_groups
+    N = cfg.ssm_state
+    conv_dim = din + 2 * G * N
+    return din, H, P, G, N, conv_dim
+
+
+def layer_shapes(cfg, nl):
+    d = L.dtype_of(cfg)
+    sd = jax.ShapeDtypeStruct
+    D = cfg.d_model
+    din, H, P, G, N, conv_dim = _dims(cfg)
+    return {
+        "ln": sd((nl, D), d),
+        "in_proj": sd((nl, D, 2 * din + 2 * G * N + H), d),
+        "conv_w": sd((nl, cfg.ssm_conv, conv_dim), d),
+        "conv_b": sd((nl, conv_dim), d),
+        "dt_bias": sd((nl, H), jnp.float32),
+        "A_log": sd((nl, H), jnp.float32),
+        "D_skip": sd((nl, H), jnp.float32),
+        "norm_w": sd((nl, din), d),
+        "out_proj": sd((nl, din, D), d),
+    }
+
+
+def param_shapes(cfg):
+    d = L.dtype_of(cfg)
+    sd = jax.ShapeDtypeStruct
+    p = {"embed": sd((cfg.vocab, cfg.d_model), d),
+         "final_norm": sd((cfg.d_model,), d),
+         "layers": layer_shapes(cfg, cfg.n_layers)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = sd((cfg.d_model, cfg.vocab), d)
+    return p
+
+
+def logical_axes(cfg):
+    def annot(tree):
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out[k] = annot(v)
+            elif k == "embed":
+                out[k] = ("vocab", "fsdp")
+            elif k == "lm_head":
+                out[k] = ("fsdp", "vocab")
+            elif k in ("in_proj",):
+                out[k] = (None, "fsdp", "model")
+            elif k in ("out_proj",):
+                out[k] = (None, "model", "fsdp")
+            elif k in ("conv_w", "conv_b", "norm_w"):
+                out[k] = (None,) * (len(v.shape) - 1) + ("model",)
+            else:
+                out[k] = (None,) * len(v.shape)
+        return out
+    return annot(param_shapes(cfg))
+
+
+def init_params(cfg, key):
+    shapes = param_shapes(cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(shapes)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, spec in zip(keys, leaves):
+        path_hint = spec.shape
+        if len(spec.shape) >= 2 and spec.shape[-1] > 8:
+            w = (jax.random.normal(k, spec.shape, jnp.float32)
+                 * spec.shape[-2] ** -0.5)
+        else:
+            w = jnp.ones(spec.shape, jnp.float32) * 0.1
+        out.append(w.astype(spec.dtype))
+    p = jax.tree_util.tree_unflatten(treedef, out)
+    # A must be negative: A = -exp(A_log); dt_bias small positive
+    p["layers"]["A_log"] = jnp.zeros_like(p["layers"]["A_log"])
+    p["layers"]["dt_bias"] = jnp.full_like(p["layers"]["dt_bias"], -2.0)
+    return p
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """x (B, S, C); w (K, C) depthwise; returns (y, new_state (B, K-1, C))."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)             # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(K))
+    y = jax.nn.silu((y + b).astype(jnp.float32)).astype(x.dtype)
+    new_state = xp[:, -(K - 1):, :]
+    return y, new_state
+
+
+def mamba_block(cfg, p, x, cache=None, mode="train"):
+    """x (B, S, D) -> (y, new_cache).  cache: {"conv": (B,K-1,Cv),
+    "ssm": (B,H,N,P)}."""
+    B, S, D = x.shape
+    din, H, P, G, N, conv_dim = _dims(cfg)
+    proj = x @ p["in_proj"]
+    z = proj[..., :din]
+    xbc = proj[..., din:din + conv_dim]
+    dt_raw = proj[..., din + conv_dim:]
+
+    conv_state = cache.get("conv") if cache else None
+    if mode == "decode" and S == 1:
+        xbc_conv, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                          conv_state)
+    else:
+        xbc_conv, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                          conv_state if mode != "train"
+                                          else None)
+    xc = xbc_conv[..., :din].reshape(B, S, H, P)
+    Bm = xbc_conv[..., din:din + G * N].reshape(B, S, G, N)
+    Cm = xbc_conv[..., din + G * N:].reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    new_ssm = None
+    if mode == "decode" and S == 1:
+        # single-step recurrence on the cached state
+        h_prev = cache["ssm"].astype(jnp.float32)       # (B,H,N,P)
+        rep = H // G
+        b1 = jnp.repeat(Bm[:, 0], rep, axis=1)          # (B,H,N)
+        c1 = jnp.repeat(Cm[:, 0], rep, axis=1)
+        dt1 = dt[:, 0]                                   # (B,H)
+        x1 = xc[:, 0].astype(jnp.float32)                # (B,H,P)
+        decay = jnp.exp(A[None] * dt1)                   # (B,H)
+        h = (decay[..., None, None] * h_prev
+             + dt1[..., None, None] * b1[..., :, None] * x1[..., None, :])
+        y = jnp.einsum("bhn,bhnp->bhp", c1, h)[:, None]  # (B,1,H,P)
+        new_ssm = h.astype(cache["ssm"].dtype)
+        y = y.astype(x.dtype)
+    else:
+        backend = "chunked" if jax.default_backend() != "tpu" else "auto"
+        y = ssd_ops.ssd(xc, dt.astype(jnp.float32), A, Bm, Cm,
+                        backend=backend)
+        if cache is not None:  # prefill: also compute the final state
+            new_ssm = ssd_ref.ssd_final_state(
+                xc, dt.astype(jnp.float32), A, Bm, Cm).astype(
+                cache["ssm"].dtype)
+    y = y + xc.astype(jnp.float32).astype(x.dtype) * p["D_skip"].astype(
+        x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, din)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                   p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": new_ssm}
+    return out, new_cache
+
+
+def _layer(cfg, p, x, cache, mode):
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    y, nc = mamba_block(cfg, p, h, cache, mode)
+    return x + y, nc
+
+
+def forward(cfg, params, tokens, *, mode="train", cache=None,
+            cache_index: int = 0, remat: Optional[bool] = None):
+    remat = cfg.remat if remat is None else remat
+    x = L.embed(tokens, params["embed"])
+    x = sh.constrain(x, "batch", None, None)
+
+    def body(lp, xx, lc):
+        return _layer(cfg, lp, xx, lc, mode)
+    if remat and mode == "train":
+        body = jax.checkpoint(body, policy=L.remat_policy_of(cfg))
+    if cache is None:
+        def scan_fn(carry, lp):
+            y, _ = body(lp, carry, None)
+            return y, None
+        x, _ = jax.lax.scan(scan_fn, x, params["layers"], unroll=cfg.scan_unroll)
+        new_cache = None
+    else:
+        def scan_fn(carry, inp):
+            lp, lc = inp
+            y, nc = body(lp, carry, lc)
+            return y, nc
+        x, new_cache = jax.lax.scan(scan_fn, x, (params["layers"], cache), unroll=cfg.scan_unroll)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    logits = L.unembed(x, head if head is not None else params["embed"].T)
+    logits = sh.constrain(logits, "batch", None, "vocab")
+    return (logits, new_cache) if cache is not None else logits
+
+
+def cache_shapes(cfg, batch: int, max_len: int = 0):
+    """SSM caches are O(1) in sequence length (max_len unused)."""
+    d = L.dtype_of(cfg)
+    sd = jax.ShapeDtypeStruct
+    din, H, P, G, N, conv_dim = _dims(cfg)
+    nl = cfg.n_layers
+    return {"conv": sd((nl, batch, cfg.ssm_conv - 1, conv_dim), d),
+            "ssm": sd((nl, batch, H, N, P), jnp.float32)}
+
+
+def cache_logical_axes(cfg):
+    return {"conv": (None, "batch", None, "model"),
+            "ssm": (None, "batch", "model", None, None)}

@@ -1,0 +1,143 @@
+"""Multi-head Latent Attention (DeepSeek-V3).
+
+Training path materializes per-head K/V from the compressed latent; the
+decode path caches only (c_kv, k_rope) = (kv_lora_rank + rope_head_dim) per
+token -- the memory win that makes 32k-context batch-128 decode feasible --
+and uses the absorbed-weights formulation so no per-head K/V is ever
+materialized at decode time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import sharding as sh
+from ..kernels.flash_attn import ops as attn_ops
+
+
+def param_shapes(cfg):
+    d = L.dtype_of(cfg)
+    sd = jax.ShapeDtypeStruct
+    D, H = cfg.d_model, cfg.n_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    nl = cfg.n_layers
+    return {
+        "wq_a": sd((nl, D, qr), d),            # q down-projection
+        "q_norm": sd((nl, qr), d),
+        "wq_b": sd((nl, qr, H * (dn + dr)), d),
+        "wkv_a": sd((nl, D, kr + dr), d),      # kv down-projection (+k_rope)
+        "kv_norm": sd((nl, kr), d),
+        "wk_b": sd((nl, kr, H * dn), d),
+        "wv_b": sd((nl, kr, H * dv), d),
+        "wo": sd((nl, H * dv, D), d),
+    }
+
+
+def _project_q(x, p, cfg, positions):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim
+    q = L.rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps) @ p["wq_b"]
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attention(x, p, cfg, positions, cache=None, cache_index=0,
+                  mode: str = "train"):
+    """MLA attention.  Returns (out, new_cache).
+
+    ``train``: no cache, chunked causal flash attention.
+    ``prefill``: same attention math, but also writes the *compressed*
+      (c_kv, k_rope) cache at [cache_index, cache_index+S).
+    ``decode``: absorbed-weights attention over the compressed cache.
+    """
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    kr = cfg.kv_lora_rank
+
+    q_nope, q_rope = _project_q(x, p, cfg, positions)
+    kv = x @ p["wkv_a"]                                # (B,S,kr+dr)
+    c_kv = L.rms_norm(kv[..., :kr], p["kv_norm"], cfg.norm_eps)
+    k_rope = L.apply_rope(kv[..., kr:], positions, cfg.rope_theta)  # shared
+
+    new_cache = None
+    if cache is not None:
+        cc = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), cache_index, 1)
+        cr = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+            cache_index, 1)
+        new_cache = {"c_kv": cc, "k_rope": cr}
+
+    if mode == "decode":
+        assert new_cache is not None
+        out = _absorbed_attention(q_nope, q_rope, new_cache, p, cfg,
+                                  cache_index + S)
+        return out @ p["wo"], new_cache
+
+    # train / prefill: materialized per-head K/V, chunked causal attention.
+    # Heads shard over 'model' (128 heads / 16 = 8) -- without this the
+    # per-head K/V blow past HBM on the 61-layer config.
+    k_nope = (c_kv @ p["wk_b"]).reshape(B, S, H, dn)
+    v = (c_kv @ p["wv_b"]).reshape(B, S, H, dv)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None, :],
+                                          (B, S, H, dr))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q = sh.constrain(q, "batch", None, "model", None)
+    k = sh.constrain(k, "batch", None, "model", None)
+    v = sh.constrain(v, "batch", None, "model", None)
+    out = attn_ops.attention(
+        jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2),
+        causal=True, scale=(dn + dr) ** -0.5, backend="xla")
+    out = jnp.moveaxis(out, 1, 2).reshape(B, S, H * dv).astype(x.dtype)
+    return out @ p["wo"], new_cache
+
+
+def _absorbed_attention(q_nope, q_rope, cache, p, cfg, valid_len):
+    """Decode with the compressed cache only.
+
+    scores = q_nope^T (W_kb c) + q_rope^T k_rope
+           = (W_kb^T q_nope)^T c + q_rope^T k_rope     (absorb W_kb into q)
+    out_h  = (probs . c) W_vb_h                        (absorb W_vb after).
+    """
+    B, S, H, dn = q_nope.shape
+    kr = cfg.kv_lora_rank
+    dr = cfg.rope_head_dim
+    dv = cfg.v_head_dim
+    Tmax = cache["c_kv"].shape[1]
+    scale = (dn + dr) ** -0.5
+
+    wk = p["wk_b"].reshape(kr, H, dn)
+    q_abs = jnp.einsum("bshd,khd->bshk", q_nope, wk,
+                       preferred_element_type=jnp.float32)   # (B,S,H,kr)
+    # contract against the bf16 cache with f32 accumulation (no cache cast)
+    logits = (jnp.einsum("bshk,btk->bhst", q_abs.astype(cache["c_kv"].dtype),
+                         cache["c_kv"],
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshd,btd->bhst", q_rope, cache["k_rope"],
+                           preferred_element_type=jnp.float32)) * scale
+    qpos = valid_len - S + jnp.arange(S)
+    mask = jnp.arange(Tmax)[None, :] <= qpos[:, None]
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhst,btk->bshk", probs.astype(cache["c_kv"].dtype),
+                     cache["c_kv"],
+                     preferred_element_type=jnp.float32)     # (B,S,H,kr)
+    wv = p["wv_b"].reshape(kr, H, dv)
+    out = jnp.einsum("bshk,khd->bshd", ctx.astype(wv.dtype), wv,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, H * dv).astype(p["wo"].dtype)
+
+
+def cache_shapes(cfg, batch: int, max_len: int):
+    d = L.dtype_of(cfg)
+    sd = jax.ShapeDtypeStruct
+    return {
+        "c_kv": sd((cfg.n_layers, batch, max_len, cfg.kv_lora_rank), d),
+        "k_rope": sd((cfg.n_layers, batch, max_len, cfg.rope_head_dim), d),
+    }

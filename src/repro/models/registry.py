@@ -1,0 +1,150 @@
+"""Uniform model API over the zoo families.
+
+``Model`` wraps a config with family-dispatched functions:
+
+  param_shapes / init_params / logical_axes
+  loss(params, batch)                        -> scalar LM loss
+  prefill(params, batch, cache)              -> (logits, cache)
+  decode_step(params, tokens, cache, index)  -> (logits, cache)
+  cache_shapes(batch, max_len) / cache_logical_axes
+  input_specs(shape_cfg)                     -> batch ShapeDtypeStructs
+
+Batch layout: {"tokens": (B, S) int32} plus, per family, "frames"
+(audio stub) or "vision_embeds" (VLM stub).  LM loss is next-token
+cross-entropy over tokens (frontend positions excluded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer, mamba2, hybrid, encdec
+from ..configs.base import ModelConfig, ShapeConfig
+
+
+def _xent(logits, labels, mask):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- family dispatch ---------------------------------------------------
+    @property
+    def _mod(self):
+        fam = self.cfg.family
+        if fam in ("dense", "moe", "vlm"):
+            return transformer
+        if fam == "ssm":
+            return mamba2
+        if fam == "hybrid":
+            return hybrid
+        if fam == "encdec":
+            return encdec
+        raise ValueError(fam)
+
+    def param_shapes(self):
+        return self._mod.param_shapes(self.cfg)
+
+    def init_params(self, key):
+        return self._mod.init_params(self.cfg, key)
+
+    def logical_axes(self):
+        return self._mod.logical_axes(self.cfg)
+
+    def cache_shapes(self, batch: int, max_len: int):
+        return self._mod.cache_shapes(self.cfg, batch, max_len)
+
+    def cache_logical_axes(self):
+        return self._mod.cache_logical_axes(self.cfg)
+
+    # ---- forward paths -----------------------------------------------------
+    def _fwd(self, params, batch, **kw):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec.forward(cfg, params, batch["tokens"],
+                                  frames=batch.get("frames"), **kw)
+        if cfg.family == "vlm":
+            return transformer.forward(
+                cfg, params, batch["tokens"],
+                vision_embeds=batch.get("vision_embeds"), **kw)
+        return self._mod.forward(cfg, params, batch["tokens"], **kw)
+
+    def loss(self, params, batch):
+        logits = self._fwd(params, batch, mode="train")
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        # frontend positions (vision/audio) are excluded from the loss: the
+        # logits tail [-S:] aligns with the token stream.
+        logits = logits[:, -S:]
+        labels = tokens[:, 1:]
+        mask = jnp.ones_like(labels, jnp.float32)
+        return _xent(logits[:, :-1], labels, mask)
+
+    def prefill(self, params, batch, cache):
+        return self._fwd(params, batch, mode="prefill", cache=cache,
+                         cache_index=0)
+
+    def decode_step(self, params, tokens, cache, index):
+        return self._fwd(params, {"tokens": tokens}, mode="decode",
+                         cache=cache, cache_index=index)
+
+    # ---- dry-run input specs -------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        sd = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            batch = {"tokens": sd((B, S), i32)}
+            if cfg.family == "vlm":
+                n_img = min(cfg.n_frontend_tokens, S // 2)
+                batch = {"tokens": sd((B, S - n_img), i32),
+                         "vision_embeds": sd((B, n_img,
+                                              cfg.frontend_dim or cfg.d_model),
+                                             jnp.bfloat16
+                                             if cfg.dtype == "bfloat16"
+                                             else jnp.float32)}
+            if cfg.family == "encdec":
+                batch["frames"] = sd((B, cfg.n_frontend_tokens,
+                                      cfg.frontend_dim or cfg.d_model),
+                                     jnp.bfloat16 if cfg.dtype == "bfloat16"
+                                     else jnp.float32)
+            return batch
+        if shape.kind == "prefill":
+            batch = {"tokens": sd((B, S), i32)}
+            if cfg.family == "vlm":
+                n_img = min(cfg.n_frontend_tokens, S // 2)
+                batch = {"tokens": sd((B, S - n_img), i32),
+                         "vision_embeds": sd((B, n_img,
+                                              cfg.frontend_dim or cfg.d_model),
+                                             jnp.bfloat16
+                                             if cfg.dtype == "bfloat16"
+                                             else jnp.float32)}
+            if cfg.family == "encdec":
+                batch["frames"] = sd((B, cfg.n_frontend_tokens,
+                                      cfg.frontend_dim or cfg.d_model),
+                                     jnp.bfloat16 if cfg.dtype == "bfloat16"
+                                     else jnp.float32)
+            return batch
+        # decode: one new token against an S-long cache
+        return {"tokens": sd((B, 1), i32)}
+
+
+# ---------------------------------------------------------------------------
+# Registry (backed by repro.configs.base)
+# ---------------------------------------------------------------------------
+from ..configs import base as _cfg_base
+
+get_config = _cfg_base.get_config
+list_architectures = _cfg_base.list_architectures
+
+
+def get_model(name: str, smoke: bool = False) -> Model:
+    return Model(get_config(name, smoke))

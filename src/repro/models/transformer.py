@@ -1,0 +1,295 @@
+"""Decoder-only transformer covering the dense and MoE LM families.
+
+One module, composed per-config:
+  * attention: GQA (+RoPE, optional qkv bias) or MLA (DeepSeek compressed
+    latent) -- ``cfg.mla``;
+  * MLP: dense SwiGLU, or MoE (expert-parallel AllToAll / DR-rotation) with
+    ``cfg.n_dense_layers`` leading dense layers (DeepSeek-V3 layout);
+  * optional stubbed modality frontend (``cfg.family == 'vlm'``): precomputed
+    patch/frame embeddings projected and prepended to the token stream.
+
+Params are layer-stacked per section ("dense" / "moe") and consumed via
+``lax.scan`` -- the HLO stays small even for 61-layer x 256-expert models,
+which is what keeps 512-device compiles tractable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import sharding as sh
+
+
+# ---------------------------------------------------------------------------
+# Param shapes
+# ---------------------------------------------------------------------------
+
+def _attn_shapes(cfg, nl):
+    d = L.dtype_of(cfg)
+    sd = jax.ShapeDtypeStruct
+    if cfg.mla:
+        shp = mla_mod.param_shapes(cfg)
+        return {k: sd((nl,) + v.shape[1:], v.dtype) for k, v in shp.items()}
+    D, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    out = {
+        "wq": sd((nl, D, H * hd), d), "wk": sd((nl, D, Hkv * hd), d),
+        "wv": sd((nl, D, Hkv * hd), d), "wo": sd((nl, H * hd, D), d),
+    }
+    if cfg.qkv_bias:
+        out.update({"bq": sd((nl, H * hd), d), "bk": sd((nl, Hkv * hd), d),
+                    "bv": sd((nl, Hkv * hd), d)})
+    return out
+
+
+def _dense_mlp_shapes(cfg, nl):
+    d = L.dtype_of(cfg)
+    sd = jax.ShapeDtypeStruct
+    D, F = cfg.d_model, cfg.d_ff
+    return {"w_gate": sd((nl, D, F), d), "w_up": sd((nl, D, F), d),
+            "w_down": sd((nl, F, D), d)}
+
+
+def _norm_shapes(cfg, nl):
+    d = L.dtype_of(cfg)
+    sd = jax.ShapeDtypeStruct
+    return {"ln1": sd((nl, cfg.d_model), d), "ln2": sd((nl, cfg.d_model), d)}
+
+
+def param_shapes(cfg):
+    d = L.dtype_of(cfg)
+    sd = jax.ShapeDtypeStruct
+    n_moe = (cfg.n_layers - cfg.n_dense_layers) if cfg.n_experts else 0
+    n_dense = cfg.n_layers - n_moe
+    p = {"embed": sd((cfg.vocab, cfg.d_model), d),
+         "final_norm": sd((cfg.d_model,), d)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = sd((cfg.d_model, cfg.vocab), d)
+    if cfg.family == "vlm":
+        p["vision_proj"] = sd((cfg.frontend_dim or cfg.d_model,
+                               cfg.d_model), d)
+    if n_dense:
+        p["dense"] = {**_norm_shapes(cfg, n_dense),
+                      **_attn_shapes(cfg, n_dense),
+                      **_dense_mlp_shapes(cfg, n_dense)}
+    if n_moe:
+        p["moe"] = {**_norm_shapes(cfg, n_moe),
+                    **_attn_shapes(cfg, n_moe),
+                    **{k: v for k, v in moe_mod.param_shapes(
+                        cfg, n_moe).items()}}
+    return p
+
+
+# Logical sharding axes per param leaf name (fsdp over embed/ff dims, tensor
+# parallel over head/expert dims).
+_LOGICAL = {
+    "embed": ("vocab", "fsdp"),
+    "lm_head": ("fsdp", "vocab"),
+    "final_norm": (None,),
+    "vision_proj": (None, "fsdp"),
+    "ln1": (None, None), "ln2": (None, None),
+    "wq": (None, "fsdp", "model"), "wk": (None, "fsdp", "model"),
+    "wv": (None, "fsdp", "model"), "wo": (None, "model", "fsdp"),
+    "bq": (None, "model"), "bk": (None, "model"), "bv": (None, "model"),
+    "w_gate": (None, "fsdp", "model"), "w_up": (None, "fsdp", "model"),
+    "w_down": (None, "model", "fsdp"),
+    # MLA
+    "wq_a": (None, "fsdp", None), "q_norm": (None, None),
+    "wq_b": (None, None, "model"),
+    "wkv_a": (None, "fsdp", None), "kv_norm": (None, None),
+    "wk_b": (None, None, "model"), "wv_b": (None, None, "model"),
+    # MoE
+    "router": (None, "fsdp", None),
+    "ws_gate": (None, "fsdp", "model"), "ws_up": (None, "fsdp", "model"),
+    "ws_down": (None, "model", "fsdp"),
+}
+_MOE_EXPERT = {"w_gate": ("experts", "fsdp", None),
+               "w_up": ("experts", "fsdp", None),
+               "w_down": ("experts", None, "fsdp")}
+
+
+def logical_axes(cfg):
+    """Pytree (same structure as param_shapes) of logical axis tuples."""
+    shapes = param_shapes(cfg)
+
+    def annotate(tree, moe_section):
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out[k] = annotate(v, k == "moe")
+                continue
+            if moe_section and k in _MOE_EXPERT:
+                ax = _MOE_EXPERT[k]
+            else:
+                ax = _LOGICAL.get(k, (None,) * len(v.shape))
+            # layer-stacked leaves get a leading None
+            if len(ax) == len(v.shape) - 1:
+                ax = (None,) + ax
+            ax = tuple(ax[:len(v.shape)])
+            ax = ax + (None,) * (len(v.shape) - len(ax))
+            out[k] = ax
+        return out
+
+    return annotate(shapes, False)
+
+
+def init_params(cfg, key):
+    shapes = param_shapes(cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(shapes)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, spec in zip(keys, leaves):
+        if len(spec.shape) >= 2:
+            fan_in = spec.shape[-2]
+            w = jax.random.normal(k, spec.shape, jnp.float32) * fan_in ** -0.5
+        else:
+            w = jnp.ones(spec.shape, jnp.float32)
+        out.append(w.astype(spec.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _attn(cfg, p, h, positions, lc, cache_index, mode):
+    if cfg.mla:
+        return mla_mod.mla_attention(h, p, cfg, positions, lc, cache_index,
+                                     mode)
+    return L.gqa_attention(h, p, cfg, positions, lc, cache_index, mode)
+
+
+def _layer(cfg, use_moe, p, x, positions, lc, cache_index, mode):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    attn_out, new_cache = _attn(cfg, p, h, positions, lc, cache_index, mode)
+    x = x + attn_out
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if use_moe:
+        x = x + moe_mod.moe_block(cfg, p, h)
+    else:
+        x = x + L.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+    return x, new_cache
+
+
+def _run_section(cfg, use_moe, params, x, positions, cache, cache_index,
+                 mode, remat):
+    def body(lp, xx, pos, lc, ci):
+        return _layer(cfg, use_moe, lp, xx, pos, lc, ci, mode)
+    if remat and mode == "train":
+        body = jax.checkpoint(body, policy=L.remat_policy_of(cfg))
+    if cache is None:
+        def scan_fn(carry, lp):
+            y, _ = body(lp, carry, positions, None, 0)
+            return y, None
+        x, _ = jax.lax.scan(scan_fn, x, params, unroll=cfg.scan_unroll)
+        return x, None
+
+    if cfg.scan_unroll:
+        def scan_fn(carry, inp):
+            lp, lc = inp
+            y, nc = body(lp, carry, positions, lc, cache_index)
+            return y, nc
+        x, new_cache = jax.lax.scan(scan_fn, x, (params, cache), unroll=True)
+        return x, new_cache
+
+    # Cached path: fori_loop with in-place cache updates.  A scan over
+    # (params, cache) cannot alias its xs into its stacked ys, doubling KV
+    # memory; a loop carry aliases in place (the 32k-context decode cells
+    # only fit this way).
+    nl = jax.tree_util.tree_leaves(params)[0].shape[0]
+
+    def body_l(l, carry):
+        xx, full_cache = carry
+        lp = jax.tree_util.tree_map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False),
+            params)
+        lc = jax.tree_util.tree_map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False),
+            full_cache)
+        y, nc = body(lp, xx, positions, lc, cache_index)
+        full_cache = jax.tree_util.tree_map(
+            lambda full, new_: jax.lax.dynamic_update_index_in_dim(
+                full, new_.astype(full.dtype), l, 0), full_cache, nc)
+        return y, full_cache
+
+    x, new_cache = jax.lax.fori_loop(0, nl, body_l, (x, cache))
+    return x, new_cache
+
+
+def forward(cfg, params, tokens, *, mode: str = "train", cache=None,
+            cache_index: int = 0, vision_embeds=None,
+            remat: Optional[bool] = None):
+    """tokens (B, S) -> logits (or (logits, new_cache) when cache given)."""
+    remat = cfg.remat if remat is None else remat
+    x = L.embed(tokens, params["embed"])
+    if vision_embeds is not None:
+        v = vision_embeds.astype(x.dtype) @ params["vision_proj"]
+        x = jnp.concatenate([v, x], axis=1)
+    x = sh.constrain(x, "batch", None, None)
+    B, S, _ = x.shape
+    positions = cache_index + jnp.arange(S)[None, :]
+
+    has_moe = "moe" in params
+    caches = cache or {}
+    new_caches = {}
+    if "dense" in params:
+        x, nc = _run_section(cfg, False, params["dense"], x, positions,
+                             caches.get("dense"), cache_index, mode, remat)
+        if nc is not None:
+            new_caches["dense"] = nc
+    if has_moe:
+        x, nc = _run_section(cfg, True, params["moe"], x, positions,
+                             caches.get("moe"), cache_index, mode, remat)
+        if nc is not None:
+            new_caches["moe"] = nc
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    logits = L.unembed(x, head if head is not None else params["embed"].T)
+    logits = sh.constrain(logits, "batch", None, "vocab")
+    return (logits, new_caches) if cache is not None else logits
+
+
+def cache_shapes(cfg, batch: int, max_len: int):
+    d = L.dtype_of(cfg)
+    sd = jax.ShapeDtypeStruct
+    n_moe = (cfg.n_layers - cfg.n_dense_layers) if cfg.n_experts else 0
+    n_dense = cfg.n_layers - n_moe
+
+    def sec(nl):
+        if cfg.mla:
+            base = mla_mod.cache_shapes(cfg, batch, max_len)
+            return {k: sd((nl,) + v.shape[1:], v.dtype)
+                    for k, v in base.items()}
+        return {"k": sd((nl, batch, max_len, cfg.n_kv_heads, cfg.head_dim), d),
+                "v": sd((nl, batch, max_len, cfg.n_kv_heads, cfg.head_dim), d)}
+
+    out = {}
+    if n_dense:
+        out["dense"] = sec(n_dense)
+    if n_moe:
+        out["moe"] = sec(n_moe)
+    return out
+
+
+def cache_logical_axes(cfg):
+    """Logical axes for cache leaves: batch over data, seq over model."""
+    if cfg.mla:
+        per = {"c_kv": (None, "batch", "seq_cache", None),
+               "k_rope": (None, "batch", "seq_cache", None)}
+    else:
+        # heads shard when divisible (priority), else sequence
+        per = {"k": (None, "batch", "seq_cache", "kv_heads", None),
+               "v": (None, "batch", "seq_cache", "kv_heads", None)}
+    n_moe = (cfg.n_layers - cfg.n_dense_layers) if cfg.n_experts else 0
+    out = {}
+    if cfg.n_layers - n_moe:
+        out["dense"] = dict(per)
+    if n_moe:
+        out["moe"] = dict(per)
+    return out

@@ -1,0 +1,506 @@
+"""Layered max-plus fabric engine (the "fast" simulator).
+
+TPU-idiomatic reformulation of a packet-level fat-tree simulation: with the
+paper's uniform workloads (identical packet sizes, synchronized line-rate
+senders) every queue is FIFO with unit service time (1 slot = one data-packet
+serialization), so per-queue departure times obey the Lindley recursion
+
+    d_i = max(a_i, d_{i-1}) + 1
+
+which is an *associative* segmented max-plus scan: expanding,
+``d_i = i + 1 + max_{j<=i, same queue}(a_j - j)``.  A 5-hop fat-tree traversal
+therefore becomes five rounds of (lexsort by (queue, arrival), segmented
+cumulative max, gather) -- dense, parallel, jit-compiled array ops instead of
+an event loop.  The segmented cummax is the compute hot spot and has a Pallas
+TPU kernel (``repro.kernels.lindley``); the default backend is
+``jax.lax.associative_scan``.
+
+Timing model
+------------
+* time unit: one data-packet slot ( (payload+header+gap) / line-rate );
+* hosts pace at line rate (ideal fixed-rate CCA, §4) and carry a random
+  fractional *phase* in [0,1): synchronized-but-not-atomically-aligned
+  senders.  Phases are what give switch-local schemes (JSQ, RR) their
+  "sticky flow" behavior (paper App. C) -- without sub-slot phases the
+  arbitration would be ambiguous;
+* propagation adds ``prop_slots`` per traversed link; it shifts arrival
+  times but never changes queue dynamics;
+* queue length seen by an arriving packet equals its waiting time in slots
+  (unit service): ``occ_i = d_i - a_i - 1``.  Max/avg queue sizes and
+  per-queue packet counts are derived from it.
+
+Supported schemes: everything without ACK/ECN feedback -- ECMP, subflows,
+host packet spraying, HOST DR, SIMPLE RR, SWITCH PKT (periodic re-permute),
+RSQ, JSQ, SWITCH PKT AR (quantized JSQ), OFAN.  Feedback schemes (REPS, PLB,
+MSwift) run on ``net.loopsim``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .topology import (FatTree, LinkState, N_LAYERS, LAYER_NAMES,
+                       UP_E, UP_A, DN_C, DN_A, DN_E)
+from .workloads import Workload
+from ..core.lb_schemes import LBScheme, precompute_host_choices
+from ..core import ofan as ofan_mod
+
+_NEG = -1.0e9
+
+
+# ---------------------------------------------------------------------------
+# Segmented max-plus scan.
+# ---------------------------------------------------------------------------
+
+def _segmented_cummax_ref(v: jnp.ndarray, seg_start: jnp.ndarray) -> jnp.ndarray:
+    """Running max of ``v`` resetting wherever ``seg_start`` is True."""
+    def combine(l, r):
+        vl, fl = l
+        vr, fr = r
+        return jnp.where(fr, vr, jnp.maximum(vl, vr)), fl | fr
+    out, _ = jax.lax.associative_scan(combine, (v, seg_start))
+    return out
+
+
+def segmented_cummax(v, seg_start, backend: str = "auto"):
+    if backend in ("auto", "xla"):
+        return _segmented_cummax_ref(v, seg_start)
+    if backend == "pallas":
+        from ..kernels.lindley import ops as _lops
+        return _lops.segmented_cummax(v, seg_start)
+    raise ValueError(backend)
+
+
+def _ranks_and_starts(sorted_gkey: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Given group keys sorted ascending, return (rank within group, segment
+    start flags)."""
+    n = sorted_gkey.shape[0]
+    idx = jnp.arange(n, dtype=jnp.float32)
+    flag = jnp.concatenate([jnp.ones((1,), bool),
+                            sorted_gkey[1:] != sorted_gkey[:-1]])
+    start = segmented_cummax(jnp.where(flag, idx, _NEG), flag)
+    rank = (idx - start).astype(jnp.int32)
+    return rank, flag
+
+
+# ---------------------------------------------------------------------------
+# One queueing layer: Lindley over explicit queue ids.
+# ---------------------------------------------------------------------------
+
+def _lindley_layer(qid, a, tie, n_queues: int, backend: str):
+    """FIFO service of one layer.  ``qid`` int32 (-1 => bypass).
+
+    Returns (departure, counts[n_queues], max_occ, sum_wait).
+    """
+    npk = qid.shape[0]
+    real = qid >= 0
+    qkey = jnp.where(real, qid, jnp.int32(2**30))
+    order = jnp.lexsort((tie, a, qkey))
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(npk))
+    qs = qkey[order]
+    av = a[order]
+    idx = jnp.arange(npk, dtype=jnp.float32)
+    flag = jnp.concatenate([jnp.ones((1,), bool), qs[1:] != qs[:-1]])
+    m = segmented_cummax(av - idx, flag, backend)
+    d_sorted = m + idx + 1.0
+    real_s = qs < 2**30
+    d_sorted = jnp.where(real_s, d_sorted, av)   # bypass: no service
+    d = d_sorted[inv]
+    occ = jnp.where(real, d - a - 1.0, 0.0)      # queue length seen on arrival
+    counts = jnp.zeros((n_queues,), jnp.int32).at[
+        jnp.where(real, qid, 0)].add(jnp.where(real, 1, 0))
+    return d, counts, jnp.max(occ), jnp.sum(occ)
+
+
+# ---------------------------------------------------------------------------
+# Rank-based switch port selection (SIMPLE RR / SWITCH PKT / OFAN).
+# ---------------------------------------------------------------------------
+
+def _ranked_ports(gkey, a, tie, active, select_fn, backend):
+    """Sort active packets by (group pointer key, arrival), compute the rank of
+    each packet within its group, and map rank -> port via ``select_fn(gid,
+    rank)``.  Inactive packets get port 0 (unused)."""
+    npk = gkey.shape[0]
+    g = jnp.where(active, gkey, jnp.int32(2**30))
+    order = jnp.lexsort((tie, a, g))
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(npk))
+    gs = g[order]
+    rank, _ = _ranks_and_starts(gs)
+    gid = jnp.where(gs < 2**30, gs, 0)
+    port_sorted = select_fn(gid, rank)
+    return port_sorted[inv].astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# JSQ layers (adaptive switch): padded per-switch scan.
+# ---------------------------------------------------------------------------
+
+def _jsq_layer(switch, a, tie, active, *, n_switches: int, pad: int, h: int,
+               quanta: Optional[Tuple[float, ...]], buffer_pkts: int,
+               noise, backend: str):
+    """Joint port-choice + FIFO service for one adaptive layer.
+
+    Returns (port, departure, occ_seen, overflow_flag).  ``noise`` is
+    (n_switches, pad, h) pre-drawn uniforms for random tie-breaking.
+    """
+    npk = switch.shape[0]
+    skey = jnp.where(active, switch, jnp.int32(2**30))
+    order = jnp.lexsort((tie, a, skey))
+    ss = skey[order]
+    av = a[order]
+    rank, _ = _ranks_and_starts(ss)
+    overflow = jnp.max(jnp.where(ss < 2**30, rank, 0)) >= pad
+
+    rows = jnp.where(ss < 2**30, ss, 0)
+    cols = jnp.clip(rank, 0, pad - 1)
+    valid = ss < 2**30
+    t_grid = jnp.full((n_switches, pad), jnp.float32(_NEG)).at[rows, cols].set(
+        jnp.where(valid, av, _NEG))
+    v_grid = jnp.zeros((n_switches, pad), bool).at[rows, cols].set(valid)
+
+    thresholds = None
+    if quanta is not None:
+        thresholds = jnp.asarray(quanta, jnp.float32) * buffer_pkts
+
+    def step(d_last, inp):
+        t, ok, nz = inp
+        qlen = jnp.ceil(jnp.maximum(d_last - t, 0.0))
+        if thresholds is None:
+            score = qlen + nz * 1e-3          # JSQ, random tie-break
+        else:
+            bin_ = jnp.sum(qlen[:, None] > thresholds[None, :], axis=1)
+            score = bin_.astype(jnp.float32) + nz * 0.5
+        p = jnp.argmin(score)
+        d_new = jnp.maximum(t, d_last[p]) + 1.0
+        d_next = jnp.where(ok, d_last.at[p].set(d_new), d_last)
+        return d_next, (p.astype(jnp.int32), jnp.where(ok, d_new, t),
+                        qlen[p])
+
+    def per_switch(times, oks, nzs):
+        init = jnp.full((h,), jnp.float32(_NEG))
+        _, (ports, deps, occs) = jax.lax.scan(step, init, (times, oks, nzs))
+        return ports, deps, occs
+
+    ports_g, deps_g, occs_g = jax.vmap(per_switch)(t_grid, v_grid, noise)
+    port_sorted = ports_g[rows, cols]
+    dep_sorted = deps_g[rows, cols]
+    occ_sorted = occs_g[rows, cols]
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(npk))
+    port = jnp.where(active, port_sorted[inv], 0).astype(jnp.int32)
+    dep = jnp.where(active, dep_sorted[inv], a)
+    occ = jnp.where(active, occ_sorted[inv], 0.0)
+    return port, dep, occ, overflow
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LayerStats:
+    counts: np.ndarray
+    max_queue: float
+    avg_wait: float
+
+
+@dataclasses.dataclass
+class FastSimResult:
+    delivery: np.ndarray            # per-packet delivery time (slots)
+    flow_completion: np.ndarray     # per-flow last-delivery (slots)
+    cct: float                      # max over flows (slots)
+    layers: Dict[str, LayerStats]
+    max_queue: float                # max over all layers (packets)
+    a_used: np.ndarray
+    c_used: np.ndarray
+
+    def max_queue_layer(self, layer: int) -> float:
+        return self.layers[LAYER_NAMES[layer]].max_queue
+
+
+def _select_fn_for(mode: str, h: int, tables: dict):
+    """Build select_fn(gid, rank)->port for rank-based modes."""
+    if mode == "rr":
+        starts = tables["rr_starts"]          # (n_groups,)
+        def f(gid, rank):
+            return (starts[gid] + rank) % h
+        return f
+    if mode == "rr_reset":
+        perms = tables["rr_perms"]            # (n_groups, n_epochs, h)
+        starts = tables["rr_starts"]
+        wraps = tables["reset_wraps"]
+        n_epochs = perms.shape[1]
+        def f(gid, rank):
+            epoch = jnp.minimum(rank // (wraps * h), n_epochs - 1)
+            return perms[gid, epoch, (starts[gid] + rank) % h]
+        return f
+    if mode == "ofan":
+        orders = tables["orders"]             # (n_ptrs, W)
+        starts = tables["starts"]
+        lens = tables["lens"]                 # (n_ptrs,)
+        def f(gid, rank):
+            L = jnp.maximum(lens[gid], 1)
+            return orders[gid, (starts[gid] + rank) % L]
+        return f
+    raise ValueError(mode)
+
+
+def simulate(tree: FatTree, wl: Workload, scheme: LBScheme, seed: int = 0,
+             prop_slots: float = 12.0, collect_stats: bool = True,
+             links: Optional[LinkState] = None,
+             backend: str = "auto", jsq_pad_factor: float = 4.0) -> FastSimResult:
+    """Run one collective under ``scheme`` on the fast engine."""
+    if scheme.needs_feedback:
+        raise ValueError(f"{scheme.name} needs ACK feedback; use net.loopsim")
+    h = tree.half
+    rng = np.random.default_rng(seed)
+    npk = wl.n_packets
+
+    # ---- static per-packet fields -----------------------------------------
+    src, dst = wl.src, wl.dst
+    p1 = tree.host_pod(src).astype(np.int32)
+    e1 = tree.host_edge(src).astype(np.int32)
+    p2 = tree.host_pod(dst).astype(np.int32)
+    e2 = tree.host_edge(dst).astype(np.int32)
+    inter_pod = (p1 != p2)
+    leaves_edge = inter_pod | (e1 != e2)
+    phases = rng.random(wl.n_hosts).astype(np.float32)
+    t_rel = (wl.t_release + phases[src]).astype(np.float32)
+    # Flow-static tie keys: consistent switch arbitration across slots (gives
+    # RR/JSQ their sticky-flow behavior, App. C).
+    tie = rng.random(wl.n_flows).astype(np.float32)[wl.flow]
+
+    # ---- path validity under failures (host visibility: converged state) --
+    path_valid = None
+    if links is not None and links.any_failure() and scheme.edge_mode == "pre":
+        path_valid = np.stack([links.path_matrix(int(s), int(d))
+                               for s, d in zip(wl.flow_src, wl.flow_dst)])
+
+    # ---- host-side choices --------------------------------------------------
+    a_pre = c_pre = None
+    if scheme.edge_mode == "pre":
+        a_pre, c_pre = precompute_host_choices(
+            scheme, tree, wl.flow, wl.seq, wl.flow_src, wl.flow_dst, rng,
+            path_valid=path_valid)
+        a_pre = a_pre.astype(np.int32)
+        c_pre = c_pre.astype(np.int32)
+    rand_a = rng.integers(0, h, npk).astype(np.int32)
+    rand_c = rng.integers(0, h, npk).astype(np.int32)
+
+    # ---- switch tables ------------------------------------------------------
+    n_edges = tree.n_edge_switches
+    n_aggs = tree.n_agg_switches
+    tables_e: dict = {}
+    tables_a: dict = {}
+    if scheme.edge_mode in ("rr", "rr_reset"):
+        tables_e["rr_starts"] = rng.integers(0, h, n_edges).astype(np.int32)
+        tables_a["rr_starts"] = rng.integers(0, h, n_aggs).astype(np.int32)
+        if scheme.edge_mode == "rr_reset":
+            max_cnt = int(np.bincount(tree.host_global_edge(src)[leaves_edge],
+                                      minlength=n_edges).max()) if leaves_edge.any() else 1
+            n_ep = max(1, int(np.ceil(max_cnt / (scheme.reset_wraps * h))))
+            tables_e["rr_perms"] = np.argsort(
+                rng.random((n_edges, n_ep, h)), axis=-1).astype(np.int32)
+            tables_a["rr_perms"] = np.argsort(
+                rng.random((n_aggs, n_ep, h)), axis=-1).astype(np.int32)
+            tables_e["reset_wraps"] = tables_a["reset_wraps"] = scheme.reset_wraps
+    elif scheme.edge_mode == "ofan":
+        ot = ofan_mod.build_tables(tree, rng, links=links)
+        tables_e = {"orders": ot.edge_orders, "starts": ot.edge_starts,
+                    "lens": ot.edge_len}
+        tables_a = {"orders": ot.agg_orders, "starts": ot.agg_starts,
+                    "lens": ot.agg_len}
+
+    # ---- JSQ padding ---------------------------------------------------------
+    jsq = scheme.edge_mode in ("jsq", "jsq_quant")
+    pad_e = pad_a = 0
+    if jsq:
+        cnt_e = np.bincount(tree.host_global_edge(src)[leaves_edge],
+                            minlength=n_edges)
+        pad_e = max(int(cnt_e.max()), 1)
+        per_pod = np.bincount(p1[inter_pod], minlength=tree.n_pods)
+        pad_a = max(int(np.ceil(jsq_pad_factor * per_pod.max() / h)) + 64, 64)
+
+    quanta = tuple(scheme.quanta) if scheme.edge_mode == "jsq_quant" else None
+
+    run = _build_run(h=h, n_pods=tree.n_pods, n_edges=n_edges, n_aggs=n_aggs,
+                     n_hosts=tree.n_hosts, edge_mode=scheme.edge_mode,
+                     agg_mode=scheme.agg_mode, quanta=quanta,
+                     buffer_pkts=scheme.buffer_pkts, pad_e=pad_e, pad_a=pad_a,
+                     prop=float(prop_slots), backend=backend,
+                     tables_e_keys=tuple(sorted(tables_e)),
+                     tables_a_keys=tuple(sorted(tables_a)))
+
+    noise_e = noise_a = np.zeros((1, 1, 1), np.float32)
+    if jsq:
+        noise_e = rng.random((n_edges, pad_e, h)).astype(np.float32)
+        noise_a = rng.random((n_aggs, pad_a, h)).astype(np.float32)
+
+    args = dict(p1=p1, e1=e1, p2=p2, e2=e2, dst=dst.astype(np.int32),
+                inter_pod=inter_pod, leaves_edge=leaves_edge, t_rel=t_rel,
+                tie=tie,
+                a_pre=a_pre if a_pre is not None else np.zeros(npk, np.int32),
+                c_pre=c_pre if c_pre is not None else np.zeros(npk, np.int32),
+                rand_a=rand_a, rand_c=rand_c,
+                noise_e=noise_e, noise_a=noise_a,
+                te=tuple(np.asarray(tables_e[k]) for k in sorted(tables_e)
+                         if k != "reset_wraps"),
+                ta=tuple(np.asarray(tables_a[k]) for k in sorted(tables_a)
+                         if k != "reset_wraps"),
+                reset_wraps=scheme.reset_wraps)
+
+    out = run(**args)
+    out = jax.tree_util.tree_map(np.asarray, out)
+    if bool(out["overflow"]):
+        if jsq_pad_factor > 64:
+            raise RuntimeError("JSQ pad overflow even with huge padding")
+        return simulate(tree, wl, scheme, seed=seed, prop_slots=prop_slots,
+                        collect_stats=collect_stats, links=links,
+                        backend=backend, jsq_pad_factor=jsq_pad_factor * 2)
+
+    delivery = out["delivery"]
+    flow_completion = np.full(wl.n_flows, -np.inf)
+    np.maximum.at(flow_completion, wl.flow, delivery)
+    layers = {}
+    max_q = 0.0
+    for li, name in enumerate(LAYER_NAMES):
+        cnts = out["counts"][li]
+        mq = float(out["max_occ"][li])
+        n_real = int(out["n_real"][li])
+        aw = float(out["sum_occ"][li]) / max(n_real, 1)
+        layers[name] = LayerStats(counts=cnts, max_queue=mq, avg_wait=aw)
+        max_q = max(max_q, mq)
+    return FastSimResult(delivery=delivery, flow_completion=flow_completion,
+                         cct=float(delivery.max()), layers=layers,
+                         max_queue=max_q, a_used=out["a_used"],
+                         c_used=out["c_used"])
+
+
+@functools.lru_cache(maxsize=64)
+def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
+               quanta, buffer_pkts, pad_e, pad_a, prop, backend,
+               tables_e_keys, tables_a_keys):
+    """Compile the 5-layer pipeline for a given (scheme-shape, tree) config."""
+
+    mid = n_pods * h * h   # queues per middle layer
+
+    def pipeline(p1, e1, p2, e2, dst, inter_pod, leaves_edge, t_rel, tie,
+                 a_pre, c_pre, rand_a, rand_c, noise_e, noise_a, te, ta,
+                 reset_wraps):
+        tbl_e = {k: v for k, v in zip([k for k in tables_e_keys
+                                       if k != "reset_wraps"], te)}
+        tbl_a = {k: v for k, v in zip([k for k in tables_a_keys
+                                       if k != "reset_wraps"], ta)}
+        if "rr_starts" in tbl_e:
+            tbl_e["reset_wraps"] = reset_wraps
+            tbl_a["reset_wraps"] = reset_wraps
+        overflow = jnp.asarray(False)
+        counts, max_occ, sum_occ, n_real = [], [], [], []
+
+        a_t = t_rel + prop                      # arrival at source edge switch
+        edge_switch = p1 * h + e1
+
+        # ---------- UP_E ----------
+        if edge_mode == "pre":
+            a_used = a_pre
+        elif edge_mode == "rand":
+            a_used = rand_a
+        elif edge_mode in ("rr", "rr_reset"):
+            a_used = _ranked_ports(edge_switch, a_t, tie, leaves_edge,
+                                   _select_fn_for("rr" if edge_mode == "rr"
+                                                  else "rr_reset", h, tbl_e),
+                                   backend)
+        elif edge_mode == "ofan":
+            dst_edge = p2 * h + e2
+            gkey = edge_switch * n_edges + dst_edge
+            a_used = _ranked_ports(gkey, a_t, tie, leaves_edge,
+                                   _select_fn_for("ofan", h, tbl_e), backend)
+        if edge_mode in ("jsq", "jsq_quant"):
+            a_used, d, occ, ovf = _jsq_layer(
+                edge_switch, a_t, tie, leaves_edge, n_switches=n_edges,
+                pad=pad_e, h=h, quanta=quanta, buffer_pkts=buffer_pkts,
+                noise=noise_e, backend=backend)
+            overflow |= ovf
+            qid = jnp.where(leaves_edge, edge_switch * h + a_used, -1)
+            cnt = jnp.zeros((mid,), jnp.int32).at[
+                jnp.where(qid >= 0, qid, 0)].add(jnp.where(qid >= 0, 1, 0))
+            counts.append(cnt); max_occ.append(jnp.max(occ))
+            sum_occ.append(jnp.sum(occ)); n_real.append(jnp.sum(leaves_edge))
+        else:
+            qid = jnp.where(leaves_edge, edge_switch * h + a_used, -1)
+            d, cnt, mo, so = _lindley_layer(qid, a_t, tie, mid, backend)
+            counts.append(cnt); max_occ.append(mo); sum_occ.append(so)
+            n_real.append(jnp.sum(leaves_edge))
+        a_t = jnp.where(leaves_edge, d + prop, a_t)
+
+        # ---------- UP_A ----------
+        agg_switch = p1 * h + a_used
+        if agg_mode == "pre":
+            c_used = c_pre
+        elif agg_mode == "rand":
+            c_used = rand_c
+        elif agg_mode in ("rr", "rr_reset"):
+            c_used = _ranked_ports(agg_switch, a_t, tie, inter_pod,
+                                   _select_fn_for("rr" if agg_mode == "rr"
+                                                  else "rr_reset", h, tbl_a),
+                                   backend)
+        elif agg_mode == "ofan":
+            gkey = agg_switch * n_pods + p2
+            c_used = _ranked_ports(gkey, a_t, tie, inter_pod,
+                                   _select_fn_for("ofan", h, tbl_a), backend)
+        if agg_mode in ("jsq", "jsq_quant"):
+            c_used, d, occ, ovf = _jsq_layer(
+                agg_switch, a_t, tie, inter_pod, n_switches=n_aggs,
+                pad=pad_a, h=h, quanta=quanta, buffer_pkts=buffer_pkts,
+                noise=noise_a, backend=backend)
+            overflow |= ovf
+            qid = jnp.where(inter_pod, agg_switch * h + c_used, -1)
+            cnt = jnp.zeros((mid,), jnp.int32).at[
+                jnp.where(qid >= 0, qid, 0)].add(jnp.where(qid >= 0, 1, 0))
+            counts.append(cnt); max_occ.append(jnp.max(occ))
+            sum_occ.append(jnp.sum(occ)); n_real.append(jnp.sum(inter_pod))
+        else:
+            qid = jnp.where(inter_pod, agg_switch * h + c_used, -1)
+            d, cnt, mo, so = _lindley_layer(qid, a_t, tie, mid, backend)
+            counts.append(cnt); max_occ.append(mo); sum_occ.append(so)
+            n_real.append(jnp.sum(inter_pod))
+        a_t = jnp.where(inter_pod, d + prop, a_t)
+
+        # ---------- DN_C (forced: core (a_used, c_used) -> agg a_used of p2) --
+        qid = jnp.where(inter_pod, (p2 * h + a_used) * h + c_used, -1)
+        d, cnt, mo, so = _lindley_layer(qid, a_t, tie, mid, backend)
+        counts.append(cnt); max_occ.append(mo); sum_occ.append(so)
+        n_real.append(jnp.sum(inter_pod))
+        a_t = jnp.where(inter_pod, d + prop, a_t)
+
+        # ---------- DN_A (forced: agg a_used -> edge e2) ----------
+        qid = jnp.where(leaves_edge, (p2 * h + a_used) * h + e2, -1)
+        d, cnt, mo, so = _lindley_layer(qid, a_t, tie, mid, backend)
+        counts.append(cnt); max_occ.append(mo); sum_occ.append(so)
+        n_real.append(jnp.sum(leaves_edge))
+        a_t = jnp.where(leaves_edge, d + prop, a_t)
+
+        # ---------- DN_E (forced: edge -> host) ----------
+        d, cnt, mo, so = _lindley_layer(dst, a_t, tie, n_hosts, backend)
+        counts.append(cnt); max_occ.append(mo); sum_occ.append(so)
+        n_real.append(dst.shape[0])
+        delivery = d + prop
+
+        return {"delivery": delivery,
+                "counts": counts,
+                "max_occ": jnp.stack(max_occ),
+                "sum_occ": jnp.stack(sum_occ),
+                "n_real": jnp.stack([jnp.asarray(x, jnp.int32) for x in n_real]),
+                "a_used": a_used, "c_used": c_used,
+                "overflow": overflow}
+
+    jitted = jax.jit(pipeline, static_argnames=("reset_wraps",))
+
+    def run(**kw):
+        return jitted(**kw)
+
+    return run

@@ -1,0 +1,825 @@
+"""Slotted feedback engine (the "loop" simulator).
+
+Complements ``fastsim``: a time-stepped ``lax.while_loop`` simulation carrying
+the *feedback* the layered max-plus engine cannot: ECN-marked ACKs (REPS,
+PLB), windowed congestion control (MSwift), SACK loss recovery, link failures
+with routing-convergence time ``G``, and finite buffers with drops.
+
+Model (one step = one data-packet slot):
+
+  * every queue (5 fat-tree layers, finite capacity) serves one packet/slot;
+  * served packets travel ``prop_slots`` and are enqueued at the next stage;
+    edge/aggregation port choices follow the scheme (host labels / RR or OFAN
+    pointers / (quantized) JSQ on live queue lengths);
+  * queues mark ECN on enqueue above the marking threshold and drop when full;
+  * deliveries generate ACKs returning after a constant ``ack_delay``.  ACKs
+    are assumed never to queue (they are ~1.5% of a slot) but they consume the
+    host NIC byte budget: hosts accumulate 'ack debt' and skip a data slot
+    when it reaches one packet -- the App.-B interleaving to first order;
+  * hosts pace with the ideal fixed-rate CCA at ``rho`` (§4 decoupling;
+    ``rho = rho_max`` under failures) or with MSwift;
+  * loss recovery: ideal rateless erasure coding (§4) or SACK with reordering
+    threshold ``x`` (§8.2).
+
+Failures: dead links black-hole packets silently before the convergence slot
+``G``; from ``G`` on, switches use post-failure state (OFAN IWRR over W-ECMP
+weights, RR/JSQ over locally-alive ports) and hosts re-draw labels among
+valid paths.  Host-adaptive REPS additionally avoids dead paths *before*
+convergence because labels that black-hole never return ACKs and hence are
+never recycled into the pool -- the paper's key failure-resilience mechanism.
+
+Documented approximations (vs. an event-driven byte-level simulator):
+  * ACK return time is constant (no ACK queueing);
+  * the SACK sender picks retransmit sequence numbers from the receiver
+    bitmap directly (its *trigger* is still ACK-driven);
+  * same-slot arrivals at a switch are ranked by a consistent arbitration
+    order for pointer schemes; JSQ choices within a slot see start-of-slot
+    queue lengths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .topology import FatTree, LinkState
+from .workloads import Workload
+from ..core.lb_schemes import LBScheme, precompute_host_choices
+from ..core import ofan as ofan_mod
+
+INT = jnp.int32
+
+
+@dataclasses.dataclass
+class LoopSimResult:
+    delivered_slot: np.ndarray      # per-packet first-delivery slot (-1 never)
+    flow_complete_slot: np.ndarray  # per-flow full-message-ACKed slot
+    flow_data_done_slot: np.ndarray  # per-flow all-data-delivered slot
+    cct_slots: float                # data CCT (max flow_data_done)
+    cct_acked_slots: float          # ACK-complete CCT
+    drops: int
+    retransmissions: int
+    max_queue: int
+    avg_queue: float
+    finished: bool
+    mean_cwnd: float
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopConfig:
+    cca: str = "ideal"             # 'ideal' | 'mswift'
+    loss: str = "erasure"          # 'erasure' | 'sack'
+    rho: float = 1.0               # ideal CCA rate (rho_max under failures)
+    prop_slots: int = 12
+    ack_delay: int = 74            # return path: ~6*prop + serialization
+    buffer_pkts: int = 195
+    ecn_frac: float = 0.5          # marking threshold (fraction of buffer)
+    sack_thresh: int = 32          # reordering threshold x (§8.2)
+    rto_slots: int = 400
+    ack_cost: float = 0.0206       # ack bytes / slot bytes (86/4178)
+    bdp_pkts: int = 150
+    max_slots: int = 200_000
+    plb_alpha: int = 64            # PLB: min packets between label changes
+    plb_beta: float = 0.4          # PLB: EWMA mark fraction trigger
+    # MSwift (App. H): target delay = BDP + queueing component.
+    sw_target_slots: float = 180.0
+    sw_ai: float = 1.0
+    sw_beta: float = 0.8
+    sw_max_cwnd: float = 384.0
+
+
+@dataclasses.dataclass(frozen=True)
+class _Static:
+    n: int; h: int; mid: int; F: int; P: int; Fh: int
+    n_edges: int; n_aggs: int; n_pods: int
+    edge_mode: str; agg_mode: str
+    quanta: Optional[Tuple[float, ...]]
+    adaptive_host: bool
+    plb: bool
+    cfg: LoopConfig
+
+
+def simulate(tree: FatTree, wl: Workload, scheme: LBScheme,
+             cfg: LoopConfig = LoopConfig(), seed: int = 0,
+             links: Optional[LinkState] = None,
+             g_converge: Optional[int] = None) -> LoopSimResult:
+    """Run one collective on the slotted engine.
+
+    ``links``: failed-link state (None = all up).  ``g_converge``: slot at
+    which routing state converges; None => G = infinity (never converges).
+    """
+    h = tree.half
+    rng = np.random.default_rng(seed)
+    n = tree.n_hosts
+    P = wl.n_packets
+    F = wl.n_flows
+    mid = tree.queues_per_mid_layer
+
+    fsrc = wl.flow_src.astype(np.int32)
+    fdst = wl.flow_dst.astype(np.int32)
+    fsize = wl.flow_size.astype(np.int32)
+    pkt_base = np.zeros(F + 1, dtype=np.int64)
+    np.cumsum(fsize, out=pkt_base[1:])
+    if not (wl.flow == np.repeat(np.arange(F), fsize)).all():
+        raise ValueError("loopsim expects flow-contiguous packet layout")
+
+    fp1 = tree.host_pod(fsrc).astype(np.int32)
+    fe1 = tree.host_edge(fsrc).astype(np.int32)
+    fp2 = tree.host_pod(fdst).astype(np.int32)
+    fe2 = tree.host_edge(fdst).astype(np.int32)
+    f_inter = fp1 != fp2
+    f_leaves = f_inter | (fe1 != fe2)
+
+    Fh = int(np.bincount(fsrc, minlength=n).max()) if F else 1
+    host_flows = np.full((n, Fh), -1, dtype=np.int32)
+    cnt = np.zeros(n, dtype=np.int64)
+    for f, sh in enumerate(fsrc.tolist()):
+        host_flows[sh, cnt[sh]] = f
+        cnt[sh] += 1
+
+    any_fail = links is not None and links.any_failure()
+    if links is None:
+        links = LinkState.all_up(tree)
+    alive = np.concatenate([
+        links.ea.reshape(-1),                         # UP_E (pod,edge,agg)
+        links.ac.reshape(-1),                         # UP_A (pod,agg,sub)
+        links.ac.reshape(-1),                         # DN_C (pod,agg,sub)
+        np.transpose(links.ea, (0, 2, 1)).reshape(-1),  # DN_A (pod,agg,edge)
+        np.ones(n, bool)])
+    G = np.int32(g_converge if g_converge is not None else 2**30)
+
+    # Per-(switch, destination-group) valid port sets (W-ECMP reachability):
+    # used by switch schemes after routing convergence.  Edge switches group
+    # destinations by destination edge switch, aggregation switches by
+    # destination pod (the same consolidation OFAN exploits).
+    n_edges = tree.n_edge_switches
+    n_aggs = tree.n_agg_switches
+
+    def _port_lists(valid3d):  # (S, Gd, h) bool -> padded lists + counts
+        S, Gd, _ = valid3d.shape
+        ports = np.zeros((S * Gd, h), np.int32)
+        cnts = np.zeros(S * Gd, np.int32)
+        flat = valid3d.reshape(S * Gd, h)
+        for i in range(S * Gd):
+            alive_p = np.flatnonzero(flat[i])
+            if len(alive_p) == 0:
+                alive_p = np.arange(h)
+            reps = int(np.ceil(h / len(alive_p)))
+            ports[i] = np.tile(alive_p, reps)[:h]
+            cnts[i] = len(alive_p)
+        return ports, cnts
+
+    # edge: valid uplink a for (src edge (p1,e1), dst edge (p2,e2))
+    valid_e = np.zeros((n_edges, n_edges, h), bool)
+    for se in range(n_edges):
+        sp, sei = divmod(se, h)
+        for de in range(n_edges):
+            dp, dei = divmod(de, h)
+            if se == de:
+                valid_e[se, de] = links.ea[sp, sei, :]
+                continue
+            valid_e[se, de] = links.wecmp_edge_weights(sp, sei, dp, dei) > 0
+    # agg: valid core sub-link c for (agg (p,a), dst pod)
+    valid_a = np.zeros((n_aggs, tree.n_pods, h), bool)
+    for ga in range(n_aggs):
+        sp, ai = divmod(ga, h)
+        for dp in range(tree.n_pods):
+            if dp == sp:
+                valid_a[ga, dp] = links.ac[sp, ai, :]  # unused southbound
+            else:
+                valid_a[ga, dp] = links.ac[sp, ai, :] & links.ac[dp, ai, :]
+    e_ports, e_pcnt = _port_lists(valid_e)
+    a_ports, a_pcnt = _port_lists(valid_a)
+    e_dead = ~valid_e
+    a_dead = ~valid_a
+
+    pre_kw = dict(tree=tree, flow=wl.flow, seq=wl.seq, flow_src=fsrc,
+                  flow_dst=fdst, rng=rng)
+    a_stale = c_stale = a_conv = c_conv = None
+    pv = None
+    if scheme.edge_mode == "pre":
+        a_stale, c_stale = precompute_host_choices(scheme, path_valid=None,
+                                                   **pre_kw)
+        if any_fail:
+            pv = np.stack([links.path_matrix(int(s_), int(d_))
+                           for s_, d_ in zip(fsrc, fdst)])
+            a_conv, c_conv = precompute_host_choices(scheme, path_valid=pv,
+                                                     **pre_kw)
+        else:
+            a_conv, c_conv = a_stale, c_stale
+
+    # Valid-path list per flow: post-convergence the W-ECMP rehash maps any
+    # flow label onto an alive path (paper §5.2).  Used by REPS/PLB labels.
+    f_vpaths = np.tile(np.arange(h * h, dtype=np.int32), (F, 1))
+    f_vcnt = np.full(F, h * h, dtype=np.int32)
+    if any_fail and scheme.adaptive_host:
+        if pv is None:
+            pv = np.stack([links.path_matrix(int(s_), int(d_))
+                           for s_, d_ in zip(fsrc, fdst)])
+        for fi in range(F):
+            cand = np.flatnonzero(pv[fi].reshape(-1))
+            if len(cand) == 0:
+                cand = np.arange(h * h)
+            reps = int(np.ceil(h * h / len(cand)))
+            f_vpaths[fi] = np.tile(cand, reps)[:h * h]
+            f_vcnt[fi] = len(cand)
+
+    rand_pool = rng.integers(0, h * h, size=65536).astype(np.int32)
+
+    ofan_stale = ofan_conv = None
+    rr_starts_e = rng.integers(0, h, tree.n_edge_switches).astype(np.int32)
+    rr_starts_a = rng.integers(0, h, tree.n_agg_switches).astype(np.int32)
+    if scheme.edge_mode == "ofan":
+        ofan_stale = ofan_mod.build_tables(tree, rng, links=None)
+        ofan_conv = (ofan_mod.build_tables(tree, rng, links=links)
+                     if any_fail else ofan_stale)
+
+    static = _Static(
+        n=n, h=h, mid=mid, F=F, P=P, Fh=Fh,
+        n_edges=tree.n_edge_switches, n_aggs=tree.n_agg_switches,
+        n_pods=tree.n_pods,
+        edge_mode=scheme.edge_mode, agg_mode=scheme.agg_mode,
+        quanta=(tuple(scheme.quanta) if scheme.edge_mode == "jsq_quant"
+                else None),
+        adaptive_host=scheme.adaptive_host,
+        plb=scheme.name == "host_flowlet_ar",
+        cfg=cfg)
+
+    tables = dict(
+        fsrc=fsrc, fdst=fdst, fsize=fsize, pkt_base=pkt_base,
+        fp1=fp1, fe1=fe1, fp2=fp2, fe2=fe2,
+        f_inter=f_inter, f_leaves=f_leaves, host_flows=host_flows,
+        alive=alive, G=G,
+        e_ports=e_ports, e_pcnt=e_pcnt, a_ports=a_ports, a_pcnt=a_pcnt,
+        e_dead=e_dead, a_dead=a_dead,
+        a_stale=_z(a_stale, P), c_stale=_z(c_stale, P),
+        a_conv=_z(a_conv, P), c_conv=_z(c_conv, P),
+        f_vpaths=f_vpaths, f_vcnt=f_vcnt,
+        rand_pool=rand_pool,
+        rr_starts_e=rr_starts_e, rr_starts_a=rr_starts_a,
+        ofan_e_orders=_tbl(ofan_stale, ofan_conv, "edge_orders"),
+        ofan_e_starts=_tbl(ofan_stale, ofan_conv, "edge_starts"),
+        ofan_e_len=_tbl(ofan_stale, ofan_conv, "edge_len"),
+        ofan_a_orders=_tbl(ofan_stale, ofan_conv, "agg_orders"),
+        ofan_a_starts=_tbl(ofan_stale, ofan_conv, "agg_starts"),
+        ofan_a_len=_tbl(ofan_stale, ofan_conv, "agg_len"),
+        seed=np.int64(seed),
+    )
+    out = _run(static, tables)
+    out = jax.tree_util.tree_map(np.asarray, out)
+
+    comp = out["flow_complete"]
+    data_done = out["f_data_done"]
+    finished = bool((comp >= 0).all())
+    return LoopSimResult(
+        delivered_slot=out["delivered_slot"],
+        flow_complete_slot=comp,
+        flow_data_done_slot=data_done,
+        cct_slots=float(data_done.max()) if (data_done >= 0).all()
+        else float(cfg.max_slots),
+        cct_acked_slots=float(comp.max()) if finished else float(cfg.max_slots),
+        drops=int(out["drops"]),
+        retransmissions=int(out["rtx"]),
+        max_queue=int(out["max_q"]),
+        avg_queue=float(out["sum_q"]) / max(float(out["enq_events"]), 1.0),
+        finished=finished,
+        mean_cwnd=float(out["mean_cwnd"]),
+    )
+
+
+def _z(x, P):
+    return np.zeros(P, np.int32) if x is None else x.astype(np.int32)
+
+
+def _tbl(stale, conv, attr):
+    if stale is None:
+        return np.zeros((2, 1, 1) if attr.endswith("orders") else (2, 1),
+                        np.int32)
+    sarr, carr = getattr(stale, attr), getattr(conv, attr)
+    if sarr.ndim == 2 and sarr.shape[1] != carr.shape[1]:
+        w = max(sarr.shape[1], carr.shape[1])
+        def padw(x):
+            reps = int(np.ceil(w / x.shape[1]))
+            return np.tile(x, (1, reps))[:, :w]
+        sarr, carr = padw(sarr), padw(carr)
+    return np.stack([sarr, carr])
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled(static: _Static, shapes: tuple):
+    return jax.jit(functools.partial(_engine, static))
+
+
+def _run(static: _Static, tables: dict):
+    shapes = tuple(sorted((k, np.asarray(v).shape) for k, v in tables.items()))
+    fn = _compiled(static, shapes)
+    return fn(**{k: jnp.asarray(v) for k, v in tables.items()})
+
+
+def _rank_by(keys, valid):
+    """Rank of each element among same-key valid elements (sort-based)."""
+    m = keys.shape[0]
+    k = jnp.where(valid, keys, jnp.int32(2**30))
+    order = jnp.argsort(k, stable=True)
+    ks = k[order]
+    idx = jnp.arange(m, dtype=jnp.float32)
+    flag = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+    start = jax.lax.associative_scan(
+        lambda a, b: (jnp.where(b[1], b[0], jnp.maximum(a[0], b[0])),
+                      a[1] | b[1]),
+        (jnp.where(flag, idx, -1.0), flag))[0]
+    rank_sorted = (idx - start).astype(INT)
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(m))
+    return jnp.where(valid, rank_sorted[inv], 0)
+
+
+def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
+            f_inter, f_leaves, host_flows, alive, G,
+            e_ports, e_pcnt, a_ports, a_pcnt, e_dead, a_dead,
+            a_stale, c_stale, a_conv, c_conv, f_vpaths, f_vcnt, rand_pool,
+            rr_starts_e, rr_starts_a,
+            ofan_e_orders, ofan_e_starts, ofan_e_len,
+            ofan_a_orders, ofan_a_starts, ofan_a_len, seed):
+    cfg = s.cfg
+    n, h, mid, F, P, Fh = s.n, s.h, s.mid, s.F, s.P, s.Fh
+    CAP = cfg.buffer_pkts
+    NQ = 4 * mid + n
+    DELAY = max(cfg.prop_slots, 1) + 1
+    MOVE = 4 * mid + n
+    ADELAY = cfg.ack_delay + 1
+    ecn_thresh = jnp.int32(max(1, int(cfg.ecn_frac * CAP)))
+    OFF = (0, mid, 2 * mid, 3 * mid, 4 * mid)
+    PBASE = pkt_base[:F]
+
+    st0 = dict(
+        t=jnp.int32(0),
+        qbuf=jnp.full((NQ, CAP), -1, INT),
+        qhead=jnp.zeros((NQ,), INT),
+        qcnt=jnp.zeros((NQ,), INT),
+        dl_pkt=jnp.full((DELAY, MOVE), -1, INT),
+        dl_q=jnp.zeros((DELAY, MOVE), INT),
+        al_pkt=jnp.full((ADELAY, n), -1, INT),
+        p_sent_t=jnp.full((P,), -1, INT),
+        p_ecn=jnp.zeros((P,), bool),
+        p_recv=jnp.zeros((P,), bool),
+        p_deliv=jnp.full((P,), -1, INT),
+        p_a=jnp.zeros((P,), INT),
+        p_c=jnp.zeros((P,), INT),
+        f_next=jnp.zeros((F,), INT),
+        f_sent=jnp.zeros((F,), INT),
+        f_acked=jnp.zeros((F,), INT),
+        f_delivered=jnp.zeros((F,), INT),
+        f_cum=jnp.zeros((F,), INT),
+        f_hi=jnp.full((F,), -1, INT),
+        f_complete=jnp.full((F,), -1, INT),
+        f_data_done=jnp.full((F,), -1, INT),
+        f_last_ack_t=jnp.full((F,), -1, INT),
+        f_lost=jnp.zeros((F,), INT),
+        f_cwnd=jnp.full((F,), jnp.float32(min(cfg.bdp_pkts * 2.0,
+                                              cfg.sw_max_cwnd))),
+        f_last_dec=jnp.full((F,), -10**6, INT),
+        f_label=(rand_pool[jnp.arange(F) % rand_pool.shape[0]]).astype(INT),
+        f_label_cnt=jnp.zeros((F,), INT),
+        f_mark_ewma=jnp.zeros((F,), jnp.float32),
+        f_draw=jnp.arange(F, dtype=INT) * 31 + 1,
+        pool_lab=jnp.zeros((F, 64), INT),
+        pool_cnt=jnp.zeros((F,), INT),
+        h_rr=jnp.zeros((n,), INT),
+        h_credit=jnp.zeros((n,), jnp.float32),
+        h_ackdebt=jnp.zeros((n,), jnp.float32),
+        ptr_e=jnp.zeros((s.n_edges * s.n_edges,) if s.edge_mode == "ofan"
+                        else (s.n_edges,), INT),
+        ptr_a=jnp.zeros((s.n_aggs * s.n_pods,) if s.agg_mode == "ofan"
+                        else (s.n_aggs,), INT),
+        drops=jnp.int32(0),
+        rtx=jnp.int32(0),
+        max_q=jnp.int32(0),
+        sum_q=jnp.float32(0.0),
+        enq_events=jnp.int32(0),
+        key=jax.random.PRNGKey(seed.astype(jnp.uint32) if hasattr(seed, "astype")
+                               else 0),
+    )
+
+    def step(st_in):
+        st = dict(st_in)
+        t = st["t"]
+        key, k1, k2, k3 = jax.random.split(st["key"], 4)
+        st["key"] = key
+        converged = t >= G
+        ci = converged.astype(INT)
+
+        # ---- 1. serve all queues -------------------------------------------
+        qcnt = st["qcnt"]
+        has = qcnt > 0
+        headpos = st["qhead"]
+        popped = jnp.where(has, st["qbuf"][jnp.arange(NQ), headpos], -1)
+        st["qhead"] = jnp.where(has, (headpos + 1) % CAP, headpos)
+        st["qcnt"] = jnp.where(has, qcnt - 1, qcnt)
+
+        # ---- 2. route popped packets ---------------------------------------
+        qids = jnp.arange(NQ)
+        stg = jnp.clip(qids // mid, 0, 4)
+        pk = popped
+        valid = pk >= 0
+        pkc = jnp.maximum(pk, 0)
+        pf = jnp.where(valid,
+                       jnp.searchsorted(pkt_base, pk, side="right") - 1,
+                       0).astype(INT)
+        a_ch = st["p_a"][pkc]
+        c_ch = st["p_c"][pkc]
+        p2 = fp2[pf]
+        e2 = fe2[pf]
+        nq_from_0 = jnp.where(f_inter[pf],
+                              OFF[1] + (fp1[pf] * h + a_ch) * h + c_ch,
+                              OFF[3] + (p2 * h + a_ch) * h + e2)
+        nq_from_1 = OFF[2] + (p2 * h + a_ch) * h + c_ch
+        nq_from_2 = OFF[3] + (p2 * h + a_ch) * h + e2
+        nq_from_3 = OFF[4] + fdst[pf]
+        nxt = jnp.select([stg == 0, stg == 1, stg == 2, stg == 3],
+                         [nq_from_0, nq_from_1, nq_from_2, nq_from_3], -2)
+        nxt = jnp.where(valid, nxt, -1)
+
+        # ---- 3. deliveries (stage-4 pops) ----------------------------------
+        deliv = valid & (nxt == -2)
+        dt = t + jnp.int32(cfg.prop_slots)
+        first_del = deliv & ~st["p_recv"][pkc]
+        st["p_deliv"] = st["p_deliv"].at[jnp.where(first_del, pk, P)].set(
+            dt, mode="drop")
+        st["p_recv"] = st["p_recv"].at[jnp.where(deliv, pk, P)].set(
+            True, mode="drop")
+        # Erasure coding is rateless: every delivered symbol counts toward
+        # decoding; SACK needs unique packets.
+        counts_delivery = deliv if cfg.loss == "erasure" else first_del
+        st["f_delivered"] = st["f_delivered"].at[
+            jnp.where(counts_delivery, pf, F)].add(1, mode="drop")
+        data_done_now = (st["f_data_done"] < 0) & (st["f_delivered"] >= fsize)
+        st["f_data_done"] = jnp.where(data_done_now, dt, st["f_data_done"])
+        # ACKs: deliveries only come from DN_E pops (<= n)
+        dn_pk = popped[OFF[4]:]
+        dn_ok = deliv[OFF[4]:]
+        st["al_pkt"] = st["al_pkt"].at[t % ADELAY, :].set(
+            jnp.where(dn_ok, dn_pk, -1))
+
+        # ---- 4. fabric moves ------------------------------------------------
+        mover = valid & (nxt >= 0)
+        dslot = (t + jnp.int32(cfg.prop_slots)) % DELAY
+        st["dl_pkt"] = st["dl_pkt"].at[dslot, :4 * mid].set(
+            jnp.where(mover, pk, -1)[:4 * mid])
+        st["dl_q"] = st["dl_q"].at[dslot, :4 * mid].set(
+            jnp.where(mover, nxt, 0)[:4 * mid])
+
+        # ---- 5. host injection ----------------------------------------------
+        inflight = st["f_sent"] - st["f_acked"] - st["f_lost"]
+        if cfg.cca == "ideal":
+            window_ok = jnp.ones((F,), bool)
+        else:
+            window_ok = inflight.astype(jnp.float32) < st["f_cwnd"]
+        if cfg.loss == "erasure":
+            remaining = ((st["f_acked"] < fsize)
+                         & (inflight < (fsize - st["f_acked"]) + cfg.bdp_pkts))
+            need_rtx = jnp.zeros((F,), bool)
+        else:
+            gap = st["f_hi"] + 1 - st["f_cum"]
+            need_rtx = (st["f_hi"] >= 0) & (gap > cfg.sack_thresh) & (
+                st["f_cum"] < fsize)
+            remaining = (st["f_next"] < fsize) | need_rtx
+        sendable = window_ok & remaining & (st["f_complete"] < 0)
+
+        hf = host_flows
+        hf_ok = jnp.where(hf >= 0, sendable[jnp.maximum(hf, 0)], False)
+        rrp = st["h_rr"][:, None]
+        prio = (jnp.arange(Fh)[None, :] - rrp) % Fh
+        prio = jnp.where(hf_ok, prio, Fh + 1)
+        pick = jnp.argmin(prio, axis=1)
+        can_send = jnp.take_along_axis(hf_ok, pick[:, None], axis=1)[:, 0]
+        st["h_credit"] = jnp.minimum(st["h_credit"] + jnp.float32(cfg.rho), 4.0)
+        debt_ok = st["h_ackdebt"] < 1.0
+        st["h_ackdebt"] = jnp.where(~debt_ok, st["h_ackdebt"] - 1.0,
+                                    st["h_ackdebt"])
+        do_send = can_send & (st["h_credit"] >= 1.0) & debt_ok
+        st["h_credit"] = jnp.where(do_send, st["h_credit"] - 1.0,
+                                   st["h_credit"])
+        st["h_rr"] = jnp.where(do_send, (pick + 1) % Fh,
+                               st["h_rr"]).astype(INT)
+
+        sf = jnp.where(do_send, hf[jnp.arange(n), pick], -1)
+        sfv = jnp.maximum(sf, 0)
+        seq_fresh = st["f_next"][sfv]
+        if cfg.loss == "sack":
+            base = st["f_cum"][sfv]
+            offs = jnp.arange(64)[None, :]
+            cand = jnp.minimum(base[:, None] + offs, fsize[sfv][:, None] - 1)
+            got = st["p_recv"][PBASE[sfv][:, None] + cand]
+            first_missing = cand[jnp.arange(n), jnp.argmin(got, axis=1)]
+            is_rtx = need_rtx[sfv] & do_send
+            seq = jnp.where(is_rtx, first_missing,
+                            jnp.minimum(seq_fresh, fsize[sfv] - 1))
+            # if no fresh left and not rtx-triggered, resend first missing too
+            exhausted = (seq_fresh >= fsize[sfv]) & ~is_rtx & do_send
+            seq = jnp.where(exhausted, first_missing, seq)
+            is_rtx = is_rtx | exhausted
+            st["rtx"] = st["rtx"] + is_rtx.sum()
+        else:
+            is_rtx = jnp.zeros((n,), bool)
+            seq = jnp.where(seq_fresh < fsize[sfv], seq_fresh,
+                            st["f_sent"][sfv] % jnp.maximum(fsize[sfv], 1))
+        pid = (PBASE[sfv] + jnp.clip(seq, 0, fsize[sfv] - 1)).astype(INT)
+
+        fresh_ok = do_send & ~is_rtx & (seq_fresh < fsize[sfv])
+        st["f_next"] = st["f_next"].at[jnp.where(fresh_ok, sf, F)].add(
+            1, mode="drop")
+        first_send = do_send & (st["f_sent"][sfv] == 0)
+        st["f_last_ack_t"] = st["f_last_ack_t"].at[
+            jnp.where(first_send, sf, F)].set(t, mode="drop")
+        st["f_sent"] = st["f_sent"].at[jnp.where(do_send, sf, F)].add(
+            1, mode="drop")
+        st["p_sent_t"] = st["p_sent_t"].at[jnp.where(do_send, pid, P)].set(
+            t, mode="drop")
+
+        # ---- 6. edge port choice for injected packets -----------------------
+        # REPS / PLB label machinery
+        draw_idx = (st["f_draw"][sfv] * 48271 + 12345) % rand_pool.shape[0]
+        fresh_lab = rand_pool[draw_idx]
+        has_pool = st["pool_cnt"][sfv] > 0
+        pooled = st["pool_lab"][sfv, jnp.maximum(st["pool_cnt"][sfv] - 1, 0)]
+        if s.adaptive_host and not s.plb:      # REPS
+            lab = jnp.where(has_pool, pooled, fresh_lab)
+            st["pool_cnt"] = st["pool_cnt"].at[
+                jnp.where(do_send & has_pool, sf, F)].add(-1, mode="drop")
+        elif s.plb:
+            lab = st["f_label"][sfv]
+        else:
+            lab = fresh_lab
+        st["f_draw"] = st["f_draw"] + jnp.zeros_like(st["f_draw"]).at[
+            jnp.where(do_send, sf, F)].add(7, mode="drop")
+
+        if s.edge_mode == "pre":
+            if s.adaptive_host:
+                # post-convergence W-ECMP rehash: labels land on valid paths
+                eff = jnp.where(converged,
+                                f_vpaths[sfv, lab % f_vcnt[sfv]], lab)
+                a_new = ((eff // h) % h).astype(INT)
+                c_new = (eff % h).astype(INT)
+            else:
+                a_new = jnp.where(converged, a_conv[pid], a_stale[pid])
+                c_new = jnp.where(converged, c_conv[pid], c_stale[pid])
+        elif s.edge_mode == "rand":
+            sw = (fp1[sfv] * h + fe1[sfv]).astype(INT)
+            de = (fp2[sfv] * h + fe2[sfv]).astype(INT)
+            gp = sw * s.n_edges + de
+            r = jax.random.randint(k1, (n,), 0, h * h)
+            a_naive = (r // h).astype(INT)
+            a_live = e_ports[gp, r % jnp.maximum(e_pcnt[gp], 1)].astype(INT)
+            a_new = jnp.where(converged, a_live, a_naive)
+            c_new = (r % h).astype(INT)
+        elif s.edge_mode in ("rr", "rr_reset", "ofan"):
+            sw = (fp1[sfv] * h + fe1[sfv]).astype(INT)
+            north = do_send & f_leaves[sfv]
+            de = (fp2[sfv] * h + fe2[sfv]).astype(INT)
+            gp = sw * s.n_edges + de
+            if s.edge_mode == "ofan":
+                gid = gp
+                rk = _rank_by(gid, north)
+                ctr = st["ptr_e"][gid] + rk
+                L = jnp.maximum(ofan_e_len[ci, gid], 1)
+                a_new = ofan_e_orders[
+                    ci, gid, (ofan_e_starts[ci, gid] + ctr) % L].astype(INT)
+                st["ptr_e"] = st["ptr_e"].at[
+                    jnp.where(north, gid, st["ptr_e"].shape[0])].add(
+                    1, mode="drop")
+            else:
+                rk = _rank_by(sw, north)
+                ctr = st["ptr_e"][sw] + rk
+                # pre-convergence: all ports; post: W-ECMP-valid for dest
+                naive = ((rr_starts_e[sw] + ctr) % h).astype(INT)
+                pcn = jnp.maximum(e_pcnt[gp], 1)
+                live = e_ports[gp, (rr_starts_e[sw] + ctr) % pcn].astype(INT)
+                a_new = jnp.where(converged, live, naive)
+                st["ptr_e"] = st["ptr_e"].at[
+                    jnp.where(north, sw, s.n_edges)].add(1, mode="drop")
+            c_new = jnp.zeros((n,), INT)
+        else:  # jsq / jsq_quant at edge
+            sw = (fp1[sfv] * h + fe1[sfv]).astype(INT)
+            de = (fp2[sfv] * h + fe2[sfv]).astype(INT)
+            qbase = OFF[0] + sw * h
+            lens = st["qcnt"][qbase[:, None] + jnp.arange(h)[None, :]]
+            nz = jax.random.uniform(k1, (n, h))
+            if s.quanta is None:
+                score = lens.astype(jnp.float32) + nz * 1e-3
+            else:
+                thr = jnp.asarray(s.quanta, jnp.float32) * CAP
+                bins = jnp.sum(lens[:, :, None] > thr[None, None, :], axis=2)
+                score = bins.astype(jnp.float32) + nz * 0.5
+            score = score + jnp.where(converged & e_dead[sw, de], 1e9, 0.0)
+            a_new = jnp.argmin(score, axis=1).astype(INT)
+            c_new = jnp.zeros((n,), INT)
+
+        st["p_a"] = st["p_a"].at[jnp.where(do_send, pid, P)].set(
+            a_new, mode="drop")
+        st["p_c"] = st["p_c"].at[jnp.where(do_send, pid, P)].set(
+            c_new, mode="drop")
+        st["f_label_cnt"] = st["f_label_cnt"].at[
+            jnp.where(do_send, sf, F)].add(1, mode="drop")
+
+        inj_q = jnp.where(f_leaves[sfv],
+                          OFF[0] + (fp1[sfv] * h + fe1[sfv]) * h + a_new,
+                          OFF[4] + fdst[sfv])
+        st["dl_pkt"] = st["dl_pkt"].at[dslot, 4 * mid:].set(
+            jnp.where(do_send, pid, -1))
+        st["dl_q"] = st["dl_q"].at[dslot, 4 * mid:].set(
+            jnp.where(do_send, inj_q, 0))
+
+        # ---- 7. arrivals: agg uplink choice then enqueue ---------------------
+        arr_slot = t % DELAY
+        apk = st["dl_pkt"][arr_slot]
+        aq = st["dl_q"][arr_slot]
+        avalid = apk >= 0
+        apkc = jnp.maximum(apk, 0)
+        af = jnp.where(avalid,
+                       jnp.searchsorted(pkt_base, apk, "right") - 1,
+                       0).astype(INT)
+        to_agg = avalid & (aq >= OFF[1]) & (aq < OFF[2])
+        asw = jnp.clip((aq - OFF[1]) // h, 0, s.n_aggs - 1).astype(INT)
+        gpa = asw * s.n_pods + fp2[af]
+        if s.agg_mode in ("pre", "rand"):
+            c_fin = st["p_c"][apkc]
+            if s.agg_mode == "rand":
+                r = jax.random.randint(k2, apk.shape, 0, h)
+                c_live = a_ports[gpa, r % jnp.maximum(a_pcnt[gpa], 1)]
+                c_fin = jnp.where(converged, c_live, r).astype(INT)
+        elif s.agg_mode in ("rr", "rr_reset", "ofan"):
+            if s.agg_mode == "ofan":
+                gid = gpa
+                rk = _rank_by(gid, to_agg)
+                ctr = st["ptr_a"][gid] + rk
+                L = jnp.maximum(ofan_a_len[ci, gid], 1)
+                c_fin = ofan_a_orders[
+                    ci, gid, (ofan_a_starts[ci, gid] + ctr) % L].astype(INT)
+                st["ptr_a"] = st["ptr_a"].at[
+                    jnp.where(to_agg, gid, st["ptr_a"].shape[0])].add(
+                    1, mode="drop")
+            else:
+                rk = _rank_by(asw, to_agg)
+                ctr = st["ptr_a"][asw] + rk
+                naive = ((rr_starts_a[asw] + ctr) % h).astype(INT)
+                pcn = jnp.maximum(a_pcnt[gpa], 1)
+                live = a_ports[gpa, (rr_starts_a[asw] + ctr) % pcn].astype(INT)
+                c_fin = jnp.where(converged, live, naive)
+                st["ptr_a"] = st["ptr_a"].at[
+                    jnp.where(to_agg, asw, s.n_aggs)].add(1, mode="drop")
+        else:  # jsq at agg
+            qbase = OFF[1] + asw * h
+            lens = st["qcnt"][qbase[:, None] + jnp.arange(h)[None, :]]
+            nz = jax.random.uniform(k2, lens.shape)
+            if s.quanta is None:
+                score = lens.astype(jnp.float32) + nz * 1e-3
+            else:
+                thr = jnp.asarray(s.quanta, jnp.float32) * CAP
+                bins = jnp.sum(lens[:, :, None] > thr[None, None, :], axis=2)
+                score = bins.astype(jnp.float32) + nz * 0.5
+            score = score + jnp.where(converged & a_dead[asw, fp2[af]],
+                                      1e9, 0.0)
+            c_fin = jnp.argmin(score, axis=1).astype(INT)
+        st["p_c"] = st["p_c"].at[jnp.where(to_agg, apk, P)].set(
+            c_fin, mode="drop")
+        aq = jnp.where(to_agg, OFF[1] + asw * h + c_fin, aq)
+
+        # ---- 8. enqueue (drops, ECN, failure black-holing) -------------------
+        aqc = jnp.clip(aq, 0, NQ - 1)
+        dead = ~alive[aqc]
+        enq_try = avalid & ~dead
+        st["drops"] = st["drops"] + (avalid & dead).sum()
+        rkq = _rank_by(aq, enq_try)
+        room = st["qcnt"][aqc] + rkq < CAP
+        do_enq = enq_try & room
+        st["drops"] = st["drops"] + (enq_try & ~room).sum()
+        pos = (st["qhead"][aqc] + st["qcnt"][aqc] + rkq) % CAP
+        st["qbuf"] = st["qbuf"].at[jnp.where(do_enq, aq, NQ),
+                                   jnp.where(do_enq, pos, 0)].set(
+            jnp.where(do_enq, apk, -1), mode="drop")
+        occ_after = st["qcnt"][aqc] + rkq + 1
+        marked = do_enq & (occ_after > ecn_thresh)
+        st["p_ecn"] = st["p_ecn"].at[jnp.where(marked, apk, P)].set(
+            True, mode="drop")
+        st["qcnt"] = st["qcnt"].at[jnp.where(do_enq, aq, NQ)].add(
+            1, mode="drop")
+        st["max_q"] = jnp.maximum(st["max_q"], st["qcnt"].max())
+        st["sum_q"] = st["sum_q"] + jnp.where(do_enq, occ_after, 0).sum()
+        st["enq_events"] = st["enq_events"] + do_enq.sum()
+        st["dl_pkt"] = st["dl_pkt"].at[arr_slot].set(-1)
+
+        # ---- 9. ACK processing -----------------------------------------------
+        ak = st["al_pkt"][(t + 1) % ADELAY]   # written ack_delay slots ago
+        aok = ak >= 0
+        akc = jnp.maximum(ak, 0)
+        akf = jnp.where(aok, jnp.searchsorted(pkt_base, ak, "right") - 1,
+                        0).astype(INT)
+        st["al_pkt"] = st["al_pkt"].at[(t + 1) % ADELAY].set(-1)
+        st["h_ackdebt"] = st["h_ackdebt"].at[
+            jnp.where(aok, fsrc[akf], n)].add(cfg.ack_cost, mode="drop")
+        st["f_acked"] = st["f_acked"].at[jnp.where(aok, akf, F)].add(
+            1, mode="drop")
+        st["f_last_ack_t"] = st["f_last_ack_t"].at[
+            jnp.where(aok, akf, F)].set(t, mode="drop")
+        aseq = (ak - PBASE[akf]).astype(INT)
+        st["f_hi"] = st["f_hi"].at[jnp.where(aok, akf, F)].max(
+            jnp.where(aok, aseq, -1), mode="drop")
+        if cfg.loss == "sack":
+            for _ in range(2):
+                cum = st["f_cum"]
+                offs = jnp.arange(4)[None, :]
+                cand = jnp.minimum(cum[:, None] + offs, fsize[:, None] - 1)
+                got = st["p_recv"][PBASE[:, None] + cand] & (
+                    cum[:, None] + offs < fsize[:, None])
+                adv = jnp.sum(jnp.cumprod(got, axis=1), axis=1).astype(INT)
+                st["f_cum"] = jnp.minimum(cum + adv, fsize)
+        mk = st["p_ecn"][akc]
+        if s.adaptive_host and not s.plb:      # REPS recycle
+            lab_back = st["p_a"][akc] * h + st["p_c"][akc]
+            good = aok & ~mk
+            pc0 = st["pool_cnt"][jnp.maximum(akf, 0)]
+            st["pool_lab"] = st["pool_lab"].at[
+                jnp.where(good, akf, F), jnp.minimum(pc0, 63)].set(
+                lab_back, mode="drop")
+            st["pool_cnt"] = jnp.minimum(
+                st["pool_cnt"].at[jnp.where(good, akf, F)].add(
+                    1, mode="drop"), 64)
+        if s.plb:
+            w = jnp.float32(0.125)
+            dec = jnp.zeros((F,), jnp.float32).at[
+                jnp.where(aok, akf, F)].add(1.0, mode="drop")
+            inc = jnp.zeros((F,), jnp.float32).at[
+                jnp.where(aok & mk, akf, F)].add(1.0, mode="drop")
+            st["f_mark_ewma"] = (st["f_mark_ewma"] * (1 - w * dec)
+                                 + w * inc)
+            change = ((st["f_mark_ewma"] > cfg.plb_beta)
+                      & (st["f_label_cnt"] > cfg.plb_alpha))
+            newlab = rand_pool[(st["f_draw"] * 104729 + 13)
+                               % rand_pool.shape[0]]
+            st["f_label"] = jnp.where(change, newlab,
+                                      st["f_label"]).astype(INT)
+            st["f_label_cnt"] = jnp.where(change, 0,
+                                          st["f_label_cnt"]).astype(INT)
+            st["f_draw"] = st["f_draw"] + change.astype(INT)
+        if cfg.cca == "mswift":
+            delay = (t - st["p_sent_t"][akc]).astype(jnp.float32)
+            over = delay > cfg.sw_target_slots
+            cw = st["f_cwnd"]
+            inc = jnp.where(aok & ~over,
+                            cfg.sw_ai / jnp.maximum(cw[akf], 1.0), 0.0)
+            cw = cw.at[jnp.where(aok, akf, F)].add(inc, mode="drop")
+            can_dec = (t - st["f_last_dec"][akf]) > (cfg.ack_delay
+                                                     + cfg.prop_slots)
+            factor = jnp.clip(1.0 - cfg.sw_beta
+                              * (delay - cfg.sw_target_slots)
+                              / jnp.maximum(delay, 1.0), 0.5, 1.0)
+            dec_sel = aok & over & can_dec
+            cw = cw.at[jnp.where(dec_sel, akf, F)].multiply(
+                jnp.where(dec_sel, factor, 1.0), mode="drop")
+            st["f_cwnd"] = jnp.clip(cw, 1.0, cfg.sw_max_cwnd)
+            st["f_last_dec"] = st["f_last_dec"].at[
+                jnp.where(dec_sel, akf, F)].set(t, mode="drop")
+
+        # ---- 10. timeouts -----------------------------------------------------
+        inflight2 = st["f_sent"] - st["f_acked"] - st["f_lost"]
+        rto_fire = ((st["f_sent"] > 0) & (st["f_complete"] < 0)
+                    & (inflight2 > 0)
+                    & (t - st["f_last_ack_t"] > cfg.rto_slots))
+        st["f_lost"] = st["f_lost"] + jnp.where(rto_fire, inflight2, 0)
+        st["f_last_ack_t"] = jnp.where(rto_fire, t, st["f_last_ack_t"])
+        if cfg.loss == "sack":
+            st["f_next"] = jnp.where(rto_fire,
+                                     jnp.minimum(st["f_next"], st["f_cum"]),
+                                     st["f_next"])
+        if cfg.cca == "mswift":
+            st["f_cwnd"] = jnp.where(rto_fire, 1.0, st["f_cwnd"])  # freeze
+
+        # ---- 11. flow completion ----------------------------------------------
+        if cfg.loss == "sack":
+            done_now = (st["f_complete"] < 0) & (st["f_cum"] >= fsize)
+        else:
+            done_now = (st["f_complete"] < 0) & (st["f_acked"] >= fsize)
+        st["f_complete"] = jnp.where(done_now, t, st["f_complete"])
+
+        st["t"] = t + 1
+        return st
+
+    def cond(st):
+        return (st["f_complete"] < 0).any() & (st["t"] < cfg.max_slots)
+
+    final = jax.lax.while_loop(cond, step, st0)
+    return {
+        "delivered_slot": final["p_deliv"],
+        "flow_complete": final["f_complete"],
+        "f_data_done": final["f_data_done"],
+        "drops": final["drops"],
+        "rtx": final["rtx"],
+        "max_q": final["max_q"],
+        "sum_q": final["sum_q"],
+        "enq_events": final["enq_events"],
+        "mean_cwnd": jnp.mean(final["f_cwnd"]),
+    }

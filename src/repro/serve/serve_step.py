@@ -1,0 +1,84 @@
+"""Serving steps: sharded prefill and decode over the model zoo.
+
+``build_serve_fns`` returns jitted (prefill, decode) with cache shardings
+resolved from the model's cache logical axes (batch over data, cache length
+over model -- the layout that fits 32k-context batch-128 decode in HBM).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import sharding as sh
+from ..models.registry import Model
+
+
+def zero_cache(model: Model, batch: int, max_len: int):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        model.cache_shapes(batch, max_len))
+
+
+def cache_shardings(model: Model, batch: int, max_len: int, mesh,
+                    phase: str = "decode"):
+    """Decode shards caches by kv-heads/sequence (capacity); prefill shards
+    by batch only -- writing a sequence-sharded cache with a dynamic slice
+    forces GSPMD to rematerialize the whole cache per layer (measured 5x
+    collective blowup on the 32k prefill cells)."""
+    shapes = model.cache_shapes(batch, max_len)
+    axes = model.cache_logical_axes()
+    if phase == "prefill":
+        axes = jax.tree_util.tree_map(
+            lambda ax: tuple(None if a in ("seq_cache", "kv_heads") else a
+                             for a in ax),
+            axes, is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree_util.tree_map(
+        lambda ax, s: sh.named_sharding(ax, s.shape, mesh),
+        axes, shapes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def build_serve_fns(model: Model, mesh=None):
+    """(prefill_fn, decode_fn), both jitted.
+
+    prefill_fn(params, batch, cache) -> (last_logits, cache)
+    decode_fn(params, tokens, cache, index) -> (logits, cache)
+    """
+
+    def prefill(params, batch, cache):
+        logits, cache = model.prefill(params, batch, cache)
+        return logits[:, -1:], cache
+
+    def decode(params, tokens, cache, index):
+        logits, cache = model.decode_step(params, tokens, cache, index)
+        return logits, cache
+
+    if mesh is None:
+        return jax.jit(prefill), jax.jit(decode)
+
+    with sh.use_mesh(mesh):
+        return jax.jit(prefill, donate_argnums=(2,)), \
+            jax.jit(decode, donate_argnums=(2,))
+
+
+def greedy_decode(model: Model, params, prompt_tokens, n_new: int,
+                  mesh=None, extra_batch=None):
+    """Reference end-to-end decode loop (used by examples + tests)."""
+    B, S = prompt_tokens.shape
+    n_front = 0
+    if model.cfg.family == "vlm" and extra_batch:
+        n_front = extra_batch["vision_embeds"].shape[1]
+    cache = zero_cache(model, B, S + n_front + n_new)
+    prefill_fn, decode_fn = build_serve_fns(model, mesh)
+    batch = {"tokens": prompt_tokens}
+    if extra_batch:
+        batch.update(extra_batch)
+    logits, cache = prefill_fn(params, batch, cache)
+    out = [jnp.argmax(logits, -1).astype(jnp.int32)]
+    idx = S + n_front
+    for i in range(n_new - 1):
+        logits, cache = decode_fn(params, out[-1], cache, idx + i)
+        out.append(jnp.argmax(logits, -1).astype(jnp.int32))
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,150 @@
+"""Fault tolerance & elasticity for multi-pod training.
+
+Pieces:
+
+* ``ResilientLoop`` -- wraps the train loop with checkpoint/restart:
+  periodic async checkpoints, automatic restore-on-start, bounded retry with
+  exponential backoff around transient step failures, and a health callback
+  so an external orchestrator can fence a bad pod.
+
+* ``elastic_remesh`` -- rebuilds the mesh after losing pods/hosts (e.g. 2
+  pods -> 1) and re-shards a checkpointed train state onto it.  Works
+  because checkpoints are mesh-agnostic (full logical arrays) and sharding
+  rules re-resolve against the new mesh (divisibility-aware).
+
+* ``StragglerMitigator`` -- tracks per-step wall times; when the rolling
+  p50/last ratio exceeds a threshold it flags the step so the driver can
+  (a) skip non-critical work (eval/logging), and -- at cluster scope --
+  (b) shrink the DCN reduction group via ``elastic_remesh`` (bounded
+  staleness: the slow pod's gradients are dropped for that step, matching
+  the paper's observation that stragglers gate collective completion).
+
+The same machinery backs the ``examples/fault_tolerant_train.py`` demo,
+which kills the loop mid-run and restarts it bit-exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Optional
+
+import numpy as np
+import jax
+
+from . import checkpoint as ckpt_mod
+from ..models import sharding as sh
+
+
+@dataclasses.dataclass
+class FTConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    keep_last: int = 3
+    max_retries: int = 3
+    backoff_s: float = 1.0
+    straggler_ratio: float = 2.0
+    straggler_window: int = 20
+
+
+class StragglerMitigator:
+    def __init__(self, cfg: FTConfig):
+        self.cfg = cfg
+        self.times: deque = deque(maxlen=cfg.straggler_window)
+
+    def record(self, dt: float) -> bool:
+        """Returns True when this step was a straggler."""
+        straggler = False
+        if len(self.times) >= 5:
+            p50 = float(np.median(self.times))
+            straggler = dt > self.cfg.straggler_ratio * p50
+        self.times.append(dt)
+        return straggler
+
+
+class ResilientLoop:
+    """Checkpointed, retrying train loop driver."""
+
+    def __init__(self, step_fn: Callable, state: Any, ft: FTConfig,
+                 state_shardings: Any = None,
+                 health_cb: Optional[Callable[[str], None]] = None):
+        self.step_fn = step_fn
+        self.ft = ft
+        self.health_cb = health_cb or (lambda msg: None)
+        self.ckpt = ckpt_mod.AsyncCheckpointer(ft.ckpt_dir, ft.keep_last)
+        self.straggler = StragglerMitigator(ft)
+        self.state_shardings = state_shardings
+
+        # restore-on-start
+        latest = ckpt_mod.latest_step(ft.ckpt_dir)
+        if latest is not None:
+            target = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+            state, extra = ckpt_mod.restore(ft.ckpt_dir, target,
+                                            shardings=state_shardings)
+            self.start_step = int(extra.get("global_step", latest))
+            self.health_cb(f"restored checkpoint at step {self.start_step}")
+        else:
+            self.start_step = 0
+        self.state = state
+
+    def run(self, batches: Callable[[int], Any], n_steps: int,
+            metrics_cb: Optional[Callable] = None):
+        step = self.start_step
+        while step < n_steps:
+            batch = batches(step)
+            t0 = time.monotonic()
+            for attempt in range(self.ft.max_retries + 1):
+                try:
+                    self.state, metrics = self.step_fn(self.state, batch)
+                    jax.block_until_ready(metrics["loss"])
+                    break
+                except Exception as e:  # noqa: BLE001 -- transient fabric
+                    if attempt >= self.ft.max_retries:
+                        self.ckpt.wait()
+                        raise
+                    self.health_cb(
+                        f"step {step} attempt {attempt} failed: {e!r}; "
+                        f"backing off")
+                    time.sleep(self.ft.backoff_s * (2 ** attempt))
+            dt = time.monotonic() - t0
+            if self.straggler.record(dt):
+                self.health_cb(f"straggler step {step}: {dt:.3f}s")
+            if metrics_cb:
+                metrics_cb(step, metrics, dt)
+            step += 1
+            if step % self.ft.ckpt_every == 0:
+                self.ckpt.save(self.state, step,
+                               extra={"global_step": step})
+        self.ckpt.save(self.state, step, extra={"global_step": step})
+        self.ckpt.wait()
+        return self.state
+
+
+def elastic_remesh(ckpt_dir: str, make_mesh: Callable, model, tcfg,
+                   step: Optional[int] = None):
+    """Restore a checkpoint onto a *new* mesh (e.g. after losing a pod).
+
+    Returns (state, mesh).  Sharding rules re-resolve divisibility against
+    the new mesh, so e.g. a 512-chip state reloads onto 256 chips with the
+    fsdp axis automatically widened per shard.
+    """
+    from . import train_step as ts
+    mesh = make_mesh()
+    with sh.use_mesh(mesh):
+        shapes = model.param_shapes()
+        state_shapes = {
+            "params": shapes,
+            "opt": None,  # resolved below via template init on specs
+            "step": jax.ShapeDtypeStruct((), np.int32),
+        }
+        # build a template by evaluating shapes of the optimizer init
+        import jax.numpy as jnp
+        from . import optimizer as opt_mod
+        opt = opt_mod.make(model.cfg.optimizer, lr=tcfg.learning_rate)
+        opt_shapes = jax.eval_shape(opt.init, shapes)
+        state_shapes["opt"] = opt_shapes
+        shardings = ts.shardings_for_state(model, mesh, tcfg)
+        state, extra = ckpt_mod.restore(ckpt_dir, state_shapes, step=step,
+                                        shardings=shardings)
+    return state, mesh, extra

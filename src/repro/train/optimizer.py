@@ -1,0 +1,139 @@
+"""Hand-rolled optimizers (no optax in this environment).
+
+* AdamW -- fp32 moments, decoupled weight decay; moments inherit the
+  parameter sharding so optimizer state is fully FSDP-sharded.
+* Adafactor -- factored second moment (row/col accumulators), the standard
+  choice for the 100B+ archs where Adam moments would not fit HBM.
+
+API: ``opt = make(name, lr=...); state = opt.init(params);
+updates, state = opt.update(grads, state, params); params = apply(params,
+updates)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def adamw(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          warmup_steps: int = 100) -> Optimizer:
+    def init(params):
+        zeros = _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"mu": zeros,
+                "nu": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        sched = lr * jnp.minimum(1.0, step / warmup_steps)
+        mu = _tmap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                   state["mu"], grads)
+        nu = _tmap(lambda v, g: b2 * v + (1 - b2)
+                   * jnp.square(g.astype(jnp.float32)), state["nu"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - sched * u).astype(p.dtype)
+        new_params = _tmap(upd, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: float = 1e-2, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, warmup_steps: int = 100,
+              min_dim_size_to_factor: int = 128) -> Optimizer:
+    """Factored Adafactor (Shazeer & Stern).  Factors the trailing two dims
+    of >=2D params when both exceed ``min_dim_size_to_factor``."""
+
+    def _factored(shape):
+        return (len(shape) >= 2 and shape[-1] >= min_dim_size_to_factor
+                and shape[-2] >= min_dim_size_to_factor)
+
+    def init(params):
+        def per(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"acc": _tmap(per, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** -decay
+        sched = lr * jnp.minimum(1.0, step / warmup_steps)
+
+        def per(g, acc, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "vr" in acc:
+                vr = beta * acc["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * acc["vc"] + (1 - beta) * g2.mean(axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                    + eps)
+                cfac = jax.lax.rsqrt(vc + eps)
+                u = g * rfac[..., None] * cfac[..., None, :]
+                new_acc = {"vr": vr, "vc": vc}
+            else:
+                v = beta * acc["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_acc = {"v": v}
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            newp = (p.astype(jnp.float32) - sched * u).astype(p.dtype)
+            return newp, new_acc
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_a = tdef.flatten_up_to(state["acc"])
+        outs = [per(g, a, p) for g, a, p in zip(flat_g, flat_a, flat_p)]
+        new_params = tdef.unflatten([o[0] for o in outs])
+        new_acc = tdef.unflatten([o[1] for o in outs])
+        return new_params, {"acc": new_acc, "step": step}
+
+    return Optimizer(init, update)
+
+
+def make(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(name)
+
+
+def state_logical_axes(opt_name: str, param_axes):
+    """Optimizer-state sharding mirrors parameter sharding."""
+    if opt_name == "adamw":
+        return {"mu": param_axes, "nu": param_axes,
+                "step": ()}
+
+    def per(ax):
+        ax = tuple(ax)
+        return {"vr": ax[:-1], "vc": ax[:-2] + ax[-1:]} \
+            if len(ax) >= 2 else {"v": ax}
+    # NOTE: factored accumulators of non-factored params keep full axes;
+    # resolved leaf-by-leaf at sharding time (shapes decide).
+    return {"acc": jax.tree_util.tree_map(
+        lambda ax: ax, param_axes, is_leaf=lambda x: isinstance(x, tuple)),
+        "step": ()}

@@ -1,0 +1,143 @@
+"""Sharded training step: microbatched gradient accumulation, remat,
+cross-pod gradient reduction through the DR collective engine, optional
+gradient compression.
+
+Overlap design: the accumulation loop is a ``lax.scan`` over microbatches --
+XLA overlaps microbatch i+1's forward with the tail of microbatch i's
+backward collectives; the cross-pod (DCN) gradient reduction happens once
+per step on the accumulated grads, optionally compressed (bf16/int8 + error
+feedback) and scheduled as DR rotation rounds instead of one monolithic
+all-reduce.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import sharding as sh
+from ..models.registry import Model
+from . import optimizer as opt_mod
+from ..collectives import compression
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    microbatch: int = 0               # 0: use cfg.microbatch (or 1)
+    grad_clip: float = 1.0
+    compress_dcn: Optional[str] = None   # None | 'bf16' | 'int8'
+    seed: int = 0
+
+
+def make_train_state(model: Model, params, tcfg: TrainConfig):
+    opt = opt_mod.make(model.cfg.optimizer, lr=tcfg.learning_rate,
+                       warmup_steps=tcfg.warmup_steps)
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def build_train_step(model: Model, tcfg: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``batch["tokens"]`` is (GB, S); with microbatching the leading dim is
+    reshaped to (n_micro, GB/n_micro, S) and scanned.
+    """
+    opt = opt_mod.make(model.cfg.optimizer, lr=tcfg.learning_rate,
+                       warmup_steps=tcfg.warmup_steps)
+    n_micro = tcfg.microbatch or model.cfg.microbatch or 1
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        if n_micro > 1:
+            mb_batch = jax.tree_util.tree_map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:]), batch)
+
+            def accum(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(accum, (zeros, 0.0), mb_batch)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, gsum)
+            loss = lsum / n_micro
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        # Cross-pod DCN reduction with optional compression.  Within
+        # pjit/GSPMD the batch sharding already implies gradient psums; the
+        # explicit compression path is applied when enabled (shard_map over
+        # 'pod') -- otherwise GSPMD's implicit reduction stands.
+        if tcfg.compress_dcn is not None:
+            grads = compression.compressed_psum_pod(grads, tcfg.compress_dcn)
+
+        gnorm = _global_norm(grads)
+        scale = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gnorm, 1e-6))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+        new_params, new_opt = opt.update(grads, state["opt"], params)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def shardings_for_state(model: Model, mesh, tcfg: TrainConfig):
+    """NamedShardings for the train state pytree (params + opt + step)."""
+    axes = model.logical_axes()
+    shapes = model.param_shapes()
+
+    def ns(ax, spec):
+        return sh.named_sharding(ax, spec.shape, mesh)
+
+    p_shard = jax.tree_util.tree_map(
+        ns, axes, shapes, is_leaf=lambda x: isinstance(x, tuple))
+
+    if model.cfg.optimizer == "adamw":
+        opt_shard = {"mu": p_shard, "nu": p_shard,
+                     "step": sh.named_sharding((), (), mesh)}
+    else:
+        def acc_shard(ax, spec):
+            ax = tuple(ax)
+            if (len(spec.shape) >= 2 and spec.shape[-1] >= 128
+                    and spec.shape[-2] >= 128):
+                return {"vr": sh.named_sharding(ax[:-1], spec.shape[:-1],
+                                                mesh),
+                        "vc": sh.named_sharding(
+                            ax[:-2] + ax[-1:],
+                            spec.shape[:-2] + spec.shape[-1:], mesh)}
+            return {"v": sh.named_sharding(ax, spec.shape, mesh)}
+        opt_shard = {"acc": jax.tree_util.tree_map(
+            acc_shard, axes, shapes,
+            is_leaf=lambda x: isinstance(x, tuple)),
+            "step": sh.named_sharding((), (), mesh)}
+    return {"params": p_shard, "opt": opt_shard,
+            "step": sh.named_sharding((), (), mesh)}
+
+
+def batch_shardings(model: Model, mesh, specs: dict):
+    return jax.tree_util.tree_map(
+        lambda s: sh.named_sharding(
+            ("batch",) + (None,) * (len(s.shape) - 1), s.shape, mesh),
+        specs)

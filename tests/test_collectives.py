@@ -1,0 +1,99 @@
+"""DR collective engine vs XLA references + compression + planner."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.collectives import engine, planner, compression
+
+NDEV = len(jax.devices())
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((NDEV,), ("x",))
+
+
+needs_multi = pytest.mark.skipif(
+    NDEV < 2, reason="collective schedules need >1 device; covered by the "
+                     "dry-run sweep at 512 fake devices")
+
+
+def _ref_data(n, rows_per=4, cols=6, seed=0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.normal(size=(n * rows_per, cols)), jnp.float32)
+
+
+@needs_multi
+def test_ring_all_gather_matches_xla(mesh):
+    x = _ref_data(NDEV)
+    a = engine.all_gather(x, mesh, "x", impl="rotation")
+    b = engine.all_gather(x, mesh, "x", impl="xla")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+@needs_multi
+def test_rotation_a2a_matches_xla(mesh):
+    x = _ref_data(NDEV, rows_per=NDEV)
+    a = engine.all_to_all(x, mesh, "x", impl="rotation")
+    b = engine.all_to_all(x, mesh, "x", impl="xla")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+@needs_multi
+def test_ring_reduce_scatter_matches_xla(mesh):
+    x = _ref_data(NDEV, rows_per=NDEV)
+    a = engine.reduce_scatter(x, mesh, "x", impl="rotation")
+    b = engine.reduce_scatter(x, mesh, "x", impl="xla")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+@needs_multi
+def test_ring_all_reduce_matches_xla(mesh):
+    x = _ref_data(NDEV, rows_per=NDEV)
+    a = engine.all_reduce(x, mesh, "x", impl="rotation")
+    b = engine.all_reduce(x, mesh, "x", impl="xla")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_single_device_degenerate(mesh):
+    """n=1 axes: all schedules are identity/no-op and must still run."""
+    m1 = jax.make_mesh((1,), ("x",))
+    x = _ref_data(1)
+    np.testing.assert_allclose(
+        np.asarray(engine.all_gather(x, m1, "x", impl="rotation")),
+        np.asarray(x))
+    np.testing.assert_allclose(
+        np.asarray(engine.all_to_all(x, m1, "x", impl="rotation")),
+        np.asarray(x))
+
+
+def test_int8_error_feedback_reduces_bias(rng):
+    g = jnp.asarray(rng.normal(size=(256,)), jnp.float32) * 1e-3
+    res = jnp.zeros_like(g)
+    acc_plain = jnp.zeros_like(g)
+    acc_ef = jnp.zeros_like(g)
+    for _ in range(50):
+        q, s, _ = compression.quantize_int8_ef(g, jnp.zeros_like(g))
+        acc_plain = acc_plain + q.astype(jnp.float32) * s
+        q, s, res = compression.quantize_int8_ef(g, res)
+        acc_ef = acc_ef + q.astype(jnp.float32) * s
+    true = g * 50
+    err_plain = float(jnp.abs(acc_plain - true).mean())
+    err_ef = float(jnp.abs(acc_ef - true).mean())
+    assert err_ef <= err_plain + 1e-9
+
+
+def test_planner_prefers_rotation_for_large_cross_pod():
+    big = planner.plan_all_to_all(64 << 20, 16, intra_pod=False)
+    small = planner.plan_all_to_all(4 << 10, 16, intra_pod=False)
+    intra = planner.plan_all_to_all(64 << 20, 16, intra_pod=True)
+    assert big.impl == "rotation"
+    assert small.impl == "xla"
+    assert intra.impl == "xla"
+
+
+def test_planner_all_reduce_schedules():
+    big = planner.plan_all_reduce(1 << 30, 2, intra_pod=False)
+    assert big.impl in ("rs_ag", "xla")
+    assert big.est_time_s > 0

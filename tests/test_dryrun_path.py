@@ -1,0 +1,124 @@
+"""Dry-run machinery tests that work on 1 device: sharding rule resolution,
+HLO collective parsing, roofline math, probe-variant construction.
+
+(The actual 512-device lower+compile sweep runs via
+``python -m repro.launch.dryrun --all``; results in experiments/dryrun/.)
+"""
+import json
+import pathlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config, SHAPES, applicable_shapes, \
+    list_architectures
+from repro.models.registry import Model
+from repro.models import sharding as sh
+from repro.launch import hlo_analysis, roofline
+
+
+def test_applicable_shapes_per_family():
+    assert "long_500k" in applicable_shapes(get_config("mamba2-130m"))
+    assert "long_500k" in applicable_shapes(get_config("zamba2-2.7b"))
+    assert "long_500k" not in applicable_shapes(get_config("phi4-mini-3.8b"))
+    assert "long_500k" not in applicable_shapes(get_config("deepseek-v3-671b"))
+
+
+def test_all_archs_have_all_cell_specs():
+    """Every (arch x applicable shape) produces valid input specs and cache
+    shapes with mesh-divisible dims where required."""
+    for arch in list_architectures():
+        cfg = get_config(arch)
+        m = Model(cfg)
+        for sname in applicable_shapes(cfg):
+            shape = SHAPES[sname]
+            specs = m.input_specs(shape)
+            assert "tokens" in specs
+            assert specs["tokens"].shape[0] == shape.global_batch
+            if shape.kind != "train":
+                cs = m.cache_shapes(shape.global_batch, shape.seq_len)
+                assert jax.tree_util.tree_leaves(cs)
+
+
+def test_spec_priority_dedup():
+    """Two dims resolving to 'model' must not both shard (kv_heads wins)."""
+    mesh = jax.make_mesh((1,), ("model",))
+    spec = sh.spec_for(("batch", "seq_cache", "kv_heads", None),
+                       (4, 32, 8, 16), mesh)
+    axes = [a for a in spec if a is not None]
+    flat = []
+    for a in axes:
+        flat.extend(a if isinstance(a, tuple) else (a,))
+    assert len(flat) == len(set(flat))
+
+
+def test_collective_bytes_parser():
+    class FakeCompiled:
+        def as_text(self):
+            return (
+                "%ag = bf16[16,128]{1,0} all-gather(%x), replica_groups={}\n"
+                "%ar.1 = f32[64]{0} all-reduce-start(%y)\n"
+                "%cp = bf16[8,8]{1,0} collective-permute(%z)\n"
+                "%dot = f32[4,4]{1,0} dot(%a, %b)\n")
+    out = hlo_analysis.collective_bytes(FakeCompiled())
+    assert out["count"] == 3
+    assert out["by_kind"]["all-gather"] == 16 * 128 * 2
+    assert out["by_kind"]["all-reduce"] == 64 * 4
+    assert out["by_kind"]["collective-permute"] == 64 * 2
+
+
+def test_roofline_terms_math():
+    cfg = get_config("phi4-mini-3.8b")
+    shape = SHAPES["train_4k"]
+    rec = {"status": "ok", "mesh": "pod2x16x16", "arch": cfg.name,
+           "shape": "train_4k", "kind": "train",
+           "flops": 6e13, "bytes_accessed": 3e12,
+           "collectives": {"total_bytes": 2.7e9}}
+    row = roofline.analyze_record(rec, cfg, shape)
+    assert row.chips == 512
+    assert row.dominant in ("compute", "memory", "collective")
+    assert 0 < row.roofline_fraction <= 1.5
+    # 6*N*D sanity: phi4 ~3.8B params -> 6*3.8e9*(256*4096) ~ 2.4e16
+    assert 1.5e16 < row.model_flops < 3.5e16
+
+
+def test_params_count_sane():
+    approx = {
+        "phi4-mini-3.8b": (3.0e9, 5.5e9),
+        "phi3-mini-3.8b": (3.0e9, 4.7e9),
+        "yi-6b": (5.5e9, 7.0e9),
+        "qwen1.5-4b": (3.0e9, 5.0e9),
+        "deepseek-v3-671b": (6.3e11, 7.2e11),
+        "qwen3-moe-30b-a3b": (2.6e10, 3.4e10),
+        "mamba2-130m": (1.0e8, 1.9e8),
+        "whisper-small": (2.0e8, 3.3e8),
+        "zamba2-2.7b": (2.2e9, 3.3e9),
+        "llava-next-34b": (3.1e10, 3.9e10),
+    }
+    for arch, (lo, hi) in approx.items():
+        n = roofline.params_count(get_config(arch))["total"]
+        assert lo <= n <= hi, (arch, n)
+    # MoE active << total
+    ds = roofline.params_count(get_config("deepseek-v3-671b"))
+    assert ds["active"] < 0.1 * ds["total"]
+
+
+def test_dryrun_artifacts_if_present():
+    """When the sweep has produced artifacts, sanity-check them."""
+    d = pathlib.Path("experiments/dryrun")
+    if not d.exists() or not list(d.glob("*.json")):
+        pytest.skip("no dry-run artifacts in this checkout")
+    n_ok = n_skip = 0
+    for f in d.glob("*.json"):
+        rec = json.loads(f.read_text())
+        assert rec["status"] in ("ok", "skipped", "fail"), f
+        if rec["status"] == "ok":
+            n_ok += 1
+            assert rec["flops"] > 0
+            assert rec["memory"]["peak_estimate_bytes"] > 0
+        elif rec["status"] == "skipped":
+            n_skip += 1
+            assert "long_500k" in rec["shape"]
+    assert n_ok > 0

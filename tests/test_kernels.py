@@ -1,0 +1,196 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes/dtypes, plus hypothesis property tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.lindley import kernel as lk, ref as lr, ops as lo
+from repro.kernels.flash_attn import kernel as fk, ref as fr, ops as fo
+from repro.kernels.ssd_scan import kernel as sk, ref as sr, ops as so
+
+
+# ---------------------------------------------------------------------------
+# lindley segmented max-plus scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 7, 256, 1000, 4096])
+@pytest.mark.parametrize("block", [128, 1024])
+def test_lindley_kernel_matches_oracle(n, block, rng):
+    v = rng.normal(size=n).astype(np.float32) * 100
+    f = rng.random(n) < 0.15
+    f[0] = True
+    out_k = np.asarray(lk.segmented_cummax(jnp.asarray(v), jnp.asarray(f),
+                                           block=block))
+    out_r = np.asarray(lr.segmented_cummax(jnp.asarray(v), jnp.asarray(f)))
+    np.testing.assert_allclose(out_k, out_r)
+
+
+@given(st.integers(1, 300), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_lindley_property_vs_serial(n, seed):
+    r = np.random.default_rng(seed)
+    v = r.normal(size=n).astype(np.float32)
+    f = r.random(n) < 0.3
+    f[0] = True
+    out = np.asarray(lr.segmented_cummax(jnp.asarray(v), jnp.asarray(f)))
+    ser = lr.segmented_cummax_serial(v, f)
+    np.testing.assert_allclose(out, ser)
+
+
+def test_lindley_departures_are_fifo_and_causal(rng):
+    """Property: departures are strictly increasing within a queue and never
+    precede arrival + service."""
+    n = 500
+    a = np.sort(rng.uniform(0, 100, n)).astype(np.float32)
+    seg = np.zeros(n, bool)
+    seg[0] = True
+    seg[rng.choice(np.arange(1, n), 20, replace=False)] = True
+    d = np.asarray(lo.lindley_departures(jnp.asarray(a), jnp.asarray(seg)))
+    start = 0
+    for i in range(1, n + 1):
+        if i == n or seg[i]:
+            dd = d[start:i]
+            aa = a[start:i]
+            assert (np.diff(dd) >= 1.0 - 1e-3).all()     # 1 pkt/slot service
+            assert (dd >= aa + 1.0 - 1e-3).all()          # causality (f32)
+            start = i
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+SHAPES = [
+    (1, 4, 2, 128, 128, 64),
+    (2, 8, 8, 256, 256, 64),
+    (1, 8, 1, 128, 128, 128),
+    (1, 4, 4, 1, 256, 64),      # decode
+    (2, 6, 2, 64, 256, 32),     # Sq < Sk (query tail)
+]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(shape, dtype, rng):
+    B, Hq, Hkv, Sq, Sk, D = shape
+    q = jnp.asarray(rng.normal(size=(B, Hq, Sq, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, Sk, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, Sk, D)), dtype)
+    out_k = fk.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    out_r = fr.mha(q, k, v, causal=True)
+    tol = 2e-5 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_chunked_matches_full(rng):
+    B, Hq, Hkv, S, D = 1, 4, 2, 512, 64
+    q = jnp.asarray(rng.normal(size=(B, Hq, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
+    full = fr.mha(q, k, v, causal=True)
+    chunk = fr.mha_chunked(q, k, v, causal=True, block_k=128)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunk),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_mixed_dims(rng):
+    """MLA shape: d_k=48, d_v=32."""
+    q = jnp.asarray(rng.normal(size=(1, 4, 64, 48)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 4, 64, 48)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 4, 64, 32)), jnp.float32)
+    out = fr.mha_chunked(q, k, v, causal=True, block_k=32)
+    # oracle: dense softmax
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(48)
+    mask = jnp.tril(jnp.ones((64, 64), bool))
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, -1)
+    ref = jnp.einsum("bhqk,bhkd->bhqd", p, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@given(st.integers(1, 4), st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_attention_rowsum_property(heads, seed):
+    """Attention outputs are convex combinations of V rows: with identical V
+    rows the output equals that row (softmax sums to 1)."""
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.normal(size=(1, heads, 32, 16)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(1, heads, 32, 16)), jnp.float32)
+    row = r.normal(size=(16,)).astype(np.float32)
+    v = jnp.broadcast_to(jnp.asarray(row), (1, heads, 32, 16))
+    out = fr.mha(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.broadcast_to(row, out.shape),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD scan
+# ---------------------------------------------------------------------------
+
+SSD_SHAPES = [
+    (1, 64, 2, 16, 1, 16),
+    (2, 128, 4, 32, 2, 64),
+    (1, 96, 8, 64, 4, 32),    # L not multiple of 64 (ops pads)
+]
+
+
+@pytest.mark.parametrize("shape", SSD_SHAPES)
+def test_ssd_kernel_and_chunked_match_scan(shape, rng):
+    B, L, H, P, G, N = shape
+    x = jnp.asarray(rng.normal(size=(B, L, H, P)), jnp.float32)
+    dt = jnp.asarray(0.01 + rng.random((B, L, H)) * 0.2, jnp.float32)
+    A = jnp.asarray(-0.5 - rng.random(H), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, L, G, N)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(B, L, G, N)), jnp.float32)
+    oracle = np.asarray(sr.ssd_scan(x, dt, A, Bm, C))
+    chunked = np.asarray(so.ssd(x, dt, A, Bm, C, chunk=32,
+                                backend="chunked"))
+    np.testing.assert_allclose(chunked, oracle, atol=5e-5, rtol=5e-4)
+    if L % 32 == 0:
+        pallas = np.asarray(sk.ssd_scan(x, dt, A, Bm, C, chunk=32))
+        np.testing.assert_allclose(pallas, oracle, atol=5e-5, rtol=5e-4)
+
+
+def test_ssd_final_state_matches_sequential(rng):
+    B, L, H, P, G, N = 1, 48, 2, 8, 1, 8
+    x = jnp.asarray(rng.normal(size=(B, L, H, P)), jnp.float32)
+    dt = jnp.asarray(0.05 + rng.random((B, L, H)) * 0.1, jnp.float32)
+    A = jnp.asarray(-1.0 - rng.random(H), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, L, G, N)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(B, L, G, N)), jnp.float32)
+    hf = np.asarray(sr.ssd_final_state(x, dt, A, Bm, C, chunk=16))
+    # sequential oracle
+    h = np.zeros((B, H, N, P), np.float32)
+    xn, dtn, An = map(np.asarray, (x, dt, A))
+    Bn = np.repeat(np.asarray(Bm), H // G, axis=2)
+    for t in range(L):
+        for b in range(B):
+            for hh in range(H):
+                h[b, hh] = (np.exp(An[hh] * dtn[b, t, hh]) * h[b, hh]
+                            + dtn[b, t, hh]
+                            * np.outer(Bn[b, t, hh], xn[b, t, hh]))
+    np.testing.assert_allclose(hf, h, atol=1e-4, rtol=1e-3)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_ssd_decay_property(seed):
+    """With A -> -inf (instant forgetting) the SSD reduces to the per-step
+    readout C_t . (dt_t B_t x_t^T)."""
+    r = np.random.default_rng(seed)
+    B, L, H, P, G, N = 1, 16, 1, 4, 1, 4
+    x = jnp.asarray(r.normal(size=(B, L, H, P)), jnp.float32)
+    dt = jnp.asarray(np.full((B, L, H), 1.0), jnp.float32)
+    A = jnp.asarray([-50.0], jnp.float32)
+    Bm = jnp.asarray(r.normal(size=(B, L, G, N)), jnp.float32)
+    C = jnp.asarray(r.normal(size=(B, L, G, N)), jnp.float32)
+    y = np.asarray(sr.ssd_scan(x, dt, A, Bm, C))
+    expect = np.einsum("blgn,blgn,blhp->blhp",
+                       np.asarray(C), np.asarray(Bm), np.asarray(x))
+    np.testing.assert_allclose(y, expect, atol=1e-4, rtol=1e-3)

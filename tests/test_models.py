@@ -1,0 +1,140 @@
+"""Per-architecture smoke tests (reduced configs): forward/train step on CPU
+with shape checks + no NaNs, prefill/decode consistency, and family-specific
+invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import list_architectures, get_config, SHAPES
+from repro.models.registry import Model
+from repro.train import train_step as ts
+from repro.train import optimizer as opt_mod
+
+ARCHS = list_architectures()
+
+
+def _batch_for(cfg, B=2, S=16, seed=0):
+    r = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(
+        r.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            r.normal(size=(B, cfg.n_frontend_tokens, cfg.frontend_dim)),
+            jnp.float32)
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jnp.asarray(
+            r.normal(size=(B, 4, cfg.frontend_dim)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    """Assignment requirement: reduced config, one forward/train step on
+    CPU, asserting output shapes and no NaNs."""
+    model = Model(get_config(arch, smoke=True))
+    cfg = model.cfg
+    params = model.init_params(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = _batch_for(cfg, B, S)
+    loss = model.loss(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+
+    tcfg = ts.TrainConfig(learning_rate=1e-3, microbatch=1)
+    state = ts.make_train_state(model, params, tcfg)
+    step = jax.jit(ts.build_train_step(model, tcfg))
+    state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually changed
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        state["params"], params)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_full_forward(arch):
+    """Prefill + decode over a cache must reproduce the densely-computed
+    next-token logits (KV-cache correctness)."""
+    model = Model(get_config(arch, smoke=True))
+    cfg = model.cfg
+    params = model.init_params(jax.random.PRNGKey(1))
+    B, S = 2, 12
+    batch = _batch_for(cfg, B, S, seed=1)
+    n_front = 0
+    if cfg.family == "vlm":
+        n_front = batch["vision_embeds"].shape[1]
+
+    # dense forward logits at position S-1
+    logits_full = model._fwd(params, batch, mode="train")
+    last_full = logits_full[:, -1]
+
+    cache = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        model.cache_shapes(B, S + n_front + 4))
+    logits_pre, cache = model.prefill(params, batch, cache)
+    last_pre = logits_pre[:, -1]
+    np.testing.assert_allclose(np.asarray(last_full), np.asarray(last_pre),
+                               atol=2e-2, rtol=2e-2)
+
+    # decode one token; then compare against dense forward of S+1 tokens
+    tok = jnp.argmax(last_pre, -1).astype(jnp.int32)[:, None]
+    logits_dec, cache = model.decode_step(params, tok, cache, S + n_front)
+    batch2 = dict(batch)
+    batch2["tokens"] = jnp.concatenate([batch["tokens"], tok], axis=1)
+    logits_full2 = model._fwd(params, batch2, mode="train")
+    np.testing.assert_allclose(np.asarray(logits_dec[:, -1]),
+                               np.asarray(logits_full2[:, -1]),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_moe_dense_vs_a2a_paths_smoke():
+    """On a 1-device 'mesh' the a2a path degenerates; verify the dense
+    oracle path is used and is deterministic."""
+    model = Model(get_config("qwen3-moe-30b-a3b", smoke=True))
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = _batch_for(model.cfg, 2, 16)
+    l1 = model.loss(params, batch)
+    l2 = model.loss(params, batch)
+    assert float(l1) == float(l2)
+
+
+def test_mamba_decode_state_propagates():
+    """SSM decode must depend on prefix state (not just the last token)."""
+    model = Model(get_config("mamba2-130m", smoke=True))
+    cfg = model.cfg
+    params = model.init_params(jax.random.PRNGKey(2))
+    B, S = 1, 12
+    r = np.random.default_rng(0)
+    t1 = jnp.asarray(r.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    t2 = t1.at[:, 0].set((t1[0, 0] + 1) % cfg.vocab)   # differ at position 0
+    outs = []
+    for toks in (t1, t2):
+        cache = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), model.cache_shapes(B, S))
+        _, cache = model.prefill(params, {"tokens": toks}, cache)
+        logits, _ = model.decode_step(params, toks[:, -1:], cache, S)
+        outs.append(np.asarray(logits))
+    assert np.abs(outs[0] - outs[1]).max() > 1e-6
+
+
+def test_training_reduces_loss_small_lm():
+    """End-to-end sanity: a tiny dense LM learns the synthetic ngram data."""
+    from repro.train import data as data_mod
+    model = Model(get_config("phi4-mini-3.8b", smoke=True))
+    cfg = model.cfg
+    params = model.init_params(jax.random.PRNGKey(3))
+    tcfg = ts.TrainConfig(learning_rate=3e-3, microbatch=1)
+    state = ts.make_train_state(model, params, tcfg)
+    step = jax.jit(ts.build_train_step(model, tcfg))
+    dcfg = data_mod.DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8,
+                               seed=0)
+    losses = []
+    for i in range(30):
+        batch = {"tokens": jnp.asarray(data_mod.batch_for_step(dcfg, i))}
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.2, losses[:3] + losses[-3:]

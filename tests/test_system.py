@@ -1,0 +1,109 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The top-level claims, executed against the real stack:
+  1. the LB hierarchy (packet spraying > coarse; DR optimal) on both engines;
+  2. no leading contender achieves O(1) queues; DR/OFAN do;
+  3. OFAN's consolidation invariant (App. F Inv. 1) holds in simulation;
+  4. the trainer integrates the discipline and trains/checkpoints/serves.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.net.topology import FatTree
+from repro.net import workloads, fastsim
+from repro.core import lb_schemes as lbs
+from repro.core import theory
+
+
+def test_performance_hierarchy_end_to_end():
+    """Paper finding #1: packet spraying dominates flow/subflow granularity;
+    DR dominates spraying."""
+    tree = FatTree(4)
+    wl = workloads.permutation(tree, 128, np.random.default_rng(0),
+                               inter_pod_only=True)
+    cct = {name: fastsim.simulate(tree, wl, lbs.by_name(name), seed=1).cct
+           for name in ("flow_ecmp", "subflow_mptcp", "host_pkt", "ofan")}
+    assert cct["ofan"] < cct["host_pkt"] < cct["subflow_mptcp"] \
+        < cct["flow_ecmp"]
+
+
+def test_queue_optimality_claim():
+    """Paper findings #2+#3: no leading contender is O(1); DR is."""
+    tree = FatTree(4)
+    qs = {}
+    for name in ("host_pkt", "switch_pkt_ar", "host_dr", "ofan"):
+        row = []
+        for m in (64, 512):
+            wl = workloads.permutation(tree, m, np.random.default_rng(2),
+                                       inter_pod_only=True)
+            row.append(fastsim.simulate(tree, wl, lbs.by_name(name),
+                                        seed=0).max_queue)
+        qs[name] = row
+    # contenders grow with m; DR stays flat
+    assert qs["host_pkt"][1] > 1.5 * qs["host_pkt"][0]
+    assert qs["switch_pkt_ar"][1] > 1.5 * qs["switch_pkt_ar"][0]
+    assert qs["host_dr"][1] < 2 * qs["host_dr"][0] + 3
+    assert qs["ofan"][1] < 2 * qs["ofan"][0] + 3
+
+
+def test_ofan_consolidation_invariant():
+    """Inv. 1 (App. F): per (source switch, destination group) traffic
+    spreads equally across candidate links -- checked on A->C counts."""
+    tree = FatTree(4)
+    wl = workloads.permutation(tree, 240, np.random.default_rng(3),
+                               inter_pod_only=True)
+    res = fastsim.simulate(tree, wl, lbs.ofan(), seed=4)
+    h = tree.half
+    counts = res.layers["A->C"].counts.reshape(tree.n_pods, h, h)
+    for p in range(tree.n_pods):
+        for a in range(h):
+            c = counts[p, a]
+            if c.sum() == 0:
+                continue
+            assert c.max() - c.min() <= max(2, 0.1 * c.mean()), (p, a, c)
+
+
+def test_trainer_integration_smoke():
+    """Train a smoke model 3 steps, checkpoint, restore, decode."""
+    from repro.configs.base import get_config
+    from repro.models.registry import Model
+    from repro.train import train_step as ts
+    from repro.train import checkpoint as ckpt
+    from repro.serve import serve_step
+    import tempfile
+
+    model = Model(get_config("yi-6b", smoke=True))
+    params = model.init_params(jax.random.PRNGKey(0))
+    tcfg = ts.TrainConfig(learning_rate=1e-3)
+    state = ts.make_train_state(model, params, tcfg)
+    step = jax.jit(ts.build_train_step(model, tcfg))
+    r = np.random.default_rng(0)
+    for i in range(3):
+        batch = {"tokens": jnp.asarray(
+            r.integers(0, model.cfg.vocab, (2, 16)), jnp.int32)}
+        state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(state, d, step=3)
+        target = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        restored, _ = ckpt.restore(d, target)
+        np.testing.assert_array_equal(
+            np.asarray(restored["step"]), np.asarray(state["step"]))
+
+    out = serve_step.greedy_decode(
+        model, state["params"],
+        jnp.asarray(r.integers(0, model.cfg.vocab, (1, 4)), jnp.int32),
+        n_new=2)
+    assert out.shape == (1, 2)
+
+
+def test_paper_constants_coherent():
+    """The slot/byte constants behind every normalized metric."""
+    net = theory.DEFAULT_NET
+    assert abs(net.prop_slots - 0.5e-6 / net.slot_s) < 1e-9
+    # min RTT in the paper's ~6.25us zero-delay region
+    assert 4e-6 < net.min_rtt_s < 9e-6

@@ -1,0 +1,87 @@
+"""Closed-form theory module tests (Theorems 1-5 machinery, bounds)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import theory
+
+
+def test_net_params_defaults_match_paper():
+    net = theory.DEFAULT_NET
+    assert net.frame_B == 4158          # 4096 + 62
+    assert net.slot_B == 4178           # + 20 gap
+    assert net.buffer_pkts == 191       # 800 KB / 4178
+    # slot time ~41.78 ns at 800 Gbps
+    assert abs(net.slot_s - 4178 * 8 / 800e9) < 1e-15
+
+
+def test_ata_lower_bound_near_paper_value():
+    """Paper §5: 'minimum possible completion time in our setup is ~1.3ms'
+    for the 128-node ATA."""
+    # paper's ATA at 1 MB per destination flow: 256 pkts x 127 dests
+    b = theory.ata_cct_lower_bound_s(128, 1 << 20)
+    assert 1.2e-3 < b < 1.5e-3
+
+
+def test_permutation_bound_monotone_and_tight_region():
+    b1 = theory.permutation_cct_lower_bound_s(64)
+    b2 = theory.permutation_cct_lower_bound_s(256)
+    b3 = theory.permutation_cct_lower_bound_s(1024)
+    assert b1 < b2 < b3
+    # App. B example: m=256 -> ~17.06 us
+    assert abs(theory.permutation_cct_lower_bound_s(256) - 17.06e-6) < 0.4e-6
+
+
+def test_optimal_packet_size_thm5():
+    # P - H = sqrt(H D / alpha); paper uses H=82, alpha=10
+    for D in [32 << 10, 1 << 20, 16 << 20]:
+        p = theory.optimal_payload_B(D)
+        assert abs(p - math.sqrt(82 * D / 10)) < 1e-9
+
+
+@given(st.floats(1e4, 1e8))
+@settings(max_examples=30, deadline=None)
+def test_optimal_payload_minimizes_model(D):
+    """Property: Thm 5's optimum beats nearby payloads under the CCT model."""
+    p_star = theory.optimal_payload_B(D)
+    c_star = theory.modeled_cct_slots(D, p_star)
+    for f in (0.5, 0.8, 1.25, 2.0):
+        assert c_star <= theory.modeled_cct_slots(D, p_star * f) + 1e-6
+
+
+def test_sqrt_queue_payload_scaling_is_cube_root():
+    Ds = np.array([1e5, 1e6, 1e7, 1e8])
+    ps = theory.cube_root_payload_scaling(Ds)
+    alpha, _ = theory.fit_power_law(Ds, ps)
+    assert 0.25 < alpha < 0.42      # Theta(D^(1/3))
+
+
+def test_fit_power_law_exact():
+    m = np.array([10.0, 100.0, 1000.0])
+    q = 3.0 * m ** 0.5
+    a, c = theory.fit_power_law(m, q)
+    assert abs(a - 0.5) < 1e-9 and abs(c - 3.0) < 1e-9
+
+
+def test_q_laws_ordering():
+    m = np.array([64, 256, 1024], float)
+    lin = theory.q_linear(m)
+    sq = theory.q_sqrt(m, 8)
+    const = theory.q_nd_d_1(16, 1.0)
+    assert (lin > sq).all()
+    assert (sq > const).any()
+
+
+def test_appc_probabilities_bounded():
+    for k in (4, 8, 16, 32):
+        assert 0.0 <= theory.p_hotspot(k) <= theory.p_northbound(k) <= 1.0
+        assert theory.expected_collisions_rr(k) >= \
+            theory.expected_collisions_jsq(k, 0.02)
+
+
+def test_northbound_lower_bound_appd():
+    # App. D: P_northbound >= 1 - (k-2)/(k^2-2) >= 6/7 for k=4
+    for k in (4, 8, 16):
+        assert theory.p_northbound(k) >= 1 - (k - 2) / (k ** 2 - 2) - 1e-9

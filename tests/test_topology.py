@@ -1,0 +1,135 @@
+"""Fat-tree topology invariants (unit + hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.net.topology import (FatTree, LinkState, rho_max, BYPASS,
+                                UP_E, UP_A, DN_C, DN_A, DN_E)
+from repro.net import workloads
+
+
+Ks = st.sampled_from([4, 6, 8])
+
+
+@given(Ks)
+@settings(max_examples=10, deadline=None)
+def test_counts(k):
+    t = FatTree(k)
+    assert t.n_hosts == k ** 3 // 4
+    assert t.n_cores == (k // 2) ** 2
+    assert t.n_edge_switches == t.n_agg_switches == k * k // 2
+
+
+@given(Ks, st.integers(0, 10_000))
+@settings(max_examples=50, deadline=None)
+def test_host_coords_roundtrip(k, seed):
+    t = FatTree(k)
+    h = seed % t.n_hosts
+    assert t.host_id(t.host_pod(h), t.host_edge(h), t.host_slot(h)) == h
+
+
+def test_stage_queues_interpod():
+    t = FatTree(4)
+    # host 0 (pod0,e0,s0) -> host 15 (pod3,e1,s1), choice a=1, c=0
+    q = t.stage_queues(np.array([0]), np.array([15]),
+                       np.array([1]), np.array([0]))[0]
+    assert q[UP_E] == t.qid_up_e(0, 0, 1)
+    assert q[UP_A] == t.qid_up_a(0, 1, 0)
+    assert q[DN_C] == t.qid_dn_c(3, 1, 0)
+    assert q[DN_A] == t.qid_dn_a(3, 1, 1)
+    assert q[DN_E] == 15
+
+
+def test_stage_queues_intrapod_and_same_edge():
+    t = FatTree(4)
+    # same pod (pod0: hosts 0..3), different edge: 0 -> 2
+    q = t.stage_queues(np.array([0]), np.array([2]),
+                       np.array([0]), np.array([1]))[0]
+    assert q[UP_A] == BYPASS and q[DN_C] == BYPASS
+    assert q[UP_E] >= 0 and q[DN_A] >= 0 and q[DN_E] == 2
+    # same edge: 0 -> 1
+    q = t.stage_queues(np.array([0]), np.array([1]),
+                       np.array([0]), np.array([0]))[0]
+    assert all(q[i] == BYPASS for i in (UP_E, UP_A, DN_C, DN_A))
+    assert q[DN_E] == 1
+
+
+def test_mandatory_waypoint_property():
+    """Fat-tree: traffic entering core group a can only exit through agg a
+    of the destination pod -- encoded by stage_queues using the same a."""
+    t = FatTree(8)
+    rngl = np.random.default_rng(3)
+    src = rngl.integers(0, t.n_hosts, 100)
+    dst = (src + t.hosts_per_pod) % t.n_hosts   # force inter-pod
+    a = rngl.integers(0, t.half, 100)
+    c = rngl.integers(0, t.half, 100)
+    q = t.stage_queues(src, dst, a, c)
+    # DN_C queue index encodes (dst_pod, a, c): the same a as UP_A
+    dn = q[:, DN_C] - t.host_pod(dst) * t.half * t.half
+    assert ((dn // t.half) == a).all()
+
+
+def test_wecmp_weights_no_failures():
+    t = FatTree(4)
+    links = LinkState.all_up(t)
+    w = links.wecmp_edge_weights(0, 0, 1, 1)
+    assert (w == t.half).all()      # k/2 cores per agg pair
+    wa = links.wecmp_agg_weights(0, 1, 2)
+    assert (wa == 1).all()
+
+
+def test_wecmp_weights_with_failure():
+    t = FatTree(4)
+    links = LinkState.all_up(t)
+    links.ac[0, 0, 0] = False       # kill agg0-core(0,0) in pod 0
+    w = links.wecmp_edge_weights(0, 0, 1, 0)
+    assert w[0] == t.half - 1       # one fewer path via agg 0
+    assert w[1] == t.half
+
+
+def test_rho_max_no_failure_permutation():
+    t = FatTree(4)
+    links = LinkState.all_up(t)
+    wl = workloads.permutation(t, 4, np.random.default_rng(0))
+    assert rho_max(t, links, wl.flow_src, wl.flow_dst) == 1.0
+
+
+def test_rho_max_with_failures_reduced():
+    t = FatTree(4)
+    rngl = np.random.default_rng(1)
+    links = LinkState.random_failures(t, 0.3, rngl)
+    wl = workloads.permutation(t, 4, np.random.default_rng(0),
+                               inter_pod_only=True)
+    r = rho_max(t, links, wl.flow_src, wl.flow_dst)
+    assert 0.0 <= r <= 1.0
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_inter_pod_permutation_property(seed):
+    t = FatTree(8)
+    wl = workloads.permutation(t, 1, np.random.default_rng(seed),
+                               inter_pod_only=True)
+    pods_src = t.host_pod(wl.flow_src)
+    pods_dst = t.host_pod(wl.flow_dst)
+    assert (pods_src != pods_dst).all()
+    # permutation: every host sends once and receives once
+    assert len(np.unique(wl.flow_dst)) == t.n_hosts
+
+
+def test_workload_release_pacing():
+    """Hosts emit exactly one packet per slot (line rate)."""
+    t = FatTree(4)
+    wl = workloads.all_to_all(t, 4)
+    for h in range(t.n_hosts):
+        rel = np.sort(wl.t_release[wl.src == h])
+        assert np.array_equal(rel, np.arange(len(rel)))
+
+
+def test_fsdp_rings_structure():
+    t = FatTree(8)
+    wl = workloads.fsdp_rings(t, 8, 16, np.random.default_rng(0))
+    assert wl.n_flows == t.n_hosts
+    # every host sends exactly one flow and receives exactly one
+    assert len(np.unique(wl.flow_src)) == t.n_hosts
+    assert len(np.unique(wl.flow_dst)) == t.n_hosts
