@@ -26,6 +26,7 @@ from repro.net.topology import FatTree, LinkState, rho_max
 from repro.net import workloads, fastsim, loopsim
 from repro.core import lb_schemes as lbs
 from repro.core import theory
+from repro import sweep
 
 from . import common as C
 
@@ -36,35 +37,58 @@ LOOP_ONLY = ["host_flowlet_ar", "host_pkt_ar"]
 DR = ["host_dr", "ofan"]
 
 
+def _run_grid(campaign: sweep.Campaign):
+    """Execute a campaign grid, returning (records, per-scheme us/point).
+
+    Timing caveat: the first scheme of each compiled-pipeline-shape group
+    pays the jit compile; schemes riding a warm cache show dispatch-only
+    times.  Cross-scheme comparisons of the us column reflect batch order,
+    not inherent scheme cost."""
+    store = sweep.ResultStore(None)
+    sweep.run_campaign(campaign, store=store)
+    tot_us: dict = {}
+    n_pts: dict = {}
+    for batch, secs in store.timings:
+        tot_us[batch.scheme] = tot_us.get(batch.scheme, 0.0) + secs * 1e6
+        n_pts[batch.scheme] = n_pts.get(batch.scheme, 0) + len(batch.seeds)
+    return store.records, {s: tot_us[s] / n_pts[s] for s in tot_us}
+
+
 def fig1(scale: C.Scale):
-    """CCT increase over the lower bound, permutation + all-to-all."""
+    """CCT increase over the lower bound, permutation + all-to-all.
+
+    Fast-engine schemes run as one campaign per traffic matrix: every
+    (scheme, seed) cell of the grid executes inside seed-vmapped batched
+    dispatches instead of per-seed simulate calls."""
     tree = FatTree(scale.k)
     out = {}
     for matrix in ("perm", "ata"):
         if matrix == "perm":
-            wl = workloads.permutation(tree, scale.perm_msg,
-                                       np.random.default_rng(1))
+            load = sweep.WorkloadSpec("permutation", scale.perm_msg,
+                                      rng_seed=1)
             bound = C.perm_bound_slots(scale.perm_msg)
         else:
-            wl = workloads.all_to_all(tree, scale.ata_msg)
+            load = sweep.WorkloadSpec("all_to_all", scale.ata_msg)
             bound = C.ata_bound_slots(tree, scale.ata_msg)
+        recs, us = _run_grid(sweep.Campaign(
+            name=f"fig1_{matrix}", schemes=tuple(FAST_SCHEMES + DR),
+            loads=(load,), trees=(scale.k,),
+            seeds=tuple(range(scale.runs)), prop_slots=C.PROP_SLOTS))
         for name in FAST_SCHEMES + DR:
-            incs = []
-            for r in range(scale.runs):
-                (inc, _), us = C.timed(
-                    lambda: C.fast_cct_increase(tree, wl, name, bound,
-                                                seed=r))
-                incs.append(inc)
-            C.emit(f"fig1_{matrix}_{name}", us,
+            incs = [100.0 * (r["cct"] / bound - 1.0) for r in recs
+                    if r["scheme"] == name]
+            C.emit(f"fig1_{matrix}_{name}", us[name],
                    cct_increase_pct=round(float(np.mean(incs)), 2))
             out[(matrix, name)] = float(np.mean(incs))
-        cfg = loopsim.LoopConfig(max_slots=scale.max_slots)
-        for name in LOOP_ONLY:
-            (inc, _), us = C.timed(
-                lambda: C.loop_cct_increase(tree, wl, name, bound, cfg))
-            C.emit(f"fig1_{matrix}_{name}", us,
+        recs, us = _run_grid(sweep.Campaign(
+            name=f"fig1_{matrix}_loop", schemes=tuple(LOOP_ONLY),
+            loads=(load,), trees=(scale.k,), seeds=(0,), engine="loop",
+            loop_opts=(("max_slots", scale.max_slots),)))
+        for r in recs:
+            inc = 100.0 * (r["cct"] / bound - 1.0)
+            C.emit(f"fig1_{matrix}_{r['scheme']}", us[r["scheme"]],
                    cct_increase_pct=round(inc, 2), engine="loop")
-            out[(matrix, name)] = inc
+            out[(matrix, r["scheme"])] = inc
     return out
 
 
@@ -168,24 +192,22 @@ def fig6(scale: C.Scale):
 
 
 def fig7(scale: C.Scale):
-    """Worst-case per-layer load increase beyond ideal."""
-    tree = FatTree(scale.k)
-    wl = workloads.permutation(tree, scale.perm_msg,
-                               np.random.default_rng(4), inter_pod_only=True)
+    """Worst-case per-layer load increase beyond ideal (campaign grid; the
+    per-layer overload ratios come straight off the point records)."""
+    recs, us = _run_grid(sweep.Campaign(
+        name="fig7",
+        schemes=("simple_rr", "jsq", "host_pkt", "host_dr", "ofan"),
+        loads=(sweep.WorkloadSpec("permutation", scale.perm_msg,
+                                  inter_pod_only=True, rng_seed=4),),
+        trees=(scale.k,), seeds=(5,), prop_slots=C.PROP_SLOTS))
     out = {}
-    for name in ["simple_rr", "jsq", "host_pkt", "host_dr", "ofan"]:
-        res, us = C.timed(lambda: fastsim.simulate(
-            tree, wl, lbs.by_name(name), seed=5, prop_slots=C.PROP_SLOTS))
-        overloads = {}
-        for layer in ("E->A", "A->C", "C->A", "A->E"):
-            c = res.layers[layer].counts
-            used = c[c > 0]
-            ideal = c.sum() / len(c)
-            overloads[layer] = round(float(used.max() / ideal - 1), 3)
-        C.emit(f"fig7_{name}", us,
+    for r in recs:
+        overloads = {layer: round(r[f"overload_{layer.replace('->', '_')}"], 3)
+                     for layer in ("E->A", "A->C", "C->A", "A->E")}
+        C.emit(f"fig7_{r['scheme']}", us[r["scheme"]],
                **{f"ovl_{k.replace('->', '_')}": v
                   for k, v in overloads.items()})
-        out[name] = overloads
+        out[r["scheme"]] = overloads
     return out
 
 
@@ -330,22 +352,23 @@ def fig14(scale: C.Scale):
 
 
 def tbl3(scale: C.Scale):
-    """Queue-law fits q(m) = c*m^alpha (Table 3)."""
-    tree = FatTree(scale.k)
+    """Queue-law fits q(m) = c*m^alpha (Table 3), from one campaign over the
+    scheme x message-size grid."""
     ms = np.array([64, 256, 1024])
     expect = {"simple_rr": (0.7, 1.3), "jsq": (0.6, 1.3),
               "rsq": (0.25, 0.75), "host_pkt": (0.25, 0.75),
               "host_dr": (-0.2, 0.25), "ofan": (-0.2, 0.25)}
+    recs, _ = _run_grid(sweep.Campaign(
+        name="tbl3", schemes=tuple(expect),
+        loads=tuple(sweep.WorkloadSpec("permutation", int(m),
+                                       inter_pod_only=True, rng_seed=2)
+                    for m in ms),
+        trees=(scale.k,), seeds=(3,), prop_slots=C.PROP_SLOTS))
+    qs = {(r["scheme"], r["workload"]): r["max_queue"] for r in recs}
     out = {}
     for name, (lo, hi) in expect.items():
-        qs = []
-        for m in ms:
-            wl = workloads.permutation(tree, int(m),
-                                       np.random.default_rng(2),
-                                       inter_pod_only=True)
-            qs.append(fastsim.simulate(tree, wl, lbs.by_name(name), seed=3,
-                                       prop_slots=C.PROP_SLOTS).max_queue)
-        alpha, c = theory.fit_power_law(ms, np.array(qs))
+        q = np.array([qs[(name, f"permutation-m{m}-xpod-r2")] for m in ms])
+        alpha, c = theory.fit_power_law(ms, q)
         ok = lo <= alpha <= hi
         C.emit(f"tbl3_{name}", 0.0, alpha=round(alpha, 3),
                expected=f"[{lo}:{hi}]", ok=ok)
@@ -353,9 +376,11 @@ def tbl3(scale: C.Scale):
     return out
 
 
+from .sweep_bench import sweep_speedup  # noqa: E402  (registered below)
+
 ALL = {
     "fig1": fig1, "fig3": fig3, "fig4": fig4, "fig5": fig5, "fig6": fig6,
     "fig7": fig7, "fig8": fig8, "fig9": fig9, "fig10": fig10,
     "fig11": fig11, "fig12": fig12, "fig13": fig13, "fig14": fig14,
-    "tbl3": tbl3,
+    "tbl3": tbl3, "sweep": sweep_speedup,
 }

@@ -6,24 +6,30 @@ convergence time G varies -- the paper's headline operational question
 ("should operators rely on host-based LB or demand fast convergence from
 switch vendors?").
 
+The study is expressed as campaign specs (``repro.sweep``): the base
+``failures`` preset fixes the topology, traffic, failure pattern and
+transport, and each G value is a ``dataclasses.replace`` variant of it.
+Adaptive host schemes need ACK feedback, so these campaigns run on the
+slotted loop engine (``engine='loop'``); the same spec with fast-engine
+schemes would execute as seed-vmapped batches.
+
     PYTHONPATH=src python examples/simulate_fabric.py
 """
-import numpy as np
+import dataclasses
 
-from repro.net.topology import FatTree, LinkState, rho_max
-from repro.net import workloads, loopsim
-from repro.core import lb_schemes as lbs
+from repro.net.topology import FatTree, rho_max
+from repro import sweep
 
 
 def main():
-    tree = FatTree(4)
-    rng = np.random.default_rng(42)
-    links = LinkState.random_failures(tree, 0.08, rng)
+    base = sweep.preset("failures")          # k=4, p_fail=0.08, loop engine
+    k = base.trees[0]
+    tree = FatTree(k)
+    links = sweep.build_links(tree, base.failures[0])
     n_dead = int((~links.ea).sum() + (~links.ac).sum())
-    print(f"fat-tree k=4 ({tree.n_hosts} hosts); {n_dead} failed links")
+    print(f"fat-tree k={k} ({tree.n_hosts} hosts); {n_dead} failed links")
 
-    wl = workloads.permutation(tree, 64, np.random.default_rng(1),
-                               inter_pod_only=True)
+    wl = sweep.build_workload(tree, base.loads[0])
     rho = rho_max(tree, links, wl.flow_src, wl.flow_dst)
     print(f"rho_max under failures: {rho:.3f} (Appendix A)\n")
 
@@ -32,14 +38,15 @@ def main():
           f"{'OFAN':>8s}   (CCT slots; lower is better)")
     for g_label, g in [("0", 0), ("1 RTT", rtt), ("16 RTT", 16 * rtt),
                        ("infinite", None)]:
-        row = []
-        for name in ("host_pkt_ar", "switch_pkt_ar", "ofan"):
-            cfg = loopsim.LoopConfig(max_slots=20000, rho=float(rho),
-                                     rto_slots=250)
-            res = loopsim.simulate(tree, wl, lbs.by_name(name), cfg, seed=0,
-                                   links=links, g_converge=g)
-            row.append(res.cct_slots)
-        print(f"{g_label:>10s} {row[0]:16.0f} {row[1]:12.0f} {row[2]:8.0f}")
+        opts = dict(base.loop_options())
+        opts["g_converge"] = g
+        campaign = dataclasses.replace(
+            base, name=f"failures_G{g_label.replace(' ', '')}",
+            loop_opts=tuple(sorted(opts.items())))
+        records, _ = sweep.run_campaign(campaign)
+        cct = {r["scheme"]: r["cct"] for r in records}
+        print(f"{g_label:>10s} {cct['host_pkt_ar']:16.0f} "
+              f"{cct['switch_pkt_ar']:12.0f} {cct['ofan']:8.0f}")
 
     print("\npaper takeaway: host AR tracks failures end-to-end and wins at "
           "large G; all converge once routing state is updated (G=0).")

@@ -57,6 +57,18 @@ class LBScheme:
     def needs_feedback(self) -> bool:
         return self.adaptive_host
 
+    def shape_key(self) -> Tuple:
+        """Hashable key of everything that determines the *compiled* fast-engine
+        pipeline (mirrors ``fastsim._build_run``'s cache key, minus the
+        topology/padding part).  Two schemes with equal shape keys -- e.g.
+        flow_ecmp and host_pkt, which differ only in host-side label
+        granularity -- share one compiled executable; the sweep planner orders
+        campaign grid points by this key to maximize compile-cache reuse."""
+        quanta = (tuple(self.quanta) if self.edge_mode == "jsq_quant"
+                  else None)
+        return (self.edge_mode, self.agg_mode, quanta, self.buffer_pkts,
+                self.reset_wraps)
+
 
 # ---------------------------------------------------------------------------
 # Factories — Table 2 of the paper.

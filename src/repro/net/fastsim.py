@@ -76,14 +76,15 @@ def segmented_cummax(v, seg_start, backend: str = "auto"):
     raise ValueError(backend)
 
 
-def _ranks_and_starts(sorted_gkey: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def _ranks_and_starts(sorted_gkey: jnp.ndarray,
+                      backend: str = "auto") -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Given group keys sorted ascending, return (rank within group, segment
     start flags)."""
     n = sorted_gkey.shape[0]
     idx = jnp.arange(n, dtype=jnp.float32)
     flag = jnp.concatenate([jnp.ones((1,), bool),
                             sorted_gkey[1:] != sorted_gkey[:-1]])
-    start = segmented_cummax(jnp.where(flag, idx, _NEG), flag)
+    start = segmented_cummax(jnp.where(flag, idx, _NEG), flag, backend)
     rank = (idx - start).astype(jnp.int32)
     return rank, flag
 
@@ -130,7 +131,7 @@ def _ranked_ports(gkey, a, tie, active, select_fn, backend):
     order = jnp.lexsort((tie, a, g))
     inv = jnp.zeros_like(order).at[order].set(jnp.arange(npk))
     gs = g[order]
-    rank, _ = _ranks_and_starts(gs)
+    rank, _ = _ranks_and_starts(gs, backend)
     gid = jnp.where(gs < 2**30, gs, 0)
     port_sorted = select_fn(gid, rank)
     return port_sorted[inv].astype(jnp.int32)
@@ -153,7 +154,7 @@ def _jsq_layer(switch, a, tie, active, *, n_switches: int, pad: int, h: int,
     order = jnp.lexsort((tie, a, skey))
     ss = skey[order]
     av = a[order]
-    rank, _ = _ranks_and_starts(ss)
+    rank, _ = _ranks_and_starts(ss, backend)
     overflow = jnp.max(jnp.where(ss < 2**30, rank, 0)) >= pad
 
     rows = jnp.where(ss < 2**30, ss, 0)
@@ -249,18 +250,58 @@ def _select_fn_for(mode: str, h: int, tables: dict):
     raise ValueError(mode)
 
 
-def simulate(tree: FatTree, wl: Workload, scheme: LBScheme, seed: int = 0,
-             prop_slots: float = 12.0, collect_stats: bool = True,
-             links: Optional[LinkState] = None,
-             backend: str = "auto", jsq_pad_factor: float = 4.0) -> FastSimResult:
-    """Run one collective under ``scheme`` on the fast engine."""
+@dataclasses.dataclass
+class SimPlan:
+    """Seed-independent preparation of one (tree, workload, scheme, links)
+    simulation point.
+
+    Splitting this out of :func:`simulate` is what makes seed replication
+    batchable: everything here is identical across seeds, while
+    :func:`_draw_seed_inputs` produces the per-seed arrays that become the
+    leading ``vmap`` axis in :func:`simulate_batch`.
+    """
+    tree: FatTree
+    wl: Workload
+    scheme: LBScheme
+    prop_slots: float
+    links: Optional[LinkState]
+    backend: str
+    jsq_pad_factor: float
+    static_args: dict = dataclasses.field(default_factory=dict)
+    path_valid: Optional[np.ndarray] = None
+    n_reset_epochs: int = 1
+    pad_e: int = 0
+    pad_a: int = 0
+    quanta: Optional[Tuple[float, ...]] = None
+    tables_e_keys: Tuple[str, ...] = ()
+    tables_a_keys: Tuple[str, ...] = ()
+
+    @property
+    def jsq(self) -> bool:
+        return self.scheme.edge_mode in ("jsq", "jsq_quant")
+
+    def build_run(self, batch: bool):
+        tree, scheme = self.tree, self.scheme
+        return _build_run(h=tree.half, n_pods=tree.n_pods,
+                          n_edges=tree.n_edge_switches,
+                          n_aggs=tree.n_agg_switches, n_hosts=tree.n_hosts,
+                          edge_mode=scheme.edge_mode, agg_mode=scheme.agg_mode,
+                          quanta=self.quanta, buffer_pkts=scheme.buffer_pkts,
+                          reset_wraps=scheme.reset_wraps,
+                          pad_e=self.pad_e, pad_a=self.pad_a,
+                          prop=float(self.prop_slots), backend=self.backend,
+                          tables_e_keys=self.tables_e_keys,
+                          tables_a_keys=self.tables_a_keys, batch=batch)
+
+
+def _prepare(tree: FatTree, wl: Workload, scheme: LBScheme, prop_slots: float,
+             links: Optional[LinkState], backend: str,
+             jsq_pad_factor: float) -> SimPlan:
+    """Host-side precomputation shared by every seed of a simulation point."""
     if scheme.needs_feedback:
         raise ValueError(f"{scheme.name} needs ACK feedback; use net.loopsim")
-    h = tree.half
-    rng = np.random.default_rng(seed)
-    npk = wl.n_packets
-
-    # ---- static per-packet fields -----------------------------------------
+    plan = SimPlan(tree=tree, wl=wl, scheme=scheme, prop_slots=prop_slots,
+                   links=links, backend=backend, jsq_pad_factor=jsq_pad_factor)
     src, dst = wl.src, wl.dst
     p1 = tree.host_pod(src).astype(np.int32)
     e1 = tree.host_edge(src).astype(np.int32)
@@ -268,24 +309,60 @@ def simulate(tree: FatTree, wl: Workload, scheme: LBScheme, seed: int = 0,
     e2 = tree.host_edge(dst).astype(np.int32)
     inter_pod = (p1 != p2)
     leaves_edge = inter_pod | (e1 != e2)
+    plan.static_args = dict(p1=p1, e1=e1, p2=p2, e2=e2,
+                            dst=dst.astype(np.int32), inter_pod=inter_pod,
+                            leaves_edge=leaves_edge)
+
+    # ---- path validity under failures (host visibility: converged state) --
+    if links is not None and links.any_failure() and scheme.edge_mode == "pre":
+        plan.path_valid = np.stack([links.path_matrix(int(s), int(d))
+                                    for s, d in zip(wl.flow_src, wl.flow_dst)])
+
+    h = tree.half
+    if scheme.edge_mode == "rr_reset":
+        max_cnt = int(np.bincount(tree.host_global_edge(src)[leaves_edge],
+                                  minlength=tree.n_edge_switches).max()
+                      ) if leaves_edge.any() else 1
+        plan.n_reset_epochs = max(
+            1, int(np.ceil(max_cnt / (scheme.reset_wraps * h))))
+        plan.tables_e_keys = plan.tables_a_keys = ("rr_perms", "rr_starts")
+    elif scheme.edge_mode == "rr":
+        plan.tables_e_keys = plan.tables_a_keys = ("rr_starts",)
+    elif scheme.edge_mode == "ofan":
+        plan.tables_e_keys = plan.tables_a_keys = ("lens", "orders", "starts")
+
+    # ---- JSQ padding (workload-dependent, seed-independent) ----------------
+    if plan.jsq:
+        cnt_e = np.bincount(tree.host_global_edge(src)[leaves_edge],
+                            minlength=tree.n_edge_switches)
+        plan.pad_e = max(int(cnt_e.max()), 1)
+        per_pod = np.bincount(p1[inter_pod], minlength=tree.n_pods)
+        plan.pad_a = max(int(np.ceil(jsq_pad_factor * per_pod.max() / h)) + 64,
+                         64)
+    plan.quanta = (tuple(scheme.quanta) if scheme.edge_mode == "jsq_quant"
+                   else None)
+    return plan
+
+
+def _draw_seed_inputs(plan: SimPlan, seed: int) -> dict:
+    """Per-seed randomness, drawn in the exact order the pre-batching engine
+    used so results stay bit-identical run-to-run and serial-to-batched."""
+    tree, wl, scheme = plan.tree, plan.wl, plan.scheme
+    h = tree.half
+    npk = wl.n_packets
+    rng = np.random.default_rng(seed)
+
     phases = rng.random(wl.n_hosts).astype(np.float32)
-    t_rel = (wl.t_release + phases[src]).astype(np.float32)
+    t_rel = (wl.t_release + phases[wl.src]).astype(np.float32)
     # Flow-static tie keys: consistent switch arbitration across slots (gives
     # RR/JSQ their sticky-flow behavior, App. C).
     tie = rng.random(wl.n_flows).astype(np.float32)[wl.flow]
 
-    # ---- path validity under failures (host visibility: converged state) --
-    path_valid = None
-    if links is not None and links.any_failure() and scheme.edge_mode == "pre":
-        path_valid = np.stack([links.path_matrix(int(s), int(d))
-                               for s, d in zip(wl.flow_src, wl.flow_dst)])
-
-    # ---- host-side choices --------------------------------------------------
     a_pre = c_pre = None
     if scheme.edge_mode == "pre":
         a_pre, c_pre = precompute_host_choices(
             scheme, tree, wl.flow, wl.seq, wl.flow_src, wl.flow_dst, rng,
-            path_valid=path_valid)
+            path_valid=plan.path_valid)
         a_pre = a_pre.astype(np.int32)
         c_pre = c_pre.astype(np.int32)
     rand_a = rng.integers(0, h, npk).astype(np.int32)
@@ -300,68 +377,34 @@ def simulate(tree: FatTree, wl: Workload, scheme: LBScheme, seed: int = 0,
         tables_e["rr_starts"] = rng.integers(0, h, n_edges).astype(np.int32)
         tables_a["rr_starts"] = rng.integers(0, h, n_aggs).astype(np.int32)
         if scheme.edge_mode == "rr_reset":
-            max_cnt = int(np.bincount(tree.host_global_edge(src)[leaves_edge],
-                                      minlength=n_edges).max()) if leaves_edge.any() else 1
-            n_ep = max(1, int(np.ceil(max_cnt / (scheme.reset_wraps * h))))
+            n_ep = plan.n_reset_epochs
             tables_e["rr_perms"] = np.argsort(
                 rng.random((n_edges, n_ep, h)), axis=-1).astype(np.int32)
             tables_a["rr_perms"] = np.argsort(
                 rng.random((n_aggs, n_ep, h)), axis=-1).astype(np.int32)
-            tables_e["reset_wraps"] = tables_a["reset_wraps"] = scheme.reset_wraps
     elif scheme.edge_mode == "ofan":
-        ot = ofan_mod.build_tables(tree, rng, links=links)
+        ot = ofan_mod.build_tables(tree, rng, links=plan.links)
         tables_e = {"orders": ot.edge_orders, "starts": ot.edge_starts,
                     "lens": ot.edge_len}
         tables_a = {"orders": ot.agg_orders, "starts": ot.agg_starts,
                     "lens": ot.agg_len}
 
-    # ---- JSQ padding ---------------------------------------------------------
-    jsq = scheme.edge_mode in ("jsq", "jsq_quant")
-    pad_e = pad_a = 0
-    if jsq:
-        cnt_e = np.bincount(tree.host_global_edge(src)[leaves_edge],
-                            minlength=n_edges)
-        pad_e = max(int(cnt_e.max()), 1)
-        per_pod = np.bincount(p1[inter_pod], minlength=tree.n_pods)
-        pad_a = max(int(np.ceil(jsq_pad_factor * per_pod.max() / h)) + 64, 64)
-
-    quanta = tuple(scheme.quanta) if scheme.edge_mode == "jsq_quant" else None
-
-    run = _build_run(h=h, n_pods=tree.n_pods, n_edges=n_edges, n_aggs=n_aggs,
-                     n_hosts=tree.n_hosts, edge_mode=scheme.edge_mode,
-                     agg_mode=scheme.agg_mode, quanta=quanta,
-                     buffer_pkts=scheme.buffer_pkts, pad_e=pad_e, pad_a=pad_a,
-                     prop=float(prop_slots), backend=backend,
-                     tables_e_keys=tuple(sorted(tables_e)),
-                     tables_a_keys=tuple(sorted(tables_a)))
-
     noise_e = noise_a = np.zeros((1, 1, 1), np.float32)
-    if jsq:
-        noise_e = rng.random((n_edges, pad_e, h)).astype(np.float32)
-        noise_a = rng.random((n_aggs, pad_a, h)).astype(np.float32)
+    if plan.jsq:
+        noise_e = rng.random((n_edges, plan.pad_e, h)).astype(np.float32)
+        noise_a = rng.random((n_aggs, plan.pad_a, h)).astype(np.float32)
 
-    args = dict(p1=p1, e1=e1, p2=p2, e2=e2, dst=dst.astype(np.int32),
-                inter_pod=inter_pod, leaves_edge=leaves_edge, t_rel=t_rel,
-                tie=tie,
+    return dict(t_rel=t_rel, tie=tie,
                 a_pre=a_pre if a_pre is not None else np.zeros(npk, np.int32),
                 c_pre=c_pre if c_pre is not None else np.zeros(npk, np.int32),
                 rand_a=rand_a, rand_c=rand_c,
                 noise_e=noise_e, noise_a=noise_a,
-                te=tuple(np.asarray(tables_e[k]) for k in sorted(tables_e)
-                         if k != "reset_wraps"),
-                ta=tuple(np.asarray(tables_a[k]) for k in sorted(tables_a)
-                         if k != "reset_wraps"),
-                reset_wraps=scheme.reset_wraps)
+                te=tuple(np.asarray(tables_e[k]) for k in plan.tables_e_keys),
+                ta=tuple(np.asarray(tables_a[k]) for k in plan.tables_a_keys))
 
-    out = run(**args)
-    out = jax.tree_util.tree_map(np.asarray, out)
-    if bool(out["overflow"]):
-        if jsq_pad_factor > 64:
-            raise RuntimeError("JSQ pad overflow even with huge padding")
-        return simulate(tree, wl, scheme, seed=seed, prop_slots=prop_slots,
-                        collect_stats=collect_stats, links=links,
-                        backend=backend, jsq_pad_factor=jsq_pad_factor * 2)
 
+def _postprocess(out: dict, wl: Workload) -> FastSimResult:
+    """Assemble a FastSimResult from one (unbatched) pipeline output tree."""
     delivery = out["delivery"]
     flow_completion = np.full(wl.n_flows, -np.inf)
     np.maximum.at(flow_completion, wl.flow, delivery)
@@ -380,21 +423,96 @@ def simulate(tree: FatTree, wl: Workload, scheme: LBScheme, seed: int = 0,
                          c_used=out["c_used"])
 
 
+def simulate(tree: FatTree, wl: Workload, scheme: LBScheme, seed: int = 0,
+             prop_slots: float = 12.0, collect_stats: bool = True,
+             links: Optional[LinkState] = None,
+             backend: str = "auto", jsq_pad_factor: float = 4.0) -> FastSimResult:
+    """Run one collective under ``scheme`` on the fast engine."""
+    plan = _prepare(tree, wl, scheme, prop_slots, links, backend,
+                    jsq_pad_factor)
+    run = plan.build_run(batch=False)
+    out = run({**plan.static_args, **_draw_seed_inputs(plan, seed)})
+    out = jax.tree_util.tree_map(np.asarray, out)
+    if bool(out["overflow"]):
+        if jsq_pad_factor > 64:
+            raise RuntimeError("JSQ pad overflow even with huge padding")
+        return simulate(tree, wl, scheme, seed=seed, prop_slots=prop_slots,
+                        collect_stats=collect_stats, links=links,
+                        backend=backend, jsq_pad_factor=jsq_pad_factor * 2)
+    return _postprocess(out, wl)
+
+
+def simulate_batch(tree: FatTree, wl: Workload, scheme: LBScheme,
+                   seeds, prop_slots: float = 12.0,
+                   collect_stats: bool = True,
+                   links: Optional[LinkState] = None, backend: str = "auto",
+                   jsq_pad_factor: float = 4.0) -> list:
+    """Run one simulation point for many seeds as a single vmapped dispatch.
+
+    Per-seed randomness is drawn host-side exactly as :func:`simulate` draws
+    it and stacked into a leading batch axis; the jitted pipeline is then
+    ``jax.vmap``-ed over that axis, so the whole replicate set costs one
+    compile + one dispatch.  Results are identical (bitwise, per seed) to
+    serial :func:`simulate` calls; JSQ pad overflows are re-run with a larger
+    pad only for the seeds that overflowed, matching the serial retry.
+    """
+    seeds = list(seeds)
+    if not seeds:
+        return []
+    plan = _prepare(tree, wl, scheme, prop_slots, links, backend,
+                    jsq_pad_factor)
+    per_seed = [_draw_seed_inputs(plan, s) for s in seeds]
+    stacked = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *per_seed)
+    run = plan.build_run(batch=True)
+    out = run({**plan.static_args, **stacked})
+    out = jax.tree_util.tree_map(np.asarray, out)
+
+    results: dict = {}
+    retry = []
+    for i, s in enumerate(seeds):
+        if bool(out["overflow"][i]):
+            retry.append(s)
+        else:
+            out_i = jax.tree_util.tree_map(lambda x: x[i], out)
+            results[s] = _postprocess(out_i, wl)
+    if retry:
+        if jsq_pad_factor > 64:
+            raise RuntimeError("JSQ pad overflow even with huge padding")
+        redone = simulate_batch(tree, wl, scheme, retry,
+                                prop_slots=prop_slots,
+                                collect_stats=collect_stats, links=links,
+                                backend=backend,
+                                jsq_pad_factor=jsq_pad_factor * 2)
+        results.update(dict(zip(retry, redone)))
+    return [results[s] for s in seeds]
+
+
+# Positional order of the pipeline arguments; the first _N_STATIC are
+# seed-independent (vmap in_axes=None), the rest carry the seed batch axis.
+_ARG_ORDER = ("p1", "e1", "p2", "e2", "dst", "inter_pod", "leaves_edge",
+              "t_rel", "tie", "a_pre", "c_pre", "rand_a", "rand_c",
+              "noise_e", "noise_a", "te", "ta")
+_N_STATIC = 7
+
+
 @functools.lru_cache(maxsize=64)
 def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
-               quanta, buffer_pkts, pad_e, pad_a, prop, backend,
-               tables_e_keys, tables_a_keys):
-    """Compile the 5-layer pipeline for a given (scheme-shape, tree) config."""
+               quanta, buffer_pkts, reset_wraps, pad_e, pad_a, prop, backend,
+               tables_e_keys, tables_a_keys, batch):
+    """Compile the 5-layer pipeline for a given (scheme-shape, tree) config.
+
+    ``batch=True`` builds the seed-vmapped variant (leading axis on every
+    per-seed argument).  The cache key is the *pipeline shape*: two schemes
+    with the same modes/padding share one compiled executable, which the
+    sweep planner exploits when grouping campaign grid points.
+    """
 
     mid = n_pods * h * h   # queues per middle layer
 
     def pipeline(p1, e1, p2, e2, dst, inter_pod, leaves_edge, t_rel, tie,
-                 a_pre, c_pre, rand_a, rand_c, noise_e, noise_a, te, ta,
-                 reset_wraps):
-        tbl_e = {k: v for k, v in zip([k for k in tables_e_keys
-                                       if k != "reset_wraps"], te)}
-        tbl_a = {k: v for k, v in zip([k for k in tables_a_keys
-                                       if k != "reset_wraps"], ta)}
+                 a_pre, c_pre, rand_a, rand_c, noise_e, noise_a, te, ta):
+        tbl_e = dict(zip(tables_e_keys, te))
+        tbl_a = dict(zip(tables_a_keys, ta))
         if "rr_starts" in tbl_e:
             tbl_e["reset_wraps"] = reset_wraps
             tbl_a["reset_wraps"] = reset_wraps
@@ -498,9 +616,14 @@ def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
                 "a_used": a_used, "c_used": c_used,
                 "overflow": overflow}
 
-    jitted = jax.jit(pipeline, static_argnames=("reset_wraps",))
+    if batch:
+        n_args = len(_ARG_ORDER)
+        in_axes = (None,) * _N_STATIC + (0,) * (n_args - _N_STATIC)
+        jitted = jax.jit(jax.vmap(pipeline, in_axes=in_axes))
+    else:
+        jitted = jax.jit(pipeline)
 
-    def run(**kw):
-        return jitted(**kw)
+    def run(kw: dict):
+        return jitted(*(kw[k] for k in _ARG_ORDER))
 
     return run

@@ -1,0 +1,29 @@
+"""Batched scenario-campaign engine.
+
+Declarative sweeps over the paper's evaluation axes (LB scheme x load x
+fat-tree size x replicate seeds x failure patterns) executed with one
+jitted, seed-vmapped dispatch per simulation point instead of a Python loop
+of per-seed ``fastsim.simulate`` calls.
+
+    from repro import sweep
+
+    c = sweep.preset("theory", seeds=tuple(range(8)))
+    records, _ = sweep.run_campaign(c, store=sweep.ResultStore("out.jsonl"))
+    for row in sweep.summarize(records):
+        print(row["scheme"], row["cct_mean"], row["cct_std"])
+
+CLI: ``python -m repro.sweep run --preset theory --out runs/theory``.
+"""
+from .spec import (Campaign, FailureSpec, GridPoint, PRESETS, WorkloadSpec,
+                   preset)
+from .planner import Plan, SeedBatch, plan
+from .results import (ResultStore, encode_record, loop_point_record,
+                      point_record, summarize, write_summary)
+from .runner import build_links, build_workload, run_campaign
+
+__all__ = [
+    "Campaign", "FailureSpec", "GridPoint", "PRESETS", "WorkloadSpec",
+    "preset", "Plan", "SeedBatch", "plan", "ResultStore", "encode_record",
+    "loop_point_record", "point_record", "summarize", "write_summary",
+    "build_links", "build_workload", "run_campaign",
+]

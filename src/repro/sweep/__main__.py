@@ -1,0 +1,130 @@
+"""Campaign CLI.
+
+    python -m repro.sweep run --preset theory --out runs/theory
+    python -m repro.sweep run --spec campaign.json --seeds 0:8
+    python -m repro.sweep presets
+    python -m repro.sweep summarize --results runs/theory/results.jsonl
+
+``run`` writes ``<out>/results.jsonl`` (one record per grid point) and
+``<out>/summary.jsonl`` (seed-aggregated rows), both byte-deterministic for
+a given spec.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+
+from .spec import Campaign, PRESETS, preset
+from .planner import plan
+from .results import ResultStore, summarize, write_summary
+from .runner import run_campaign
+
+
+def _parse_seeds(text: str):
+    """'0:8' -> range(0, 8); '1,5,9' -> (1, 5, 9)."""
+    if ":" in text:
+        lo, hi = text.split(":")
+        return tuple(range(int(lo), int(hi)))
+    return tuple(int(s) for s in text.split(","))
+
+
+def _load_campaign(args) -> Campaign:
+    if args.preset:
+        c = preset(args.preset)
+    else:
+        with open(args.spec) as f:
+            c = Campaign.from_dict(json.load(f))
+    override = {}
+    if args.seeds:
+        override["seeds"] = _parse_seeds(args.seeds)
+    if args.k:
+        override["trees"] = tuple(int(k) for k in args.k.split(","))
+    if args.backend:
+        override["backend"] = args.backend
+    return dataclasses.replace(c, **override) if override else c
+
+
+def cmd_run(args) -> int:
+    c = _load_campaign(args)
+    out = pathlib.Path(args.out) if args.out else None
+    store = ResultStore(out / "results.jsonl" if out else None)
+    quiet = args.quiet
+    records, _ = run_campaign(
+        c, store=store, progress=None if quiet else print)
+    store.close()
+    rows = (write_summary(out / "summary.jsonl", records) if out
+            else summarize(records))
+    if not quiet:
+        for row in rows:
+            print(f"{row['scheme']:>16s} k={row['k']} {row['workload']:<22s} "
+                  f"cct {row['cct_mean']:10.1f} +- {row['cct_std']:7.1f} "
+                  f"(n={row['n_seeds']})  max_q {row['max_queue_max']:8.1f}")
+        if out:
+            print(f"wrote {out / 'results.jsonl'} and {out / 'summary.jsonl'}")
+    return 0
+
+
+def cmd_plan(args) -> int:
+    c = _load_campaign(args)
+    p = plan(c)
+    print(p.describe())
+    for b in p.batches:
+        fail = b.failure.label() if b.failure else "nofail"
+        print(f"  {b.scheme:>16s} k={b.k} {b.load.label():<22s} {fail:<14s} "
+              f"seeds={list(b.seeds)}")
+    return 0
+
+
+def cmd_presets(_args) -> int:
+    for name in sorted(PRESETS):
+        c = PRESETS[name]()
+        print(f"{name:>14s}: {c.n_points:4d} points  engine={c.engine:<5s} "
+              f"schemes={','.join(c.schemes)}")
+    return 0
+
+
+def cmd_summarize(args) -> int:
+    store = ResultStore.load(args.results)
+    for row in summarize(store.records):
+        print(json.dumps(row, sort_keys=True))
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.sweep")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    def _spec_args(p):
+        g = p.add_mutually_exclusive_group(required=True)
+        g.add_argument("--preset", choices=sorted(PRESETS))
+        g.add_argument("--spec", help="path to a Campaign JSON file")
+        p.add_argument("--seeds", help="override seeds: '0:8' or '1,5,9'")
+        p.add_argument("--k", help="override tree sizes: '4,8'")
+        p.add_argument("--backend", choices=["auto", "xla", "pallas"])
+
+    p_run = sub.add_parser("run", help="execute a campaign")
+    _spec_args(p_run)
+    p_run.add_argument("--out", help="output dir for results/summary JSONL")
+    p_run.add_argument("--quiet", action="store_true")
+    p_run.set_defaults(fn=cmd_run)
+
+    p_plan = sub.add_parser("plan", help="show the batched execution plan")
+    _spec_args(p_plan)
+    p_plan.set_defaults(fn=cmd_plan)
+
+    p_pre = sub.add_parser("presets", help="list named campaign presets")
+    p_pre.set_defaults(fn=cmd_presets)
+
+    p_sum = sub.add_parser("summarize", help="aggregate a results.jsonl")
+    p_sum.add_argument("--results", required=True)
+    p_sum.set_defaults(fn=cmd_summarize)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

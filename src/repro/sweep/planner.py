@@ -1,0 +1,92 @@
+"""Campaign execution planning.
+
+Two-level grouping of the expanded grid:
+
+1. **Seed batches** -- grid points identical up to the replicate seed merge
+   into one :class:`SeedBatch`, which the runner executes as a *single*
+   ``fastsim.simulate_batch`` call (one jitted, seed-vmapped dispatch).
+2. **Compile groups** -- batches are ordered by *pipeline shape key*
+   (tree/workload/failure identity + ``LBScheme.shape_key()``), the same
+   information that keys ``fastsim._build_run``'s compile cache.  Batches
+   with equal shape keys run back-to-back and share one compiled executable:
+   e.g. flow_ecmp, subflow_mptcp, host_pkt and host_dr all lower to the same
+   'pre/pre' pipeline and compile exactly once per (tree, workload) pair.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from ..core import lb_schemes as lbs
+from .spec import Campaign, FailureSpec, GridPoint, WorkloadSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class SeedBatch:
+    """All replicate seeds of one simulation point: one vmapped execution."""
+    campaign: str
+    k: int
+    load: WorkloadSpec
+    failure: Optional[FailureSpec]
+    scheme: str
+    seeds: Tuple[int, ...]
+
+    def points(self) -> List[GridPoint]:
+        return [GridPoint(self.campaign, self.k, self.load, self.failure,
+                          self.scheme, s) for s in self.seeds]
+
+    def shape_key(self, backend: str, prop_slots: float) -> Tuple:
+        """Compiled-pipeline identity (modulo JSQ padding, which the engine
+        derives from the workload and is therefore equal within a group)."""
+        return (self.k, self.load, self.failure,
+                lbs.by_name(self.scheme).shape_key(), backend,
+                float(prop_slots))
+
+
+@dataclasses.dataclass
+class Plan:
+    campaign: Campaign
+    batches: List[SeedBatch]
+
+    @property
+    def n_points(self) -> int:
+        return sum(len(b.seeds) for b in self.batches)
+
+    @property
+    def n_dispatches(self) -> int:
+        return len(self.batches)
+
+    def describe(self) -> str:
+        n_shapes = len({b.shape_key(self.campaign.backend,
+                                    self.campaign.prop_slots)
+                        for b in self.batches})
+        return (f"campaign {self.campaign.name!r}: {self.n_points} grid "
+                f"points -> {self.n_dispatches} batched dispatches "
+                f"({n_shapes} compiled pipeline shapes)")
+
+
+def plan(campaign: Campaign) -> Plan:
+    """Group the campaign grid into seed batches ordered for compile reuse."""
+    batches: dict = {}
+    order: list = []
+    for p in campaign.points():
+        key = (p.k, p.load, p.failure, p.scheme)
+        if key not in batches:
+            batches[key] = []
+            order.append(key)
+        batches[key].append(p.seed)
+
+    out = [SeedBatch(campaign=campaign.name, k=k, load=load, failure=failure,
+                     scheme=scheme, seeds=tuple(batches[(k, load, failure,
+                                                         scheme)]))
+           for (k, load, failure, scheme) in order]
+    # Stable sort by shape key: batches sharing a compiled pipeline become
+    # adjacent while the within-shape grid order is preserved.
+    shape_rank: dict = {}
+    for b in out:
+        shape_rank.setdefault(
+            b.shape_key(campaign.backend, campaign.prop_slots),
+            len(shape_rank))
+    out.sort(key=lambda b: shape_rank[b.shape_key(campaign.backend,
+                                                  campaign.prop_slots)])
+    return Plan(campaign=campaign, batches=out)

@@ -1,0 +1,179 @@
+"""Campaign result records, JSONL persistence, and seed aggregation.
+
+One record per grid point (scheme x load x tree x failure x seed), holding
+the scalar metrics the paper's figures are built from: collective completion
+time, queue maxima, per-layer waits, delivery-time percentiles, and -- for
+the layer-balance study -- counts-based per-layer overload ratios.
+
+Records are written as JSONL with sorted keys and canonical float repr, so a
+re-run of the same campaign produces a byte-identical file (tested in
+``tests/test_sweep.py``); summaries aggregate over the seed axis (mean/p99
+CCT plus seed spread).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..net.topology import LAYER_NAMES
+from .spec import GridPoint
+
+# Grid-point identity fields, in summary group-by order (everything but seed).
+_KEY_FIELDS = ("campaign", "k", "workload", "failure", "scheme")
+
+
+def point_record(point: GridPoint, res) -> Dict:
+    """Flatten one ``fastsim.FastSimResult`` into a JSON-safe record."""
+    delivery = np.asarray(res.delivery)
+    rec = {
+        "campaign": point.campaign,
+        "k": point.k,
+        "workload": point.load.label(),
+        "failure": point.failure.label() if point.failure else None,
+        "scheme": point.scheme,
+        "seed": point.seed,
+        "engine": "fast",
+        "n_packets": int(delivery.shape[0]),
+        "cct": float(res.cct),
+        "max_queue": float(res.max_queue),
+        "delivery_p50": float(np.percentile(delivery, 50)),
+        "delivery_p99": float(np.percentile(delivery, 99)),
+        "flow_completion_p99": float(np.percentile(res.flow_completion, 99)),
+    }
+    for name in LAYER_NAMES:
+        st = res.layers[name]
+        tag = name.replace("->", "_")
+        rec[f"max_queue_{tag}"] = float(st.max_queue)
+        rec[f"avg_wait_{tag}"] = float(st.avg_wait)
+        counts = np.asarray(st.counts)
+        used = counts[counts > 0]
+        if used.size and counts.sum() > 0:
+            ideal = counts.sum() / counts.shape[0]
+            rec[f"overload_{tag}"] = float(used.max() / ideal - 1.0)
+        else:
+            rec[f"overload_{tag}"] = 0.0
+    return rec
+
+
+def loop_point_record(point: GridPoint, res) -> Dict:
+    """Flatten one ``loopsim.LoopSimResult`` into a JSON-safe record."""
+    return {
+        "campaign": point.campaign,
+        "k": point.k,
+        "workload": point.load.label(),
+        "failure": point.failure.label() if point.failure else None,
+        "scheme": point.scheme,
+        "seed": point.seed,
+        "engine": "loop",
+        "cct": float(res.cct_slots),
+        "cct_acked": float(res.cct_acked_slots),
+        "max_queue": float(res.max_queue),
+        "avg_queue": float(res.avg_queue),
+        "drops": int(res.drops),
+        "retransmissions": int(res.retransmissions),
+        "finished": bool(res.finished),
+        "mean_cwnd": float(res.mean_cwnd),
+    }
+
+
+def _canon(x):
+    """JSON-canonical scalars: floats through repr-stable float(), numpy
+    scalars unboxed."""
+    if isinstance(x, (np.floating,)):
+        return float(x)
+    if isinstance(x, (np.integer,)):
+        return int(x)
+    return x
+
+
+def encode_record(rec: Dict) -> str:
+    return json.dumps({k: _canon(v) for k, v in rec.items()}, sort_keys=True)
+
+
+class ResultStore:
+    """Append-only JSONL store for point records, with deterministic bytes.
+
+    ``path=None`` keeps records in memory only (used by benchmarks/tests
+    that aggregate without persisting).
+    """
+
+    def __init__(self, path: Optional[str] = None, overwrite: bool = True):
+        self.path = pathlib.Path(path) if path else None
+        self.records: List[Dict] = []
+        # per-dispatch wall times, filled by the runner: list of
+        # (SeedBatch, seconds).  Kept off the JSONL so result files stay
+        # byte-deterministic; benchmarks read it for per-scheme timings.
+        self.timings: List = []
+        self._fh = None
+        if self.path:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            if overwrite and self.path.exists():
+                self.path.unlink()
+
+    def append(self, rec: Dict) -> None:
+        self.records.append(rec)
+        if self.path:
+            if self._fh is None:
+                self._fh = self.path.open("a")
+            self._fh.write(encode_record(rec) + "\n")
+            self._fh.flush()    # every appended record is durable on return
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    @classmethod
+    def load(cls, path: str) -> "ResultStore":
+        store = cls(None)
+        with pathlib.Path(path).open() as f:
+            store.records = [json.loads(line) for line in f if line.strip()]
+        return store
+
+
+def summarize(records: List[Dict]) -> List[Dict]:
+    """Aggregate over the seed axis: one summary row per grid point identity.
+
+    Reports mean and p99 CCT, the max-over-seeds queue maximum, and the seed
+    spread (std / min / max of CCT) that the paper's error bars show.
+    """
+    groups: Dict[tuple, List[Dict]] = {}
+    order: List[tuple] = []
+    for r in records:
+        key = tuple(r.get(k) for k in _KEY_FIELDS)
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append(r)
+
+    out = []
+    for key in order:
+        rs = groups[key]
+        cct = np.array([r["cct"] for r in rs], dtype=np.float64)
+        mq = np.array([r["max_queue"] for r in rs], dtype=np.float64)
+        row = dict(zip(_KEY_FIELDS, key))
+        row.update({
+            "n_seeds": len(rs),
+            "cct_mean": float(cct.mean()),
+            "cct_p99": float(np.percentile(cct, 99)),
+            "cct_std": float(cct.std()),
+            "cct_min": float(cct.min()),
+            "cct_max": float(cct.max()),
+            "max_queue_mean": float(mq.mean()),
+            "max_queue_max": float(mq.max()),
+        })
+        out.append(row)
+    return out
+
+
+def write_summary(path: str, records: List[Dict]) -> List[Dict]:
+    rows = summarize(records)
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    with p.open("w") as f:
+        for row in rows:
+            f.write(encode_record(row) + "\n")
+    return rows

@@ -1,0 +1,160 @@
+"""Campaign execution: one vmapped dispatch per seed batch.
+
+The runner walks the planner's batch list in compile-reuse order, memoizing
+topologies, workloads and failure states across batches, and executes
+
+  * ``engine='fast'`` batches as a single ``fastsim.simulate_batch`` call
+    (all replicate seeds in one jitted, seed-vmapped dispatch), or
+  * ``engine='loop'`` batches (and any ACK/ECN scheme) serially on the
+    slotted feedback engine.
+
+Each grid point yields one record in the :class:`~repro.sweep.results
+.ResultStore`; per-point results are bitwise-identical to standalone
+``fastsim.simulate`` calls with the same seeds (tested in
+``tests/test_sweep.py``).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..net.topology import FatTree, LinkState, rho_max
+from ..net import workloads, fastsim, loopsim
+from ..core import lb_schemes as lbs
+from .planner import SeedBatch, plan
+from .results import ResultStore, loop_point_record, point_record
+from .spec import Campaign, FailureSpec, WorkloadSpec
+
+
+def build_workload(tree: FatTree, load: WorkloadSpec):
+    if load.kind == "permutation":
+        return workloads.permutation(tree, load.msg_packets,
+                                     np.random.default_rng(load.rng_seed),
+                                     inter_pod_only=load.inter_pod_only)
+    if load.kind == "all_to_all":
+        return workloads.all_to_all(tree, load.msg_packets)
+    if load.kind == "fsdp_rings":
+        return workloads.fsdp_rings(tree, load.gpus_per_server,
+                                    load.msg_packets,
+                                    np.random.default_rng(load.rng_seed))
+    raise ValueError(f"unknown workload kind {load.kind!r}")
+
+
+def build_links(tree: FatTree,
+                failure: Optional[FailureSpec]) -> Optional[LinkState]:
+    """The campaign interpretation of a FailureSpec (None = all links up)."""
+    if failure is None:
+        return None
+    return LinkState.random_failures(tree, failure.p_fail,
+                                     np.random.default_rng(failure.rng_seed))
+
+
+class _Cache:
+    """Memoized topology / workload / failure-state construction."""
+
+    def __init__(self):
+        self.trees: Dict[int, FatTree] = {}
+        self.wls: Dict[Tuple, object] = {}
+        self.links: Dict[Tuple, LinkState] = {}
+        self.rhos: Dict[Tuple, float] = {}
+
+    def tree(self, k: int) -> FatTree:
+        if k not in self.trees:
+            self.trees[k] = FatTree(k)
+        return self.trees[k]
+
+    def workload(self, k: int, load: WorkloadSpec):
+        key = (k, load)
+        if key not in self.wls:
+            self.wls[key] = build_workload(self.tree(k), load)
+        return self.wls[key]
+
+    def link_state(self, k: int,
+                   failure: Optional[FailureSpec]) -> Optional[LinkState]:
+        if failure is None:
+            return None
+        key = (k, failure)
+        if key not in self.links:
+            self.links[key] = build_links(self.tree(k), failure)
+        return self.links[key]
+
+    def rho_auto(self, k: int, load: WorkloadSpec,
+                 failure: Optional[FailureSpec]) -> float:
+        key = (k, load, failure)
+        if key not in self.rhos:
+            links = self.link_state(k, failure)
+            wl = self.workload(k, load)
+            self.rhos[key] = (rho_max(self.tree(k), links, wl.flow_src,
+                                      wl.flow_dst)
+                              if links is not None else 1.0)
+        return self.rhos[key]
+
+
+def _run_fast_batch(batch: SeedBatch, campaign: Campaign, cache: _Cache):
+    tree = cache.tree(batch.k)
+    wl = cache.workload(batch.k, batch.load)
+    links = cache.link_state(batch.k, batch.failure)
+    scheme = lbs.by_name(batch.scheme)
+    return fastsim.simulate_batch(tree, wl, scheme, batch.seeds,
+                                  prop_slots=campaign.prop_slots,
+                                  links=links, backend=campaign.backend)
+
+
+def _run_loop_batch(batch: SeedBatch, campaign: Campaign, cache: _Cache):
+    tree = cache.tree(batch.k)
+    wl = cache.workload(batch.k, batch.load)
+    links = cache.link_state(batch.k, batch.failure)
+    scheme = lbs.by_name(batch.scheme)
+    opts = campaign.loop_options()
+    g_converge = opts.pop("g_converge", None)
+    rho = opts.pop("rho", 1.0)
+    if rho == "auto":
+        rho = cache.rho_auto(batch.k, batch.load, batch.failure)
+    cfg = loopsim.LoopConfig(prop_slots=int(round(campaign.prop_slots)),
+                             rho=float(rho), **opts)
+    return [loopsim.simulate(tree, wl, scheme, cfg, seed=s, links=links,
+                             g_converge=g_converge) for s in batch.seeds]
+
+
+def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,
+                 keep_full: bool = False,
+                 progress: Optional[Callable[[str], None]] = None):
+    """Execute a campaign; returns (records, full_results).
+
+    ``records`` is the flat list of per-point dicts (also appended to
+    ``store`` when given, in grid-plan order).  ``full_results`` maps
+    ``GridPoint -> FastSimResult/LoopSimResult`` when ``keep_full=True``
+    (tests and figure code that need raw delivery vectors), else ``{}``.
+    """
+    p = plan(campaign)
+    if progress:
+        progress(p.describe())
+    cache = _Cache()
+    store = store if store is not None else ResultStore(None)
+    n_before = len(store.records)   # store may be shared across campaigns
+    full: Dict = {}
+    t0 = time.perf_counter()
+    for batch in p.batches:
+        tb = time.perf_counter()
+        if campaign.engine == "loop" or lbs.by_name(batch.scheme).needs_feedback:
+            results = _run_loop_batch(batch, campaign, cache)
+            to_record = loop_point_record
+        else:
+            results = _run_fast_batch(batch, campaign, cache)
+            to_record = point_record
+        for point, res in zip(batch.points(), results):
+            store.append(to_record(point, res))
+            if keep_full:
+                full[point] = res
+        store.timings.append((batch, time.perf_counter() - tb))
+        if progress:
+            progress(f"  {batch.scheme:>16s} k={batch.k} "
+                     f"{batch.load.label():<22s} x{len(batch.seeds)} seeds: "
+                     f"{store.timings[-1][1]:.2f}s")
+    if progress:
+        progress(f"campaign {campaign.name!r} done in "
+                 f"{time.perf_counter() - t0:.2f}s "
+                 f"({p.n_points} points, {p.n_dispatches} dispatches)")
+    return store.records[n_before:], full

@@ -1,0 +1,209 @@
+"""Declarative campaign specifications.
+
+A :class:`Campaign` is a grid over the paper's evaluation axes -- scheme x
+load x tree size x seeds x failure pattern -- plus fixed engine options.  It
+is data, not code: specs round-trip through JSON (``to_dict``/``from_dict``)
+so campaigns can live in files and be launched from the CLI
+(``python -m repro.sweep run --spec ...``), and the named presets below cover
+the paper's standing experiments (Table 2 contenders, the §6.1 theory
+schemes, the Fig. 7 layer-balance study).
+
+The grid expands to :class:`GridPoint` records; the planner
+(``sweep.planner``) then groups points that share a compiled-pipeline shape
+and batches replicate seeds into single vmapped executions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Optional, Tuple
+
+from ..core import lb_schemes as lbs
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """One traffic-matrix axis value (see ``net.workloads``)."""
+    kind: str = "permutation"        # 'permutation' | 'all_to_all' | 'fsdp_rings'
+    msg_packets: int = 256           # packets per flow (per dest for all_to_all)
+    inter_pod_only: bool = False     # permutation only
+    gpus_per_server: int = 8         # fsdp_rings only
+    rng_seed: int = 1                # traffic-matrix randomness (not replicate seed)
+
+    def label(self) -> str:
+        """Unique within a campaign: every field that changes the traffic
+        matrix appears here, since result aggregation groups by this label."""
+        bits = [self.kind, f"m{self.msg_packets}"]
+        if self.inter_pod_only:
+            bits.append("xpod")
+        if self.kind == "fsdp_rings":
+            bits.append(f"g{self.gpus_per_server}")
+        bits.append(f"r{self.rng_seed}")
+        return "-".join(bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureSpec:
+    """Random bidirectional link failures (paper §5.2 model)."""
+    p_fail: float
+    rng_seed: int = 42
+
+    def label(self) -> str:
+        return f"fail{self.p_fail:g}-r{self.rng_seed}"
+
+
+@dataclasses.dataclass(frozen=True)
+class GridPoint:
+    """One fully-specified simulation: a single cell of the campaign grid."""
+    campaign: str
+    k: int
+    load: WorkloadSpec
+    failure: Optional[FailureSpec]
+    scheme: str
+    seed: int
+
+    def point_id(self) -> str:
+        fail = self.failure.label() if self.failure else "nofail"
+        return (f"{self.campaign}/k{self.k}/{self.load.label()}/{fail}/"
+                f"{self.scheme}/s{self.seed}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Campaign:
+    """A declarative sweep: the cartesian product of the axis tuples.
+
+    ``engine`` selects the execution backend: ``'fast'`` (the max-plus
+    engine, seed-batched via vmap) or ``'loop'`` (the slotted feedback
+    engine, serial -- required for ACK/ECN schemes like REPS and PLB).
+    ``loop_opts`` carries ``net.loopsim.LoopConfig`` overrides plus the two
+    special keys ``g_converge`` (routing convergence slot, None = never) and
+    ``rho`` (sending rate; the string ``'auto'`` means rho_max under the
+    point's failure pattern, Appendix A).
+    """
+    name: str
+    schemes: Tuple[str, ...]
+    loads: Tuple[WorkloadSpec, ...]
+    trees: Tuple[int, ...] = (8,)
+    seeds: Tuple[int, ...] = (0,)
+    failures: Tuple[Optional[FailureSpec], ...] = (None,)
+    prop_slots: float = 12.0
+    backend: str = "auto"
+    engine: str = "fast"
+    loop_opts: Tuple[Tuple[str, object], ...] = ()
+
+    def __post_init__(self):
+        for s in self.schemes:
+            try:
+                lbs.by_name(s)
+            except KeyError:
+                raise KeyError(
+                    f"unknown scheme {s!r} in campaign {self.name!r}; "
+                    f"see repro.core.lb_schemes.by_name") from None
+        if self.engine not in ("fast", "loop"):
+            raise ValueError(f"unknown engine {self.engine!r}")
+
+    @property
+    def n_points(self) -> int:
+        return (len(self.trees) * len(self.loads) * len(self.failures)
+                * len(self.schemes) * len(self.seeds))
+
+    def loop_options(self) -> Dict:
+        return dict(self.loop_opts)
+
+    def points(self):
+        """Expand the grid in a deterministic order (seeds innermost, so
+        replicate runs of one point are adjacent for the planner)."""
+        for k, load, failure, scheme, seed in itertools.product(
+                self.trees, self.loads, self.failures, self.schemes,
+                self.seeds):
+            yield GridPoint(campaign=self.name, k=k, load=load,
+                            failure=failure, scheme=scheme, seed=seed)
+
+    # ---- JSON round-trip ---------------------------------------------------
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["loads"] = [dataclasses.asdict(l) for l in self.loads]
+        d["failures"] = [dataclasses.asdict(f) if f else None
+                         for f in self.failures]
+        d["loop_opts"] = dict(self.loop_opts)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "Campaign":
+        d = dict(d)
+        d["schemes"] = tuple(d["schemes"])
+        d["loads"] = tuple(WorkloadSpec(**l) for l in d["loads"])
+        d["trees"] = tuple(d.get("trees", (8,)))
+        d["seeds"] = tuple(d.get("seeds", (0,)))
+        d["failures"] = tuple(FailureSpec(**f) if f else None
+                              for f in d.get("failures", [None]))
+        d["loop_opts"] = tuple(sorted(d.get("loop_opts", {}).items()))
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# Named presets: the paper's standing experiments.
+# ---------------------------------------------------------------------------
+
+def _table2(k: int = 8, seeds: Tuple[int, ...] = (0, 1, 2, 3)) -> Campaign:
+    """Fast-engine Table 2 contenders + DR schemes, permutation and
+    all-to-all (the Fig. 1 comparison grid)."""
+    return Campaign(
+        name="table2",
+        schemes=("flow_ecmp", "subflow_mptcp", "host_pkt", "switch_pkt",
+                 "switch_pkt_ar", "host_dr", "ofan"),
+        loads=(WorkloadSpec("permutation", 256),
+               WorkloadSpec("all_to_all", 8)),
+        trees=(k,), seeds=seeds)
+
+
+def _theory(k: int = 8, seeds: Tuple[int, ...] = (0, 1, 2, 3)) -> Campaign:
+    """§6.1 simplified theory schemes over the Table-3 message-size ladder
+    (inter-pod permutations; the queue-scaling-law clusters)."""
+    return Campaign(
+        name="theory",
+        schemes=("simple_rr", "jsq", "rsq", "host_pkt", "host_dr", "ofan"),
+        loads=tuple(WorkloadSpec("permutation", m, inter_pod_only=True,
+                                 rng_seed=2) for m in (64, 256, 1024)),
+        trees=(k,), seeds=seeds)
+
+
+def _layer_balance(k: int = 8, seeds: Tuple[int, ...] = (5,)) -> Campaign:
+    """Fig. 7 worst-case per-layer overload study."""
+    return Campaign(
+        name="layer_balance",
+        schemes=("simple_rr", "jsq", "host_pkt", "host_dr", "ofan"),
+        loads=(WorkloadSpec("permutation", 256, inter_pod_only=True,
+                            rng_seed=4),),
+        trees=(k,), seeds=seeds)
+
+
+def _failures(k: int = 4, seeds: Tuple[int, ...] = (0,)) -> Campaign:
+    """Loop-engine failure study skeleton (examples/simulate_fabric.py
+    derives its G-sweep variants from this via dataclasses.replace)."""
+    return Campaign(
+        name="failures",
+        schemes=("host_pkt_ar", "switch_pkt_ar", "ofan"),
+        loads=(WorkloadSpec("permutation", 64, inter_pod_only=True),),
+        trees=(k,), seeds=seeds,
+        failures=(FailureSpec(p_fail=0.08, rng_seed=42),),
+        engine="loop",
+        loop_opts=(("g_converge", 0), ("max_slots", 20000),
+                   ("rho", "auto"), ("rto_slots", 250)))
+
+
+PRESETS = {
+    "table2": _table2,
+    "theory": _theory,
+    "layer_balance": _layer_balance,
+    "failures": _failures,
+}
+
+
+def preset(name: str, **kw) -> Campaign:
+    try:
+        factory = PRESETS[name]
+    except KeyError:
+        raise KeyError(f"unknown preset {name!r}; available: "
+                       f"{', '.join(sorted(PRESETS))}") from None
+    return factory(**kw)

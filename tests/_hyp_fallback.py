@@ -1,0 +1,78 @@
+"""Minimal stand-in for ``hypothesis`` so the suite collects (and the
+property tests still exercise a deterministic sample sweep) when the real
+package is not installed.
+
+Only the tiny API surface these tests use is provided: ``given`` /
+``settings`` decorators and the ``integers`` / ``floats`` / ``sampled_from``
+strategies.  Values are drawn from a fixed-seed generator, so a fallback run
+is reproducible; installing ``hypothesis`` (the ``dev`` extra in
+pyproject.toml) restores full shrinking/edge-case search.
+"""
+from __future__ import annotations
+
+import inspect
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class _StrategiesModule:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: float(min_value + (max_value - min_value)
+                              * rng.random()))
+
+    @staticmethod
+    def sampled_from(values):
+        seq = list(values)
+        return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+st = _StrategiesModule()
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        _DEFAULT_EXAMPLES)
+            rng = np.random.default_rng(0)
+            for i in range(n):
+                vals = tuple(s.example(rng) for s in strategies)
+                try:
+                    fn(*args, *vals, **kwargs)
+                except Exception as e:  # pragma: no cover - failure path
+                    raise AssertionError(
+                        f"property falsified on fallback example {i}: "
+                        f"args={vals!r}") from e
+        # Strategy-supplied parameters must not look like pytest fixtures:
+        # expose a zero-argument signature instead of functools.wraps (which
+        # would copy the inner signature and __wrapped__).
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__dict__.update(fn.__dict__)
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco

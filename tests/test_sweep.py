@@ -1,0 +1,123 @@
+"""Campaign subsystem: batched-vs-serial equivalence, planner grouping,
+result-store determinism, and spec round-trips."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.net.topology import FatTree
+from repro.net import workloads, fastsim
+from repro.core import lb_schemes as lbs
+from repro import sweep
+
+
+SCHEMES = ("host_pkt", "simple_rr", "ofan")   # pre/pre, rr/rr, ofan/ofan
+SEEDS = (0, 1, 2, 3)
+
+
+@pytest.fixture(scope="module")
+def tree():
+    return FatTree(4)
+
+
+@pytest.fixture(scope="module")
+def perm_wl(tree):
+    return workloads.permutation(tree, 32, np.random.default_rng(1),
+                                 inter_pod_only=True)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_batch_bitwise_identical_to_serial(tree, perm_wl, scheme):
+    """simulate_batch must reproduce serial simulate exactly, per seed."""
+    sch = lbs.by_name(scheme)
+    serial = [fastsim.simulate(tree, perm_wl, sch, seed=s) for s in SEEDS]
+    batch = fastsim.simulate_batch(tree, perm_wl, sch, SEEDS)
+    for a, b in zip(serial, batch):
+        np.testing.assert_array_equal(a.delivery, b.delivery)
+        np.testing.assert_array_equal(a.flow_completion, b.flow_completion)
+        assert a.cct == b.cct
+        assert a.max_queue == b.max_queue
+        np.testing.assert_array_equal(a.a_used, b.a_used)
+        np.testing.assert_array_equal(a.c_used, b.c_used)
+        for name in a.layers:
+            np.testing.assert_array_equal(a.layers[name].counts,
+                                          b.layers[name].counts)
+            assert a.layers[name].max_queue == b.layers[name].max_queue
+            assert a.layers[name].avg_wait == b.layers[name].avg_wait
+
+
+def _campaign(**kw):
+    base = dict(name="t", schemes=SCHEMES,
+                loads=(sweep.WorkloadSpec("permutation", 32,
+                                          inter_pod_only=True),),
+                trees=(4,), seeds=SEEDS)
+    base.update(kw)
+    return sweep.Campaign(**base)
+
+
+def test_campaign_matches_standalone_simulate(tree, perm_wl):
+    """End-to-end: campaign point results == standalone fastsim calls."""
+    _, full = sweep.run_campaign(_campaign(), keep_full=True)
+    assert len(full) == len(SCHEMES) * len(SEEDS)
+    for point, res in full.items():
+        ref = fastsim.simulate(tree, perm_wl, lbs.by_name(point.scheme),
+                               seed=point.seed)
+        np.testing.assert_array_equal(res.delivery, ref.delivery)
+        assert res.cct == ref.cct
+
+
+def test_planner_batches_seeds_and_groups_shapes():
+    c = sweep.Campaign(
+        name="t", schemes=("host_pkt", "simple_rr", "host_dr"),
+        loads=(sweep.WorkloadSpec("permutation", 16),), trees=(4,),
+        seeds=SEEDS)
+    p = sweep.plan(c)
+    assert p.n_points == 12
+    assert p.n_dispatches == 3          # one per scheme, seeds batched
+    for b in p.batches:
+        assert b.seeds == SEEDS
+    # host_pkt and host_dr share the 'pre/pre' pipeline shape and must be
+    # adjacent so the second rides the first's compile.
+    order = [b.scheme for b in p.batches]
+    assert abs(order.index("host_pkt") - order.index("host_dr")) == 1
+
+
+def test_result_store_deterministic(tmp_path):
+    """Re-running a campaign must produce byte-identical JSONL."""
+    paths = []
+    for i in (1, 2):
+        path = tmp_path / f"run{i}.jsonl"
+        sweep.run_campaign(_campaign(seeds=(0, 1)),
+                           store=sweep.ResultStore(path))
+        paths.append(path)
+    b1, b2 = (p.read_bytes() for p in paths)
+    assert b1 == b2
+    assert len(b1.splitlines()) == len(SCHEMES) * 2
+
+
+def test_summarize_aggregates_seeds():
+    records, _ = sweep.run_campaign(_campaign(seeds=(0, 1)))
+    rows = sweep.summarize(records)
+    assert len(rows) == len(SCHEMES)
+    for row in rows:
+        assert row["n_seeds"] == 2
+        assert row["cct_min"] <= row["cct_mean"] <= row["cct_max"]
+
+
+def test_campaign_json_roundtrip():
+    c = _campaign(failures=(sweep.FailureSpec(0.02, rng_seed=3), None),
+                  loop_opts=(("g_converge", 0), ("max_slots", 1000)))
+    c2 = sweep.Campaign.from_dict(json.loads(json.dumps(c.to_dict())))
+    assert c2 == c
+
+
+def test_campaign_rejects_unknown_scheme():
+    with pytest.raises(KeyError):
+        _campaign(schemes=("definitely_not_a_scheme",))
+
+
+def test_scheme_shape_key_groups_pre_modes():
+    assert lbs.host_pkt().shape_key() == lbs.ecmp().shape_key()
+    assert lbs.host_pkt().shape_key() == lbs.host_dr().shape_key()
+    assert lbs.simple_rr().shape_key() != lbs.host_pkt().shape_key()
+    assert lbs.switch_pkt_ar().shape_key() != lbs.jsq().shape_key()

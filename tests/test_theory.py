@@ -3,7 +3,11 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # fall back to a deterministic sample sweep
+    from _hyp_fallback import given, settings, st
 
 from repro.core import theory
 

@@ -1,7 +1,11 @@
 """Fat-tree topology invariants (unit + hypothesis property tests)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # fall back to a deterministic sample sweep
+    from _hyp_fallback import given, settings, st
 
 from repro.net.topology import (FatTree, LinkState, rho_max, BYPASS,
                                 UP_E, UP_A, DN_C, DN_A, DN_E)
