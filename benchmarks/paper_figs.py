@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.net.topology import FatTree, LinkState, rho_max
+from repro.net.topology import FatTree, rho_max
 from repro.net import workloads, fastsim, loopsim
 from repro.core import lb_schemes as lbs
 from repro.core import theory
@@ -37,21 +37,27 @@ LOOP_ONLY = ["host_flowlet_ar", "host_pkt_ar"]
 DR = ["host_dr", "ofan"]
 
 
-def _run_grid(campaign: sweep.Campaign):
-    """Execute a campaign grid, returning (records, per-scheme us/point).
+def _us_by(store: sweep.ResultStore, keyfn):
+    """Aggregate per-batch wall times (us/point) by an arbitrary batch key.
 
-    Timing caveat: the first scheme of each compiled-pipeline-shape group
-    pays the jit compile; schemes riding a warm cache show dispatch-only
-    times.  Cross-scheme comparisons of the us column reflect batch order,
-    not inherent scheme cost."""
-    store = sweep.ResultStore(None)
-    sweep.run_campaign(campaign, store=store)
+    Timing caveat: megabatch dispatch time is apportioned over the fused
+    members, and the first dispatch of each compiled shape pays the jit
+    compile; comparisons reflect batch composition, not inherent scheme
+    cost."""
     tot_us: dict = {}
     n_pts: dict = {}
     for batch, secs in store.timings:
-        tot_us[batch.scheme] = tot_us.get(batch.scheme, 0.0) + secs * 1e6
-        n_pts[batch.scheme] = n_pts.get(batch.scheme, 0) + len(batch.seeds)
-    return store.records, {s: tot_us[s] / n_pts[s] for s in tot_us}
+        key = keyfn(batch)
+        tot_us[key] = tot_us.get(key, 0.0) + secs * 1e6
+        n_pts[key] = n_pts.get(key, 0) + len(batch.seeds)
+    return {k: tot_us[k] / n_pts[k] for k in tot_us}
+
+
+def _run_grid(campaign: sweep.Campaign):
+    """Execute a campaign grid; returns (records, per-scheme us/point, store)."""
+    store = sweep.ResultStore(None)
+    sweep.run_campaign(campaign, store=store)
+    return store.records, _us_by(store, lambda b: b.scheme), store
 
 
 def fig1(scale: C.Scale):
@@ -70,7 +76,7 @@ def fig1(scale: C.Scale):
         else:
             load = sweep.WorkloadSpec("all_to_all", scale.ata_msg)
             bound = C.ata_bound_slots(tree, scale.ata_msg)
-        recs, us = _run_grid(sweep.Campaign(
+        recs, us, _ = _run_grid(sweep.Campaign(
             name=f"fig1_{matrix}", schemes=tuple(FAST_SCHEMES + DR),
             loads=(load,), trees=(scale.k,),
             seeds=tuple(range(scale.runs)), prop_slots=C.PROP_SLOTS))
@@ -80,7 +86,7 @@ def fig1(scale: C.Scale):
             C.emit(f"fig1_{matrix}_{name}", us[name],
                    cct_increase_pct=round(float(np.mean(incs)), 2))
             out[(matrix, name)] = float(np.mean(incs))
-        recs, us = _run_grid(sweep.Campaign(
+        recs, us, _ = _run_grid(sweep.Campaign(
             name=f"fig1_{matrix}_loop", schemes=tuple(LOOP_ONLY),
             loads=(load,), trees=(scale.k,), seeds=(0,), engine="loop",
             loop_opts=(("max_slots", scale.max_slots),)))
@@ -92,73 +98,90 @@ def fig1(scale: C.Scale):
     return out
 
 
-def _failure_run(tree, wl, name, bound, links, g, rho, scale):
-    cfg = loopsim.LoopConfig(max_slots=scale.max_slots, rho=rho,
-                             rto_slots=300)
-    return C.loop_cct_increase(tree, wl, name, bound, cfg, links=links,
-                               g_converge=g)
+def _failure_campaign(scale: C.Scale, name, schemes, failures, g_converge):
+    """Shared spec of the §5.2 failure studies: permutation traffic, rho
+    pinned to rho_max under each failure pattern, loop engine."""
+    return sweep.Campaign(
+        name=name, schemes=tuple(schemes),
+        loads=(sweep.WorkloadSpec("permutation", scale.perm_msg, rng_seed=1),),
+        trees=(scale.k,), seeds=(0,), engine="loop",
+        failures=tuple(failures), g_converge=tuple(g_converge),
+        loop_opts=(("max_slots", scale.max_slots), ("rho", "auto"),
+                   ("rto_slots", 300)))
+
+
+def _failure_bound(tree, wl, fspec, scale: C.Scale) -> float:
+    links = sweep.build_links(tree, fspec)
+    rho = rho_max(tree, links, wl.flow_src, wl.flow_dst)
+    return (C.perm_bound_slots(scale.perm_msg) / rho if rho > 0 else np.inf)
 
 
 def fig3(scale: C.Scale, p_fail=0.01):
-    """Randomized failures with G = inf."""
+    """Randomized failures with G = inf (campaign grid on the megabatch
+    runner; the loop engine serves the ACK/ECN schemes)."""
     tree = FatTree(scale.k)
-    rng = np.random.default_rng(42)
-    links = LinkState.random_failures(tree, p_fail, rng)
     wl = workloads.permutation(tree, scale.perm_msg, np.random.default_rng(1))
-    rho = rho_max(tree, links, wl.flow_src, wl.flow_dst)
-    bound = C.perm_bound_slots(scale.perm_msg) / max(rho, 1e-9)
+    fspec = sweep.FailureSpec(p_fail, rng_seed=42)
+    bound = _failure_bound(tree, wl, fspec, scale)
+    recs, us, _ = _run_grid(_failure_campaign(
+        scale, "fig3", ["host_pkt", "switch_pkt", "host_pkt_ar",
+                        "switch_pkt_ar", "ofan"], [fspec], [None]))
     out = {}
-    for name in ["host_pkt", "switch_pkt", "host_pkt_ar", "switch_pkt_ar",
-                 "ofan"]:
-        (inc, res), us = C.timed(
-            lambda: _failure_run(tree, wl, name, bound, links, None, rho,
-                                 scale))
-        C.emit(f"fig3_perm_{name}", us, cct_increase_pct=round(inc, 2),
-               drops=res.drops, finished=res.finished)
-        out[name] = inc
+    for r in recs:
+        inc = 100.0 * (r["cct"] / bound - 1.0)
+        C.emit(f"fig3_perm_{r['scheme']}", us[r["scheme"]],
+               cct_increase_pct=round(inc, 2), drops=r["drops"],
+               finished=r["finished"])
+        out[r["scheme"]] = inc
     return out
 
 
 def fig4(scale: C.Scale, p_fail=0.01):
-    """CCT vs convergence time G (in multiples of min RTT ~87 slots)."""
+    """CCT vs convergence time G: one campaign with g_converge as a grid
+    axis (in multiples of min RTT ~87 slots)."""
     tree = FatTree(scale.k)
-    links = LinkState.random_failures(tree, p_fail,
-                                      np.random.default_rng(42))
     wl = workloads.permutation(tree, scale.perm_msg, np.random.default_rng(1))
-    rho = rho_max(tree, links, wl.flow_src, wl.flow_dst)
-    bound = C.perm_bound_slots(scale.perm_msg) / max(rho, 1e-9)
+    fspec = sweep.FailureSpec(p_fail, rng_seed=42)
+    bound = _failure_bound(tree, wl, fspec, scale)
     rtt = int(6 * C.PROP_SLOTS + 15)
+    g_rtts = [0, 1, 4, 16, 64]
+    store = sweep.ResultStore(None)
+    recs, _ = sweep.run_campaign(_failure_campaign(
+        scale, "fig4", ["host_pkt_ar", "switch_pkt_ar"], [fspec],
+        [g * rtt for g in g_rtts]), store=store)
+    us = _us_by(store, lambda b: (b.g_converge, b.scheme))
     out = {}
-    for g_rtt in [0, 1, 4, 16, 64]:
-        for name in ["host_pkt_ar", "switch_pkt_ar"]:
-            (inc, res), us = C.timed(
-                lambda: _failure_run(tree, wl, name, bound, links,
-                                     g_rtt * rtt, rho, scale))
-            C.emit(f"fig4_G{g_rtt}rtt_{name}", us,
-                   cct_increase_pct=round(inc, 2), drops=res.drops)
-            out[(g_rtt, name)] = inc
+    for r in recs:
+        g_rtt = r["g_converge"] // rtt
+        inc = 100.0 * (r["cct"] / bound - 1.0)
+        C.emit(f"fig4_G{g_rtt}rtt_{r['scheme']}",
+               us[(r["g_converge"], r["scheme"])],
+               cct_increase_pct=round(inc, 2), drops=r["drops"])
+        out[(g_rtt, r["scheme"])] = inc
     return out
 
 
 def fig5(scale: C.Scale):
-    """Failure-rate sweep at G=0."""
+    """Failure-rate sweep at G=0: one campaign with the failure pattern as
+    a grid axis."""
     tree = FatTree(scale.k)
     wl = workloads.permutation(tree, scale.perm_msg, np.random.default_rng(1))
+    fspecs = [sweep.FailureSpec(p, rng_seed=7) for p in (0.01, 0.04, 0.08)]
+    bounds = {f.label(): _failure_bound(tree, wl, f, scale) for f in fspecs}
+    p_fails = {f.label(): f.p_fail for f in fspecs}
+    fspecs = [f for f in fspecs if np.isfinite(bounds[f.label()])]
+    store = sweep.ResultStore(None)
+    recs, _ = sweep.run_campaign(_failure_campaign(
+        scale, "fig5", ["host_pkt_ar", "switch_pkt_ar", "ofan"], fspecs,
+        [0]), store=store)
+    us = _us_by(store, lambda b: (b.failure.label(), b.scheme))
     out = {}
-    for p_fail in [0.01, 0.04, 0.08]:
-        links = LinkState.random_failures(tree, p_fail,
-                                          np.random.default_rng(7))
-        rho = rho_max(tree, links, wl.flow_src, wl.flow_dst)
-        if rho <= 0:
-            continue
-        bound = C.perm_bound_slots(scale.perm_msg) / rho
-        for name in ["host_pkt_ar", "switch_pkt_ar", "ofan"]:
-            (inc, res), us = C.timed(
-                lambda: _failure_run(tree, wl, name, bound, links, 0, rho,
-                                     scale))
-            C.emit(f"fig5_p{p_fail}_{name}", us,
-                   cct_increase_pct=round(inc, 2), drops=res.drops)
-            out[(p_fail, name)] = inc
+    for r in recs:
+        p_fail = p_fails[r["failure"]]
+        inc = 100.0 * (r["cct"] / bounds[r["failure"]] - 1.0)
+        C.emit(f"fig5_p{p_fail}_{r['scheme']}", us[(r["failure"], r["scheme"])],
+               cct_increase_pct=round(inc, 2), drops=r["drops"])
+        out[(p_fail, r["scheme"])] = inc
     return out
 
 
@@ -194,7 +217,7 @@ def fig6(scale: C.Scale):
 def fig7(scale: C.Scale):
     """Worst-case per-layer load increase beyond ideal (campaign grid; the
     per-layer overload ratios come straight off the point records)."""
-    recs, us = _run_grid(sweep.Campaign(
+    recs, us, _ = _run_grid(sweep.Campaign(
         name="fig7",
         schemes=("simple_rr", "jsq", "host_pkt", "host_dr", "ofan"),
         loads=(sweep.WorkloadSpec("permutation", scale.perm_msg,
@@ -358,7 +381,7 @@ def tbl3(scale: C.Scale):
     expect = {"simple_rr": (0.7, 1.3), "jsq": (0.6, 1.3),
               "rsq": (0.25, 0.75), "host_pkt": (0.25, 0.75),
               "host_dr": (-0.2, 0.25), "ofan": (-0.2, 0.25)}
-    recs, _ = _run_grid(sweep.Campaign(
+    recs, _, _ = _run_grid(sweep.Campaign(
         name="tbl3", schemes=tuple(expect),
         loads=tuple(sweep.WorkloadSpec("permutation", int(m),
                                        inter_pod_only=True, rng_seed=2)

@@ -1,40 +1,51 @@
-"""Campaign-engine speedup benchmark: seed-vmapped grid vs serial loops.
+"""Campaign-engine speedup benchmark: megabatched grid vs older dispatch
+patterns.
 
-Runs one grid -- 4 LB schemes x 8 replicate seeds on a k=8 permutation
-workload (32 points, but only TWO compiled pipeline shapes: flow_ecmp,
-host_pkt and host_dr all lower to the 'pre/pre' pipeline) -- three ways:
+Runs one grid -- 4 LB schemes x 2 message sizes x replicate seeds on k=8
+permutation workloads, only TWO compiled pipeline shapes: flow_ecmp,
+host_pkt and host_dr all lower to the 'pre/pre' pipeline, switch_pkt
+compiles rr_reset, and both message sizes land in one power-of-two packet
+bucket so the megabatch planner pads them onto a single fused shape.  Four
+ways:
 
-  * **batched**: ``sweep.run_campaign``; the planner groups the grid into
-    one seed-vmapped dispatch per scheme and orders batches so schemes
-    sharing a pipeline shape reuse one jit compile;
+  * **megabatch**: ``sweep.run_campaign`` on the fused runner; the planner
+    emits ONE jitted dispatch per compiled shape (scheme, load and seed
+    axes stacked onto one fused batch axis, ``shard_map``-sharded when
+    several devices are visible);
+  * **pr1**: the previous runner generation -- one seed-vmapped
+    ``fastsim.simulate_batch`` call *per (scheme, load)* cell, ordered for
+    compile-cache reuse.  Without shape bucketing every message size is its
+    own compiled shape, so this path compiles twice per pipeline
+    (``speedup_pr1`` is the megabatch-vs-PR1 headline this PR's tentpole
+    is about);
   * **serial-warm**: one ``fastsim.simulate`` call per (scheme, seed) cell
-    in a single process, so ``_build_run``'s lru-cache amortizes compiles
-    across the loop -- the old in-process ``benchmarks/paper_figs.py``
-    pattern;
+    in a single process, compiles amortized by the in-process lru-cache;
   * **serial-isolated**: the per-point-job pattern the campaign subsystem
-    replaces (one cluster job / fresh process per grid point, recompiling
-    and re-dispatching every time).  Measured honestly by clearing the
-    compile caches before each sampled point and extrapolating the
-    per-point cold cost to the full grid; ``isolated_measured`` records how
-    many points were actually run cold.
+    replaces (fresh process per grid point, recompiling every time).
+    Measured honestly by clearing the compile caches and sampling one cold
+    point **per compiled shape actually present in the grid**, then
+    extrapolating each shape's cold cost over its own point count.
 
 Per-point results are verified identical (exact CCT equality) between the
-batched and serial paths before any timing is reported.
+megabatched and serial paths before any timing is reported.  Results are
+appended-by-overwrite to ``BENCH_sweep.json`` at the repo root so the perf
+trajectory is tracked across PRs.
 
-On accelerator backends the vmapped dispatch additionally fills the device
-with the seed batch; on this repo's small CPU CI box the per-point device
-time is sort-bound and nearly identical serial vs batched, so
-``speedup_warm`` hovers near 1 while ``speedup`` (vs the isolated-job
-pattern, the regime the campaign engine exists to kill) is the headline.
+Smoke mode (``SWEEP_BENCH_SMOKE=1``, used by CI with
+``--xla_force_host_platform_device_count=2``) shrinks the grid so the
+multi-device sharded path is exercised on every PR in seconds.
 """
 from __future__ import annotations
 
+import json
+import os
+import pathlib
 import time
 
 import numpy as np
 
 from repro.net.topology import FatTree
-from repro.net import workloads, fastsim
+from repro.net import fastsim
 from repro.core import lb_schemes as lbs
 from repro import sweep
 
@@ -42,8 +53,9 @@ from . import common as C
 
 SCHEMES = ("host_pkt", "flow_ecmp", "host_dr", "switch_pkt")
 N_SEEDS = 8
-MSG = 64
-N_COLD_SAMPLES = 2   # isolated-pattern points actually run (one per shape)
+MSGS = (64, 48)        # both land in one power-of-two packet-shape bucket
+SMOKE = os.environ.get("SWEEP_BENCH_SMOKE", "") not in ("", "0")
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sweep.json"
 
 
 def _clear_compile_caches():
@@ -51,55 +63,95 @@ def _clear_compile_caches():
 
 
 def sweep_speedup(scale: C.Scale):
-    """Grid-completion wall time: batched campaign vs serial loops."""
-    k = scale.k
-    seeds = tuple(range(N_SEEDS))
+    """Grid-completion wall time: megabatched campaign vs per-scheme batched
+    (PR1) vs serial loops."""
+    import jax
+    k = 4 if SMOKE else scale.k
+    n_seeds = 4 if SMOKE else N_SEEDS
+    seeds = tuple(range(n_seeds))
     tree = FatTree(k)
-    wl = workloads.permutation(tree, MSG, np.random.default_rng(1))
+    loads = tuple(sweep.WorkloadSpec("permutation", m, rng_seed=1)
+                  for m in MSGS)
+    wls = {ld: sweep.build_workload(tree, ld) for ld in loads}
 
     campaign = sweep.Campaign(
-        name="sweep_bench", schemes=SCHEMES,
-        loads=(sweep.WorkloadSpec("permutation", MSG, rng_seed=1),),
+        name="sweep_bench", schemes=SCHEMES, loads=loads,
         trees=(k,), seeds=seeds, prop_slots=C.PROP_SLOTS)
+    p = sweep.plan(campaign)
     n_points = campaign.n_points
 
-    # ---- batched campaign (cold caches, includes its own compiles) --------
+    # ---- megabatched campaign (cold caches, includes its own compiles) ----
     _clear_compile_caches()
     t0 = time.perf_counter()
     records, _ = sweep.run_campaign(campaign)
     batch_s = time.perf_counter() - t0
 
+    # ---- PR1 pattern: one seed-vmapped dispatch per (scheme, load) --------
+    _clear_compile_caches()
+    t0 = time.perf_counter()
+    pr1 = {}
+    for name in SCHEMES:
+        for ld in loads:
+            for s, res in zip(seeds, fastsim.simulate_batch(
+                    tree, wls[ld], lbs.by_name(name), seeds,
+                    prop_slots=C.PROP_SLOTS)):
+                pr1[(name, ld.label(), s)] = res.cct
+    pr1_s = time.perf_counter() - t0
+
     # ---- serial-warm loop (cold caches, compiles amortized by lru-cache) --
     _clear_compile_caches()
     t0 = time.perf_counter()
-    serial = {(name, s): fastsim.simulate(tree, wl, lbs.by_name(name),
-                                          seed=s, prop_slots=C.PROP_SLOTS).cct
-              for name in SCHEMES for s in seeds}
+    serial = {(name, ld.label(), s):
+              fastsim.simulate(tree, wls[ld], lbs.by_name(name), seed=s,
+                               prop_slots=C.PROP_SLOTS).cct
+              for name in SCHEMES for ld in loads for s in seeds}
     serial_warm_s = time.perf_counter() - t0
 
-    batched = {(r["scheme"], r["seed"]): r["cct"] for r in records}
-    mismatches = [key for key in serial if serial[key] != batched[key]]
+    batched = {(r["scheme"], r["workload"], r["seed"]): r["cct"]
+               for r in records}
+    mismatches = [key for key in serial
+                  if serial[key] != batched[key] or serial[key] != pr1[key]]
     assert not mismatches, f"batched CCTs diverge from serial: {mismatches}"
 
-    # ---- serial-isolated pattern (cold compile per point, sampled) --------
-    cold = []
-    for name in ("host_pkt", "switch_pkt")[:N_COLD_SAMPLES]:
+    # ---- serial-isolated pattern: one cold point per compiled shape -------
+    serial_isolated_s = 0.0
+    cold_shapes = []
+    for mega in p.megabatches:
+        rep = mega.members[0]               # representative point of the shape
         _clear_compile_caches()
         t0 = time.perf_counter()
-        fastsim.simulate(tree, wl, lbs.by_name(name), seed=0,
-                         prop_slots=C.PROP_SLOTS)
-        cold.append(time.perf_counter() - t0)
-    serial_isolated_s = float(np.mean(cold)) * n_points
+        fastsim.simulate(tree, wls[rep.load], lbs.by_name(rep.scheme),
+                         seed=rep.seeds[0], prop_slots=C.PROP_SLOTS)
+        cold = time.perf_counter() - t0
+        cold_shapes.append({"scheme": rep.scheme, "cold_s": round(cold, 3),
+                            "points": mega.n_points})
+        serial_isolated_s += cold * mega.n_points
 
     speedup = serial_isolated_s / batch_s
     speedup_warm = serial_warm_s / batch_s
+    speedup_pr1 = pr1_s / batch_s
+    result = {
+        "grid": {"k": k, "msg_packets": list(MSGS), "schemes": list(SCHEMES),
+                 "n_seeds": n_seeds, "points": n_points, "smoke": SMOKE},
+        "plan": {"n_dispatches": p.n_dispatches, "n_shapes": p.n_shapes},
+        "devices": len(jax.devices()),
+        "megabatch_s": round(batch_s, 3),
+        "pr1_per_scheme_s": round(pr1_s, 3),
+        "serial_warm_s": round(serial_warm_s, 3),
+        "serial_isolated_s": round(serial_isolated_s, 3),
+        "isolated_cold_samples": cold_shapes,
+        "speedup_vs_isolated": round(speedup, 2),
+        "speedup_vs_warm": round(speedup_warm, 2),
+        "speedup_vs_pr1": round(speedup_pr1, 2),
+    }
+    BENCH_JSON.write_text(json.dumps(result, indent=2) + "\n")
     C.emit("sweep_speedup", batch_s * 1e6 / n_points,
-           batch_s=round(batch_s, 2),
-           serial_warm_s=round(serial_warm_s, 2),
-           serial_isolated_s=round(serial_isolated_s, 2),
-           isolated_measured=N_COLD_SAMPLES,
-           speedup=round(speedup, 2), speedup_warm=round(speedup_warm, 2),
-           points=n_points, dispatches=len(SCHEMES), shapes=2)
-    return {"batch_s": batch_s, "serial_warm_s": serial_warm_s,
-            "serial_isolated_s": serial_isolated_s, "speedup": speedup,
-            "speedup_warm": speedup_warm}
+           batch_s=result["megabatch_s"], pr1_s=result["pr1_per_scheme_s"],
+           serial_warm_s=result["serial_warm_s"],
+           serial_isolated_s=result["serial_isolated_s"],
+           isolated_measured=len(cold_shapes),
+           speedup=result["speedup_vs_isolated"],
+           speedup_warm=result["speedup_vs_warm"],
+           speedup_pr1=result["speedup_vs_pr1"],
+           points=n_points, dispatches=p.n_dispatches, shapes=p.n_shapes)
+    return result

@@ -57,6 +57,21 @@ class LBScheme:
     def needs_feedback(self) -> bool:
         return self.adaptive_host
 
+    def table_keys(self) -> Tuple[str, ...]:
+        """Names of the per-seed switch-table operands this scheme's
+        fast-engine pipeline consumes, in pipeline argument order.  These are
+        the vmappable pytree leaves a megabatch stacks onto the fused batch
+        axis (rotation state for RR/SWITCH PKT, consolidated DR pointers for
+        OFAN); host-labelled and JSQ schemes carry their per-layer state in
+        the per-packet/noise operands instead and need no tables."""
+        if self.edge_mode == "rr_reset":
+            return ("rr_perms", "rr_starts")
+        if self.edge_mode == "rr":
+            return ("rr_starts",)
+        if self.edge_mode == "ofan":
+            return ("lens", "orders", "starts")
+        return ()
+
     def shape_key(self) -> Tuple:
         """Hashable key of everything that determines the *compiled* fast-engine
         pipeline (mirrors ``fastsim._build_run``'s cache key, minus the

@@ -33,6 +33,12 @@ Supported schemes: everything without ACK/ECN feedback -- ECMP, subflows,
 host packet spraying, HOST DR, SIMPLE RR, SWITCH PKT (periodic re-permute),
 RSQ, JSQ, SWITCH PKT AR (quantized JSQ), OFAN.  Feedback schemes (REPS, PLB,
 MSwift) run on ``net.loopsim``.
+
+Dispatch granularities: :func:`simulate` (one point),
+:func:`simulate_batch` (one point, seeds vmapped), and
+:func:`simulate_megabatch` (many points sharing a pipeline shape fused onto
+one batch axis, optionally ``shard_map``-sharded across devices) -- all
+bitwise-identical per point.
 """
 from __future__ import annotations
 
@@ -146,8 +152,12 @@ def _jsq_layer(switch, a, tie, active, *, n_switches: int, pad: int, h: int,
                noise, backend: str):
     """Joint port-choice + FIFO service for one adaptive layer.
 
-    Returns (port, departure, occ_seen, overflow_flag).  ``noise`` is
+    Returns (port, departure, occ_seen, max_rank).  ``noise`` is
     (n_switches, pad, h) pre-drawn uniforms for random tie-breaking.
+    ``max_rank`` is the deepest per-switch arrival rank seen; the caller
+    compares it against the *logical* pad limit (an operand, so megabatched
+    runs padded to a group-wide grid can still flag exactly the elements a
+    standalone run would re-pad).
     """
     npk = switch.shape[0]
     skey = jnp.where(active, switch, jnp.int32(2**30))
@@ -155,11 +165,14 @@ def _jsq_layer(switch, a, tie, active, *, n_switches: int, pad: int, h: int,
     ss = skey[order]
     av = a[order]
     rank, _ = _ranks_and_starts(ss, backend)
-    overflow = jnp.max(jnp.where(ss < 2**30, rank, 0)) >= pad
+    max_rank = jnp.max(jnp.where(ss < 2**30, rank, 0))
 
-    rows = jnp.where(ss < 2**30, ss, 0)
-    cols = jnp.clip(rank, 0, pad - 1)
     valid = ss < 2**30
+    # Inactive packets scatter to row n_switches, which is out of bounds and
+    # therefore dropped -- they must never clobber grid cells owned by real
+    # packets of switch 0.
+    rows = jnp.where(valid, ss, jnp.int32(n_switches))
+    cols = jnp.clip(rank, 0, pad - 1)
     t_grid = jnp.full((n_switches, pad), jnp.float32(_NEG)).at[rows, cols].set(
         jnp.where(valid, av, _NEG))
     v_grid = jnp.zeros((n_switches, pad), bool).at[rows, cols].set(valid)
@@ -195,7 +208,7 @@ def _jsq_layer(switch, a, tie, active, *, n_switches: int, pad: int, h: int,
     port = jnp.where(active, port_sorted[inv], 0).astype(jnp.int32)
     dep = jnp.where(active, dep_sorted[inv], a)
     occ = jnp.where(active, occ_sorted[inv], 0.0)
-    return port, dep, occ, overflow
+    return port, dep, occ, max_rank
 
 
 # ---------------------------------------------------------------------------
@@ -280,18 +293,25 @@ class SimPlan:
     def jsq(self) -> bool:
         return self.scheme.edge_mode in ("jsq", "jsq_quant")
 
-    def build_run(self, batch: bool):
+    def build_run(self, batch, *, pad_e=None, pad_a=None, n_shards=1):
+        """``batch``: False | "seed" | "mega" (see :func:`_build_run`).
+        ``pad_e``/``pad_a`` override the plan's own JSQ grid padding when a
+        megabatch pads members to a group-wide maximum."""
         tree, scheme = self.tree, self.scheme
+        if batch is True:
+            batch = "seed"
         return _build_run(h=tree.half, n_pods=tree.n_pods,
                           n_edges=tree.n_edge_switches,
                           n_aggs=tree.n_agg_switches, n_hosts=tree.n_hosts,
                           edge_mode=scheme.edge_mode, agg_mode=scheme.agg_mode,
                           quanta=self.quanta, buffer_pkts=scheme.buffer_pkts,
                           reset_wraps=scheme.reset_wraps,
-                          pad_e=self.pad_e, pad_a=self.pad_a,
+                          pad_e=self.pad_e if pad_e is None else pad_e,
+                          pad_a=self.pad_a if pad_a is None else pad_a,
                           prop=float(self.prop_slots), backend=self.backend,
                           tables_e_keys=self.tables_e_keys,
-                          tables_a_keys=self.tables_a_keys, batch=batch)
+                          tables_a_keys=self.tables_a_keys, batch=batch,
+                          n_shards=n_shards)
 
 
 def _prepare(tree: FatTree, wl: Workload, scheme: LBScheme, prop_slots: float,
@@ -319,17 +339,13 @@ def _prepare(tree: FatTree, wl: Workload, scheme: LBScheme, prop_slots: float,
                                     for s, d in zip(wl.flow_src, wl.flow_dst)])
 
     h = tree.half
+    plan.tables_e_keys = plan.tables_a_keys = scheme.table_keys()
     if scheme.edge_mode == "rr_reset":
         max_cnt = int(np.bincount(tree.host_global_edge(src)[leaves_edge],
                                   minlength=tree.n_edge_switches).max()
                       ) if leaves_edge.any() else 1
         plan.n_reset_epochs = max(
             1, int(np.ceil(max_cnt / (scheme.reset_wraps * h))))
-        plan.tables_e_keys = plan.tables_a_keys = ("rr_perms", "rr_starts")
-    elif scheme.edge_mode == "rr":
-        plan.tables_e_keys = plan.tables_a_keys = ("rr_starts",)
-    elif scheme.edge_mode == "ofan":
-        plan.tables_e_keys = plan.tables_a_keys = ("lens", "orders", "starts")
 
     # ---- JSQ padding (workload-dependent, seed-independent) ----------------
     if plan.jsq:
@@ -341,6 +357,12 @@ def _prepare(tree: FatTree, wl: Workload, scheme: LBScheme, prop_slots: float,
                          64)
     plan.quanta = (tuple(scheme.quanta) if scheme.edge_mode == "jsq_quant"
                    else None)
+    # Logical JSQ pad limits travel as operands: a megabatch may execute this
+    # point on a grid padded to a *group-wide* maximum, yet the overflow-and-
+    # retry decision must match what a standalone run with this plan's own
+    # padding would do.
+    plan.static_args["pad_lim_e"] = np.int32(plan.pad_e if plan.jsq else 2**30)
+    plan.static_args["pad_lim_a"] = np.int32(plan.pad_a if plan.jsq else 2**30)
     return plan
 
 
@@ -487,29 +509,182 @@ def simulate_batch(tree: FatTree, wl: Workload, scheme: LBScheme,
     return [results[s] for s in seeds]
 
 
+# ---------------------------------------------------------------------------
+# Megabatch: fuse (scheme x load x failure x seed) onto one batch axis.
+# ---------------------------------------------------------------------------
+
+# Per-packet pipeline arguments (padded to the bucketed packet count).
+_PKT_KEYS = ("p1", "e1", "p2", "e2", "dst", "inter_pod", "leaves_edge",
+             "t_rel", "tie", "a_pre", "c_pre", "rand_a", "rand_c")
+
+
+def _pad_tail(x: np.ndarray, axis: int, target: int, fill=0) -> np.ndarray:
+    if x.shape[axis] >= target:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - x.shape[axis])
+    return np.pad(x, widths, constant_values=fill)
+
+
+def _pipeline_identity(plan: SimPlan) -> Tuple:
+    """Everything two plans must agree on to share one megabatched dispatch
+    (shapes of per-packet arrays and JSQ grids are padded; this is the rest)."""
+    t = plan.tree
+    return (t.half, t.n_pods, t.n_edge_switches, t.n_agg_switches, t.n_hosts,
+            plan.scheme.shape_key(), plan.tables_e_keys, plan.tables_a_keys,
+            float(plan.prop_slots), plan.backend)
+
+
+def simulate_megabatch(items, *, prop_slots: float = 12.0,
+                       backend: str = "auto", jsq_pad_factor: float = 4.0,
+                       npk_pad: Optional[int] = None, n_shards=1) -> list:
+    """Run many simulation points as ONE fused, jitted dispatch.
+
+    ``items`` is a sequence of ``(tree, wl, scheme, seeds, links)`` tuples
+    whose points lower to the same compiled pipeline (equal
+    ``LBScheme.shape_key()``, same tree size, same backend) -- e.g. flow_ecmp,
+    subflow_mptcp, host_pkt and host_dr grids on any mix of workloads and
+    failure patterns.  Per-seed inputs are drawn host-side exactly as
+    :func:`simulate` draws them, padded to shared shapes (packet arrays up to
+    ``npk_pad``, JSQ noise grids and scheme tables up to group-wide maxima;
+    pad packets are inert bypass rows with ``dst = -1``), stacked onto one
+    fused batch axis, and executed by a single ``vmap``-ed -- and, with
+    ``n_shards > 1`` (or ``"auto"``), ``shard_map``-sharded -- dispatch.
+
+    Returns one list of :class:`FastSimResult` per item (aligned with its
+    ``seeds``); every result is bitwise-identical to the standalone
+    :func:`simulate` call with the same arguments, including the JSQ
+    pad-overflow retry decision (tested in ``tests/test_sweep.py``).
+    """
+    items = [(t, w, s, list(seeds), l) for (t, w, s, seeds, l) in items]
+    if not items or all(not it[3] for it in items):
+        return [[] for _ in items]
+
+    plans = [_prepare(tree, wl, scheme, prop_slots, links, backend,
+                      jsq_pad_factor)
+             for (tree, wl, scheme, _, links) in items]
+    idents = {_pipeline_identity(p) for p in plans}
+    if len(idents) > 1:
+        raise ValueError(f"megabatch items span {len(idents)} pipeline "
+                         f"identities; group by LBScheme.shape_key() first")
+
+    npk_max = max(p.wl.n_packets for p in plans)
+    npk_pad = npk_max if npk_pad is None else max(int(npk_pad), npk_max)
+    pad_e_m = max(p.pad_e for p in plans)
+    pad_a_m = max(p.pad_a for p in plans)
+    jsq = plans[0].jsq
+
+    elems: list = []          # merged (static + per-seed) dicts, padded
+    spans: list = []          # (item index, seed) per fused-axis element
+    for i, ((tree, wl, scheme, seeds, links), plan) in enumerate(
+            zip(items, plans)):
+        for s in seeds:
+            d = {**plan.static_args, **_draw_seed_inputs(plan, s)}
+            for k in _PKT_KEYS:
+                d[k] = _pad_tail(d[k], 0, npk_pad,
+                                 fill=-1 if k == "dst" else 0)
+            if jsq:
+                d["noise_e"] = _pad_tail(d["noise_e"], 1, pad_e_m)
+                d["noise_a"] = _pad_tail(d["noise_a"], 1, pad_a_m)
+            elems.append(d)
+            spans.append((i, s))
+
+    # Scheme tables (RR permutation epochs, OFAN rotation orders) are padded
+    # per-position to the group-wide maximum shape; padded entries are only
+    # ever indexed by inert packets, whose outputs are discarded.
+    for key in ("te", "ta"):
+        n_tbl = len(elems[0][key])
+        for j in range(n_tbl):
+            shape = tuple(max(d[key][j].shape[ax] for d in elems)
+                          for ax in range(elems[0][key][j].ndim))
+            for d in elems:
+                t = d[key][j]
+                for ax, tgt in enumerate(shape):
+                    t = _pad_tail(t, ax, tgt)
+                d[key] = d[key][:j] + (t,) + d[key][j + 1:]
+
+    stacked = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *elems)
+
+    n_batch = len(elems)
+    if n_shards == "auto":
+        n_shards = max(1, min(len(jax.devices()), n_batch))
+    n_shards = int(n_shards)
+    b_pad = -(-n_batch // n_shards) * n_shards
+    if b_pad > n_batch:     # replicate the tail element; results are dropped
+        stacked = jax.tree_util.tree_map(
+            lambda x: np.concatenate(
+                [x, np.repeat(x[-1:], b_pad - n_batch, axis=0)]), stacked)
+
+    run = plans[0].build_run("mega", pad_e=pad_e_m, pad_a=pad_a_m,
+                             n_shards=n_shards)
+    out = run(stacked)
+    out = jax.tree_util.tree_map(np.asarray, out)
+
+    results = [dict() for _ in items]
+    retries: Dict[int, list] = {}
+    for b, (i, s) in enumerate(spans):
+        if bool(out["overflow"][b]):
+            retries.setdefault(i, []).append(s)
+            continue
+        out_b = jax.tree_util.tree_map(lambda x: x[b], out)
+        npk_i = plans[i].wl.n_packets
+        for k in ("delivery", "a_used", "c_used"):
+            out_b[k] = out_b[k][:npk_i]
+        results[i][s] = _postprocess(out_b, plans[i].wl)
+
+    # JSQ pad overflow: re-run exactly the (item, seed) cells a standalone
+    # run would re-pad, through the seed-batched path (whose retry is itself
+    # bitwise-identical to serial simulate).
+    for i, retry_seeds in retries.items():
+        tree, wl, scheme, _, links = items[i]
+        redone = simulate_batch(tree, wl, scheme, retry_seeds,
+                                prop_slots=prop_slots, links=links,
+                                backend=backend,
+                                jsq_pad_factor=jsq_pad_factor * 2)
+        results[i].update(dict(zip(retry_seeds, redone)))
+
+    return [[results[i][s] for s in seeds]
+            for i, (_, _, _, seeds, _) in enumerate(items)]
+
+
 # Positional order of the pipeline arguments; the first _N_STATIC are
-# seed-independent (vmap in_axes=None), the rest carry the seed batch axis.
+# seed-independent (vmap in_axes=None in the seed-batched variant), the rest
+# carry the seed batch axis.  In the megabatched variant ("mega") *every*
+# argument carries the fused (scheme x load x failure x seed) axis.
 _ARG_ORDER = ("p1", "e1", "p2", "e2", "dst", "inter_pod", "leaves_edge",
+              "pad_lim_e", "pad_lim_a",
               "t_rel", "tie", "a_pre", "c_pre", "rand_a", "rand_c",
               "noise_e", "noise_a", "te", "ta")
-_N_STATIC = 7
+_N_STATIC = 9
 
 
 @functools.lru_cache(maxsize=64)
 def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
                quanta, buffer_pkts, reset_wraps, pad_e, pad_a, prop, backend,
-               tables_e_keys, tables_a_keys, batch):
+               tables_e_keys, tables_a_keys, batch, n_shards=1):
     """Compile the 5-layer pipeline for a given (scheme-shape, tree) config.
 
-    ``batch=True`` builds the seed-vmapped variant (leading axis on every
-    per-seed argument).  The cache key is the *pipeline shape*: two schemes
-    with the same modes/padding share one compiled executable, which the
-    sweep planner exploits when grouping campaign grid points.
+    ``batch`` selects the dispatch variant:
+
+      * ``False``  -- one unbatched simulation (the serial baseline);
+      * ``"seed"`` -- seed-vmapped: per-seed arguments carry a leading batch
+        axis, seed-independent arguments are broadcast (``in_axes=None``);
+      * ``"mega"`` -- megabatched: *every* argument carries the fused
+        (scheme x load x failure x seed) leading axis, so schemes/loads that
+        lower to the same pipeline stack into ONE dispatch.  With
+        ``n_shards > 1`` the fused axis is additionally ``shard_map``-ed
+        across the first ``n_shards`` devices (the batch size must be a
+        multiple of ``n_shards``; the caller pads).
+
+    The cache key is the *pipeline shape*: two schemes with the same
+    modes/padding share one compiled executable, which the sweep planner
+    exploits when fusing campaign grid points into megabatches.
     """
 
     mid = n_pods * h * h   # queues per middle layer
 
-    def pipeline(p1, e1, p2, e2, dst, inter_pod, leaves_edge, t_rel, tie,
+    def pipeline(p1, e1, p2, e2, dst, inter_pod, leaves_edge,
+                 pad_lim_e, pad_lim_a, t_rel, tie,
                  a_pre, c_pre, rand_a, rand_c, noise_e, noise_a, te, ta):
         tbl_e = dict(zip(tables_e_keys, te))
         tbl_a = dict(zip(tables_a_keys, ta))
@@ -538,11 +713,11 @@ def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
             a_used = _ranked_ports(gkey, a_t, tie, leaves_edge,
                                    _select_fn_for("ofan", h, tbl_e), backend)
         if edge_mode in ("jsq", "jsq_quant"):
-            a_used, d, occ, ovf = _jsq_layer(
+            a_used, d, occ, max_rank = _jsq_layer(
                 edge_switch, a_t, tie, leaves_edge, n_switches=n_edges,
                 pad=pad_e, h=h, quanta=quanta, buffer_pkts=buffer_pkts,
                 noise=noise_e, backend=backend)
-            overflow |= ovf
+            overflow |= max_rank >= pad_lim_e
             qid = jnp.where(leaves_edge, edge_switch * h + a_used, -1)
             cnt = jnp.zeros((mid,), jnp.int32).at[
                 jnp.where(qid >= 0, qid, 0)].add(jnp.where(qid >= 0, 1, 0))
@@ -571,11 +746,11 @@ def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
             c_used = _ranked_ports(gkey, a_t, tie, inter_pod,
                                    _select_fn_for("ofan", h, tbl_a), backend)
         if agg_mode in ("jsq", "jsq_quant"):
-            c_used, d, occ, ovf = _jsq_layer(
+            c_used, d, occ, max_rank = _jsq_layer(
                 agg_switch, a_t, tie, inter_pod, n_switches=n_aggs,
                 pad=pad_a, h=h, quanta=quanta, buffer_pkts=buffer_pkts,
                 noise=noise_a, backend=backend)
-            overflow |= ovf
+            overflow |= max_rank >= pad_lim_a
             qid = jnp.where(inter_pod, agg_switch * h + c_used, -1)
             cnt = jnp.zeros((mid,), jnp.int32).at[
                 jnp.where(qid >= 0, qid, 0)].add(jnp.where(qid >= 0, 1, 0))
@@ -605,7 +780,9 @@ def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
         # ---------- DN_E (forced: edge -> host) ----------
         d, cnt, mo, so = _lindley_layer(dst, a_t, tie, n_hosts, backend)
         counts.append(cnt); max_occ.append(mo); sum_occ.append(so)
-        n_real.append(dst.shape[0])
+        # dst == -1 marks shape-bucketing pad packets (inert bypass rows);
+        # without padding this equals dst.shape[0] exactly.
+        n_real.append(jnp.sum(dst >= 0))
         delivery = d + prop
 
         return {"delivery": delivery,
@@ -616,8 +793,17 @@ def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
                 "a_used": a_used, "c_used": c_used,
                 "overflow": overflow}
 
-    if batch:
-        n_args = len(_ARG_ORDER)
+    n_args = len(_ARG_ORDER)
+    if batch == "mega":
+        fn = jax.vmap(pipeline, in_axes=(0,) * n_args)
+        if n_shards > 1:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import Mesh, PartitionSpec
+            mesh = Mesh(np.asarray(jax.devices()[:n_shards]), ("b",))
+            fn = shard_map(fn, mesh=mesh, in_specs=PartitionSpec("b"),
+                           out_specs=PartitionSpec("b"))
+        jitted = jax.jit(fn)
+    elif batch:                       # "seed" (True kept for back-compat)
         in_axes = (None,) * _N_STATIC + (0,) * (n_args - _N_STATIC)
         jitted = jax.jit(jax.vmap(pipeline, in_axes=in_axes))
     else:

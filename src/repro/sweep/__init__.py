@@ -1,9 +1,12 @@
-"""Batched scenario-campaign engine.
+"""Megabatched scenario-campaign engine.
 
 Declarative sweeps over the paper's evaluation axes (LB scheme x load x
-fat-tree size x replicate seeds x failure patterns) executed with one
-jitted, seed-vmapped dispatch per simulation point instead of a Python loop
-of per-seed ``fastsim.simulate`` calls.
+fat-tree size x replicate seeds x failure patterns x routing convergence)
+executed with ONE fused, jitted dispatch per compiled pipeline shape: every
+scheme/load/failure/seed cell that lowers to the same pipeline stacks onto a
+single vmapped batch axis (``shard_map``-sharded across devices when more
+than one is visible), instead of a Python loop of per-point
+``fastsim.simulate`` calls.
 
     from repro import sweep
 
@@ -16,14 +19,16 @@ CLI: ``python -m repro.sweep run --preset theory --out runs/theory``.
 """
 from .spec import (Campaign, FailureSpec, GridPoint, PRESETS, WorkloadSpec,
                    preset)
-from .planner import Plan, SeedBatch, plan
+from .planner import MegaBatch, Plan, SeedBatch, bucket_packets, plan
 from .results import (ResultStore, encode_record, loop_point_record,
                       point_record, summarize, write_summary)
 from .runner import build_links, build_workload, run_campaign
+from . import compile_cache
 
 __all__ = [
     "Campaign", "FailureSpec", "GridPoint", "PRESETS", "WorkloadSpec",
-    "preset", "Plan", "SeedBatch", "plan", "ResultStore", "encode_record",
-    "loop_point_record", "point_record", "summarize", "write_summary",
-    "build_links", "build_workload", "run_campaign",
+    "preset", "MegaBatch", "Plan", "SeedBatch", "bucket_packets", "plan",
+    "ResultStore", "encode_record", "loop_point_record", "point_record",
+    "summarize", "write_summary", "build_links", "build_workload",
+    "run_campaign", "compile_cache",
 ]

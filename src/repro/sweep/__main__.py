@@ -14,9 +14,11 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
 import pathlib
 import sys
 
+from . import compile_cache
 from .spec import Campaign, PRESETS, preset
 from .planner import plan
 from .results import ResultStore, summarize, write_summary
@@ -44,6 +46,8 @@ def _load_campaign(args) -> Campaign:
         override["trees"] = tuple(int(k) for k in args.k.split(","))
     if args.backend:
         override["backend"] = args.backend
+    if getattr(args, "shard", None):
+        override["shard"] = args.shard
     return dataclasses.replace(c, **override) if override else c
 
 
@@ -52,8 +56,19 @@ def cmd_run(args) -> int:
     out = pathlib.Path(args.out) if args.out else None
     store = ResultStore(out / "results.jsonl" if out else None)
     quiet = args.quiet
+    # Precedence: --no-compile-cache > --compile-cache > $REPRO_COMPILE_CACHE
+    # (resolved inside compile_cache.enable) > <out>/jax-cache.
+    if args.no_compile_cache:
+        cache_dir = False
+    elif args.compile_cache:
+        cache_dir = args.compile_cache
+    elif os.environ.get(compile_cache.ENV_VAR):
+        cache_dir = None
+    else:
+        cache_dir = str(out / "jax-cache") if out else None
     records, _ = run_campaign(
-        c, store=store, progress=None if quiet else print)
+        c, store=store, progress=None if quiet else print,
+        compile_cache_dir=cache_dir)
     store.close()
     rows = (write_summary(out / "summary.jsonl", records) if out
             else summarize(records))
@@ -71,10 +86,15 @@ def cmd_plan(args) -> int:
     c = _load_campaign(args)
     p = plan(c)
     print(p.describe())
-    for b in p.batches:
-        fail = b.failure.label() if b.failure else "nofail"
-        print(f"  {b.scheme:>16s} k={b.k} {b.load.label():<22s} {fail:<14s} "
-              f"seeds={list(b.seeds)}")
+    for i, mega in enumerate(p.megabatches):
+        pad = (f" pad={mega.npk_pad}" if mega.engine == "fast" else "")
+        print(f"dispatch {i}: engine={mega.engine} "
+              f"{mega.n_points} points{pad}")
+        for b in mega.members:
+            fail = b.failure.label() if b.failure else "nofail"
+            g = "" if b.g_converge is None else f" G={b.g_converge}"
+            print(f"  {b.scheme:>16s} k={b.k} {b.load.label():<22s} "
+                  f"{fail:<14s}{g} seeds={list(b.seeds)}")
     return 0
 
 
@@ -104,10 +124,17 @@ def main(argv=None) -> int:
         p.add_argument("--seeds", help="override seeds: '0:8' or '1,5,9'")
         p.add_argument("--k", help="override tree sizes: '4,8'")
         p.add_argument("--backend", choices=["auto", "xla", "pallas"])
+        p.add_argument("--shard", choices=["auto", "off"],
+                       help="shard fused dispatches across devices")
 
     p_run = sub.add_parser("run", help="execute a campaign")
     _spec_args(p_run)
     p_run.add_argument("--out", help="output dir for results/summary JSONL")
+    p_run.add_argument("--compile-cache", metavar="DIR",
+                       help="persistent JAX compile cache directory "
+                            "(default: <out>/jax-cache, or "
+                            "$REPRO_COMPILE_CACHE)")
+    p_run.add_argument("--no-compile-cache", action="store_true")
     p_run.add_argument("--quiet", action="store_true")
     p_run.set_defaults(fn=cmd_run)
 

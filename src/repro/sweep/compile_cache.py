@@ -1,0 +1,64 @@
+"""Persistent JAX compilation cache for repeat campaign invocations.
+
+The megabatch runner already amortizes jit compiles *within* a process (one
+compile per pipeline shape); this module makes them survive *across*
+processes: compiled executables are written to an on-disk cache keyed by the
+XLA computation fingerprint -- which for this engine is exactly the pipeline
+shape (tree size, scheme modes, bucketed packet count, JSQ padding, backend,
+device mesh) -- so re-running a campaign, or running a different campaign
+whose grid lands in the same shape buckets, skips compilation entirely.
+
+The cache location, in precedence order:
+
+1. an explicit path (``run_campaign(compile_cache=...)`` or the CLI's
+   ``--compile-cache``);
+2. the ``REPRO_COMPILE_CACHE`` environment variable;
+3. for the CLI ``run`` command with ``--out``, ``<out>/jax-cache``.
+
+Enabling is best-effort: on JAX builds without persistent-cache support the
+engine silently runs with in-process caching only.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+ENV_VAR = "REPRO_COMPILE_CACHE"
+_enabled_dir: Optional[str] = None
+
+
+def enable(path: Optional[str] = None) -> Optional[str]:
+    """Point JAX's persistent compilation cache at ``path`` (or the
+    ``REPRO_COMPILE_CACHE`` env var).  Returns the active cache directory,
+    or None when no path was given or the JAX build lacks support.
+
+    Thresholds are dropped to zero so even the small CPU-CI pipelines cache;
+    entries are content-addressed, so sharing one directory across campaigns
+    and topologies is safe.
+    """
+    global _enabled_dir
+    path = path or os.environ.get(ENV_VAR)
+    if not path:
+        return None
+    if _enabled_dir == str(path):
+        return _enabled_dir
+    try:
+        import jax
+        os.makedirs(path, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", str(path))
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        # JAX initializes its cache singleton lazily on the first compile; if
+        # anything compiled before enable(), that singleton was pinned to
+        # "no cache" and config updates alone would be ignored.
+        from jax.experimental.compilation_cache import (
+            compilation_cache as _cc)
+        _cc.reset_cache()
+    except Exception:
+        return None
+    _enabled_dir = str(path)
+    return _enabled_dir
+
+
+def active_dir() -> Optional[str]:
+    return _enabled_dir

@@ -1,16 +1,23 @@
 """Campaign execution planning.
 
-Two-level grouping of the expanded grid:
+Three-level grouping of the expanded grid:
 
 1. **Seed batches** -- grid points identical up to the replicate seed merge
-   into one :class:`SeedBatch`, which the runner executes as a *single*
-   ``fastsim.simulate_batch`` call (one jitted, seed-vmapped dispatch).
-2. **Compile groups** -- batches are ordered by *pipeline shape key*
-   (tree/workload/failure identity + ``LBScheme.shape_key()``), the same
-   information that keys ``fastsim._build_run``'s compile cache.  Batches
-   with equal shape keys run back-to-back and share one compiled executable:
-   e.g. flow_ecmp, subflow_mptcp, host_pkt and host_dr all lower to the same
-   'pre/pre' pipeline and compile exactly once per (tree, workload) pair.
+   into one :class:`SeedBatch` (the record-keeping granularity: one
+   workload/failure/scheme/G cell with all its seeds).
+2. **Megabatches** -- fast-engine seed batches whose points lower to the
+   same compiled pipeline fuse into one :class:`MegaBatch`, which the runner
+   executes as a *single* jitted ``fastsim.simulate_megabatch`` dispatch:
+   the scheme axis (flow_ecmp, subflow_mptcp, host_pkt and host_dr all lower
+   to the same 'pre/pre' pipeline), the failure axis, and -- via
+   shape-bucketed packet padding -- nearby message sizes all stack onto one
+   fused ``(scheme x load x failure x seed)`` batch axis.
+3. **Compiled shapes** -- one per distinct megabatch key, so
+   ``n_dispatches == n_compiled_shapes`` for fast-engine campaigns: every
+   compile is amortized over the whole grid slice that shares it.
+
+Loop-engine batches (ACK/ECN schemes) cannot fuse; each remains its own
+serial dispatch.
 """
 from __future__ import annotations
 
@@ -21,32 +28,68 @@ from ..core import lb_schemes as lbs
 from .spec import Campaign, FailureSpec, GridPoint, WorkloadSpec
 
 
+def bucket_packets(n: int) -> int:
+    """Shape bucket for packet-array padding: next power of two.  Workloads
+    whose packet counts land in one bucket share a compiled pipeline."""
+    return 1 << max(0, int(n - 1).bit_length())
+
+
 @dataclasses.dataclass(frozen=True)
 class SeedBatch:
-    """All replicate seeds of one simulation point: one vmapped execution."""
+    """All replicate seeds of one simulation point."""
     campaign: str
     k: int
     load: WorkloadSpec
     failure: Optional[FailureSpec]
     scheme: str
     seeds: Tuple[int, ...]
+    g_converge: Optional[int] = None
 
     def points(self) -> List[GridPoint]:
         return [GridPoint(self.campaign, self.k, self.load, self.failure,
-                          self.scheme, s) for s in self.seeds]
+                          self.scheme, s, self.g_converge)
+                for s in self.seeds]
 
-    def shape_key(self, backend: str, prop_slots: float) -> Tuple:
-        """Compiled-pipeline identity (modulo JSQ padding, which the engine
-        derives from the workload and is therefore equal within a group)."""
-        return (self.k, self.load, self.failure,
-                lbs.by_name(self.scheme).shape_key(), backend,
-                float(prop_slots))
+    def fused_key(self, campaign: Campaign) -> Tuple:
+        """Megabatch identity: everything the fused dispatch compiles over.
+        Loads/failures are *not* part of it (their per-packet arrays ride the
+        batch axis, padded to the bucketed packet count); loop-engine points
+        can't fuse and get a per-batch key."""
+        if campaign.engine == "loop" or lbs.by_name(self.scheme).needs_feedback:
+            return ("loop", self.k, self.load, self.failure, self.scheme,
+                    self.g_converge)
+        return ("fast", self.k, bucket_packets(self.load.n_packets(self.k)),
+                lbs.by_name(self.scheme).shape_key(), campaign.backend,
+                float(campaign.prop_slots))
+
+
+@dataclasses.dataclass
+class MegaBatch:
+    """One runner dispatch: either a fused fast-engine megabatch (all member
+    batches execute as a single jitted ``simulate_megabatch`` call) or a
+    single loop-engine batch."""
+    key: Tuple
+    members: List[SeedBatch]
+
+    @property
+    def engine(self) -> str:
+        return "loop" if self.key[0] == "loop" else "fast"
+
+    @property
+    def npk_pad(self) -> int:
+        """Bucketed packet-array padding of the fused dispatch."""
+        return self.key[2] if self.engine == "fast" else 0
+
+    @property
+    def n_points(self) -> int:
+        return sum(len(b.seeds) for b in self.members)
 
 
 @dataclasses.dataclass
 class Plan:
     campaign: Campaign
     batches: List[SeedBatch]
+    megabatches: List[MegaBatch]
 
     @property
     def n_points(self) -> int:
@@ -54,39 +97,42 @@ class Plan:
 
     @property
     def n_dispatches(self) -> int:
-        return len(self.batches)
+        return len(self.megabatches)
+
+    @property
+    def n_shapes(self) -> int:
+        return len({m.key for m in self.megabatches})
 
     def describe(self) -> str:
-        n_shapes = len({b.shape_key(self.campaign.backend,
-                                    self.campaign.prop_slots)
-                        for b in self.batches})
         return (f"campaign {self.campaign.name!r}: {self.n_points} grid "
-                f"points -> {self.n_dispatches} batched dispatches "
-                f"({n_shapes} compiled pipeline shapes)")
+                f"points -> {self.n_dispatches} fused dispatches "
+                f"({self.n_shapes} compiled pipeline shapes)")
 
 
 def plan(campaign: Campaign) -> Plan:
-    """Group the campaign grid into seed batches ordered for compile reuse."""
+    """Group the campaign grid into seed batches, then fuse batches sharing
+    a compiled pipeline into megabatches (one dispatch per compiled shape)."""
     batches: dict = {}
-    order: list = []
     for p in campaign.points():
-        key = (p.k, p.load, p.failure, p.scheme)
-        if key not in batches:
-            batches[key] = []
-            order.append(key)
-        batches[key].append(p.seed)
+        key = (p.k, p.load, p.failure, p.scheme, p.g_converge)
+        batches.setdefault(key, []).append(p.seed)
 
     out = [SeedBatch(campaign=campaign.name, k=k, load=load, failure=failure,
-                     scheme=scheme, seeds=tuple(batches[(k, load, failure,
-                                                         scheme)]))
-           for (k, load, failure, scheme) in order]
-    # Stable sort by shape key: batches sharing a compiled pipeline become
-    # adjacent while the within-shape grid order is preserved.
-    shape_rank: dict = {}
+                     scheme=scheme, seeds=tuple(seeds), g_converge=g)
+           for (k, load, failure, scheme, g), seeds in batches.items()]
+    # Stable sort by fused key: batches sharing a compiled pipeline become
+    # adjacent (and fuse into one dispatch) while the within-group grid
+    # order is preserved.
+    fused_rank: dict = {}
     for b in out:
-        shape_rank.setdefault(
-            b.shape_key(campaign.backend, campaign.prop_slots),
-            len(shape_rank))
-    out.sort(key=lambda b: shape_rank[b.shape_key(campaign.backend,
-                                                  campaign.prop_slots)])
-    return Plan(campaign=campaign, batches=out)
+        fused_rank.setdefault(b.fused_key(campaign), len(fused_rank))
+    out.sort(key=lambda b: fused_rank[b.fused_key(campaign)])
+
+    megas: List[MegaBatch] = []
+    for b in out:
+        key = b.fused_key(campaign)
+        if megas and megas[-1].key == key:
+            megas[-1].members.append(b)
+        else:
+            megas.append(MegaBatch(key=key, members=[b]))
+    return Plan(campaign=campaign, batches=out, megabatches=megas)

@@ -22,7 +22,8 @@ from ..net.topology import LAYER_NAMES
 from .spec import GridPoint
 
 # Grid-point identity fields, in summary group-by order (everything but seed).
-_KEY_FIELDS = ("campaign", "k", "workload", "failure", "scheme")
+# Fast-engine records carry no g_converge; .get(None) keeps them grouped.
+_KEY_FIELDS = ("campaign", "k", "workload", "failure", "g_converge", "scheme")
 
 
 def point_record(point: GridPoint, res) -> Dict:
@@ -67,6 +68,7 @@ def loop_point_record(point: GridPoint, res) -> Dict:
         "failure": point.failure.label() if point.failure else None,
         "scheme": point.scheme,
         "seed": point.seed,
+        "g_converge": point.g_converge,
         "engine": "loop",
         "cct": float(res.cct_slots),
         "cct_acked": float(res.cct_acked_slots),

@@ -1,17 +1,21 @@
-"""Campaign execution: one vmapped dispatch per seed batch.
+"""Campaign execution: one fused megabatch dispatch per compiled shape.
 
-The runner walks the planner's batch list in compile-reuse order, memoizing
-topologies, workloads and failure states across batches, and executes
+The runner walks the planner's megabatch list, memoizing topologies,
+workloads and failure states across batches, and executes
 
-  * ``engine='fast'`` batches as a single ``fastsim.simulate_batch`` call
-    (all replicate seeds in one jitted, seed-vmapped dispatch), or
-  * ``engine='loop'`` batches (and any ACK/ECN scheme) serially on the
-    slotted feedback engine.
+  * fast-engine megabatches as a single ``fastsim.simulate_megabatch`` call:
+    every member (scheme, load, failure, seed) cell stacks onto one fused,
+    jitted batch axis -- padded to the megabatch's bucketed packet shape and,
+    when several devices are visible (``Campaign.shard='auto'``),
+    ``shard_map``-sharded across them;
+  * loop-engine batches (and any ACK/ECN scheme) serially on the slotted
+    feedback engine, with the batch's ``g_converge`` grid-axis value.
 
 Each grid point yields one record in the :class:`~repro.sweep.results
 .ResultStore`; per-point results are bitwise-identical to standalone
 ``fastsim.simulate`` calls with the same seeds (tested in
-``tests/test_sweep.py``).
+``tests/test_sweep.py``).  Pass ``compile_cache=<dir>`` (or set
+``REPRO_COMPILE_CACHE``) to persist compiled pipelines across invocations.
 """
 from __future__ import annotations
 
@@ -23,7 +27,8 @@ import numpy as np
 from ..net.topology import FatTree, LinkState, rho_max
 from ..net import workloads, fastsim, loopsim
 from ..core import lb_schemes as lbs
-from .planner import SeedBatch, plan
+from . import compile_cache
+from .planner import MegaBatch, SeedBatch, plan
 from .results import ResultStore, loop_point_record, point_record
 from .spec import Campaign, FailureSpec, WorkloadSpec
 
@@ -92,14 +97,16 @@ class _Cache:
         return self.rhos[key]
 
 
-def _run_fast_batch(batch: SeedBatch, campaign: Campaign, cache: _Cache):
-    tree = cache.tree(batch.k)
-    wl = cache.workload(batch.k, batch.load)
-    links = cache.link_state(batch.k, batch.failure)
-    scheme = lbs.by_name(batch.scheme)
-    return fastsim.simulate_batch(tree, wl, scheme, batch.seeds,
-                                  prop_slots=campaign.prop_slots,
-                                  links=links, backend=campaign.backend)
+def _run_fast_mega(mega: MegaBatch, campaign: Campaign, cache: _Cache):
+    """One fused dispatch for all member batches; returns results per member."""
+    items = [(cache.tree(b.k), cache.workload(b.k, b.load),
+              lbs.by_name(b.scheme), b.seeds,
+              cache.link_state(b.k, b.failure)) for b in mega.members]
+    n_shards = "auto" if campaign.shard == "auto" else 1
+    return fastsim.simulate_megabatch(items, prop_slots=campaign.prop_slots,
+                                      backend=campaign.backend,
+                                      npk_pad=mega.npk_pad,
+                                      n_shards=n_shards)
 
 
 def _run_loop_batch(batch: SeedBatch, campaign: Campaign, cache: _Cache):
@@ -108,53 +115,70 @@ def _run_loop_batch(batch: SeedBatch, campaign: Campaign, cache: _Cache):
     links = cache.link_state(batch.k, batch.failure)
     scheme = lbs.by_name(batch.scheme)
     opts = campaign.loop_options()
-    g_converge = opts.pop("g_converge", None)
     rho = opts.pop("rho", 1.0)
     if rho == "auto":
         rho = cache.rho_auto(batch.k, batch.load, batch.failure)
     cfg = loopsim.LoopConfig(prop_slots=int(round(campaign.prop_slots)),
                              rho=float(rho), **opts)
     return [loopsim.simulate(tree, wl, scheme, cfg, seed=s, links=links,
-                             g_converge=g_converge) for s in batch.seeds]
+                             g_converge=batch.g_converge)
+            for s in batch.seeds]
 
 
 def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,
                  keep_full: bool = False,
-                 progress: Optional[Callable[[str], None]] = None):
+                 progress: Optional[Callable[[str], None]] = None,
+                 compile_cache_dir: Optional[str] = None):
     """Execute a campaign; returns (records, full_results).
 
     ``records`` is the flat list of per-point dicts (also appended to
     ``store`` when given, in grid-plan order).  ``full_results`` maps
     ``GridPoint -> FastSimResult/LoopSimResult`` when ``keep_full=True``
     (tests and figure code that need raw delivery vectors), else ``{}``.
+    ``compile_cache_dir`` (or the ``REPRO_COMPILE_CACHE`` env var) enables
+    the persistent JAX compilation cache, so repeat invocations skip
+    compiles entirely; pass ``False`` to keep it off even when the env var
+    is set.
     """
+    cache_dir = (None if compile_cache_dir is False
+                 else compile_cache.enable(compile_cache_dir))
     p = plan(campaign)
     if progress:
         progress(p.describe())
+        if cache_dir:
+            progress(f"persistent compile cache: {cache_dir}")
     cache = _Cache()
     store = store if store is not None else ResultStore(None)
     n_before = len(store.records)   # store may be shared across campaigns
     full: Dict = {}
     t0 = time.perf_counter()
-    for batch in p.batches:
+    for mega in p.megabatches:
         tb = time.perf_counter()
-        if campaign.engine == "loop" or lbs.by_name(batch.scheme).needs_feedback:
-            results = _run_loop_batch(batch, campaign, cache)
+        if mega.engine == "loop":
+            per_member = [_run_loop_batch(b, campaign, cache)
+                          for b in mega.members]
             to_record = loop_point_record
         else:
-            results = _run_fast_batch(batch, campaign, cache)
+            per_member = _run_fast_mega(mega, campaign, cache)
             to_record = point_record
-        for point, res in zip(batch.points(), results):
-            store.append(to_record(point, res))
-            if keep_full:
-                full[point] = res
-        store.timings.append((batch, time.perf_counter() - tb))
-        if progress:
-            progress(f"  {batch.scheme:>16s} k={batch.k} "
-                     f"{batch.load.label():<22s} x{len(batch.seeds)} seeds: "
-                     f"{store.timings[-1][1]:.2f}s")
+        secs = time.perf_counter() - tb
+        for batch, results in zip(mega.members, per_member):
+            for point, res in zip(batch.points(), results):
+                store.append(to_record(point, res))
+                if keep_full:
+                    full[point] = res
+            # Apportion the fused dispatch's wall time over members by their
+            # share of fused points, so per-scheme timing summaries stay
+            # meaningful.
+            store.timings.append((batch, secs * len(batch.seeds)
+                                  / max(mega.n_points, 1)))
+            if progress:
+                progress(f"  {batch.scheme:>16s} k={batch.k} "
+                         f"{batch.load.label():<22s} x{len(batch.seeds)} "
+                         f"seeds: {store.timings[-1][1]:.2f}s")
     if progress:
         progress(f"campaign {campaign.name!r} done in "
                  f"{time.perf_counter() - t0:.2f}s "
-                 f"({p.n_points} points, {p.n_dispatches} dispatches)")
+                 f"({p.n_points} points, {p.n_dispatches} dispatches, "
+                 f"{p.n_shapes} shapes)")
     return store.records[n_before:], full

@@ -41,6 +41,18 @@ class WorkloadSpec:
         bits.append(f"r{self.rng_seed}")
         return "-".join(bits)
 
+    def n_packets(self, k: int) -> int:
+        """Packet count of this workload on a fat-tree of size ``k``, without
+        materializing it (the planner buckets megabatch shapes by this)."""
+        n_hosts = k ** 3 // 4
+        if self.kind == "permutation":
+            return n_hosts * self.msg_packets
+        if self.kind == "all_to_all":
+            return n_hosts * (n_hosts - 1) * self.msg_packets
+        if self.kind == "fsdp_rings":
+            return n_hosts * self.msg_packets
+        raise ValueError(f"unknown workload kind {self.kind!r}")
+
 
 @dataclasses.dataclass(frozen=True)
 class FailureSpec:
@@ -61,11 +73,13 @@ class GridPoint:
     failure: Optional[FailureSpec]
     scheme: str
     seed: int
+    g_converge: Optional[int] = None   # loop engine routing-convergence slot
 
     def point_id(self) -> str:
         fail = self.failure.label() if self.failure else "nofail"
+        g = "" if self.g_converge is None else f"G{self.g_converge}/"
         return (f"{self.campaign}/k{self.k}/{self.load.label()}/{fail}/"
-                f"{self.scheme}/s{self.seed}")
+                f"{g}{self.scheme}/s{self.seed}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,12 +87,17 @@ class Campaign:
     """A declarative sweep: the cartesian product of the axis tuples.
 
     ``engine`` selects the execution backend: ``'fast'`` (the max-plus
-    engine, seed-batched via vmap) or ``'loop'`` (the slotted feedback
-    engine, serial -- required for ACK/ECN schemes like REPS and PLB).
-    ``loop_opts`` carries ``net.loopsim.LoopConfig`` overrides plus the two
-    special keys ``g_converge`` (routing convergence slot, None = never) and
-    ``rho`` (sending rate; the string ``'auto'`` means rho_max under the
-    point's failure pattern, Appendix A).
+    engine, megabatched via one fused vmap dispatch per compiled pipeline
+    shape) or ``'loop'`` (the slotted feedback engine, serial -- required for
+    ACK/ECN schemes like REPS and PLB).  ``g_converge`` is a grid axis of
+    routing-convergence slots for loop-engine points (None = never converge;
+    fast-engine campaigns leave it at the default ``(None,)``).
+    ``loop_opts`` carries the remaining ``net.loopsim.LoopConfig`` overrides
+    plus the special key ``rho`` (sending rate; the string ``'auto'`` means
+    rho_max under the point's failure pattern, Appendix A).
+    ``shard`` controls device sharding of fused megabatch dispatches:
+    ``'auto'`` splits the fused axis over all visible devices via
+    ``shard_map``, ``'off'`` keeps single-device vmap.
     """
     name: str
     schemes: Tuple[str, ...]
@@ -86,9 +105,11 @@ class Campaign:
     trees: Tuple[int, ...] = (8,)
     seeds: Tuple[int, ...] = (0,)
     failures: Tuple[Optional[FailureSpec], ...] = (None,)
+    g_converge: Tuple[Optional[int], ...] = (None,)
     prop_slots: float = 12.0
     backend: str = "auto"
     engine: str = "fast"
+    shard: str = "auto"
     loop_opts: Tuple[Tuple[str, object], ...] = ()
 
     def __post_init__(self):
@@ -101,11 +122,20 @@ class Campaign:
                     f"see repro.core.lb_schemes.by_name") from None
         if self.engine not in ("fast", "loop"):
             raise ValueError(f"unknown engine {self.engine!r}")
+        if self.shard not in ("auto", "off"):
+            raise ValueError(f"unknown shard policy {self.shard!r}")
+        # Legacy spec migration: g_converge used to live in loop_opts.
+        opts = dict(self.loop_opts)
+        if "g_converge" in opts:
+            g = opts.pop("g_converge")
+            object.__setattr__(self, "loop_opts", tuple(sorted(opts.items())))
+            if self.g_converge == (None,):
+                object.__setattr__(self, "g_converge", (g,))
 
     @property
     def n_points(self) -> int:
         return (len(self.trees) * len(self.loads) * len(self.failures)
-                * len(self.schemes) * len(self.seeds))
+                * len(self.g_converge) * len(self.schemes) * len(self.seeds))
 
     def loop_options(self) -> Dict:
         return dict(self.loop_opts)
@@ -113,11 +143,12 @@ class Campaign:
     def points(self):
         """Expand the grid in a deterministic order (seeds innermost, so
         replicate runs of one point are adjacent for the planner)."""
-        for k, load, failure, scheme, seed in itertools.product(
-                self.trees, self.loads, self.failures, self.schemes,
-                self.seeds):
+        for k, load, failure, g, scheme, seed in itertools.product(
+                self.trees, self.loads, self.failures, self.g_converge,
+                self.schemes, self.seeds):
             yield GridPoint(campaign=self.name, k=k, load=load,
-                            failure=failure, scheme=scheme, seed=seed)
+                            failure=failure, scheme=scheme, seed=seed,
+                            g_converge=g)
 
     # ---- JSON round-trip ---------------------------------------------------
     def to_dict(self) -> Dict:
@@ -137,6 +168,8 @@ class Campaign:
         d["seeds"] = tuple(d.get("seeds", (0,)))
         d["failures"] = tuple(FailureSpec(**f) if f else None
                               for f in d.get("failures", [None]))
+        d["g_converge"] = tuple(d.get("g_converge", [None]))
+        d["shard"] = d.get("shard", "auto")
         d["loop_opts"] = tuple(sorted(d.get("loop_opts", {}).items()))
         return cls(**d)
 
@@ -179,17 +212,18 @@ def _layer_balance(k: int = 8, seeds: Tuple[int, ...] = (5,)) -> Campaign:
 
 
 def _failures(k: int = 4, seeds: Tuple[int, ...] = (0,)) -> Campaign:
-    """Loop-engine failure study skeleton (examples/simulate_fabric.py
-    derives its G-sweep variants from this via dataclasses.replace)."""
+    """Loop-engine failure study skeleton (examples/simulate_fabric.py runs
+    its G-convergence sweep by widening the g_converge axis)."""
     return Campaign(
         name="failures",
         schemes=("host_pkt_ar", "switch_pkt_ar", "ofan"),
         loads=(WorkloadSpec("permutation", 64, inter_pod_only=True),),
         trees=(k,), seeds=seeds,
         failures=(FailureSpec(p_fail=0.08, rng_seed=42),),
+        g_converge=(0,),
         engine="loop",
-        loop_opts=(("g_converge", 0), ("max_slots", 20000),
-                   ("rho", "auto"), ("rto_slots", 250)))
+        loop_opts=(("max_slots", 20000), ("rho", "auto"),
+                   ("rto_slots", 250)))
 
 
 PRESETS = {

@@ -1,3 +1,13 @@
+import os
+
+# Exercise the multi-device shard_map path on single-CPU hosts: split the
+# host platform into two virtual devices.  Must run before jax initializes
+# its backend, which conftest import order guarantees.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=2").strip()
+
 import numpy as np
 import pytest
 

@@ -66,20 +66,48 @@ def test_campaign_matches_standalone_simulate(tree, perm_wl):
         assert res.cct == ref.cct
 
 
-def test_planner_batches_seeds_and_groups_shapes():
+def test_planner_fuses_schemes_into_megabatches():
     c = sweep.Campaign(
         name="t", schemes=("host_pkt", "simple_rr", "host_dr"),
         loads=(sweep.WorkloadSpec("permutation", 16),), trees=(4,),
         seeds=SEEDS)
     p = sweep.plan(c)
     assert p.n_points == 12
-    assert p.n_dispatches == 3          # one per scheme, seeds batched
+    # host_pkt and host_dr share the 'pre/pre' pipeline and fuse into ONE
+    # dispatch; simple_rr compiles its own shape.
+    assert p.n_dispatches == 2
+    assert p.n_dispatches == p.n_shapes
     for b in p.batches:
         assert b.seeds == SEEDS
-    # host_pkt and host_dr share the 'pre/pre' pipeline shape and must be
-    # adjacent so the second rides the first's compile.
-    order = [b.scheme for b in p.batches]
-    assert abs(order.index("host_pkt") - order.index("host_dr")) == 1
+    fused = {frozenset(b.scheme for b in m.members) for m in p.megabatches}
+    assert frozenset({"host_pkt", "host_dr"}) in fused
+
+
+def test_planner_dispatches_equal_shapes_on_fig1_grid():
+    """The fig1/table2 grid: the scheme axis is fully fused -- exactly one
+    dispatch per compiled pipeline shape (pre/pre, rr_reset, jsq_quant,
+    ofan), per traffic matrix."""
+    c = sweep.preset("table2")
+    p = sweep.plan(c)
+    assert p.n_dispatches == p.n_shapes
+    assert p.n_dispatches == 4 * len(c.loads)
+    pre = [m for m in p.megabatches
+           if {b.scheme for b in m.members} >= {"flow_ecmp", "host_pkt"}]
+    assert len(pre) == len(c.loads)     # 4 pre/pre schemes fused per load
+
+
+def test_planner_buckets_message_sizes_into_one_shape():
+    """Loads whose packet counts land in one power-of-two bucket share a
+    compiled shape and fuse into one dispatch."""
+    c = sweep.Campaign(
+        name="t", schemes=("host_pkt",),
+        loads=(sweep.WorkloadSpec("permutation", 24),
+               sweep.WorkloadSpec("permutation", 32)),
+        trees=(4,), seeds=(0,))
+    p = sweep.plan(c)
+    assert sweep.bucket_packets(16 * 24) == sweep.bucket_packets(16 * 32)
+    assert p.n_dispatches == 1
+    assert p.megabatches[0].npk_pad == 512
 
 
 def test_result_store_deterministic(tmp_path):
@@ -114,6 +142,132 @@ def test_campaign_json_roundtrip():
 def test_campaign_rejects_unknown_scheme():
     with pytest.raises(KeyError):
         _campaign(schemes=("definitely_not_a_scheme",))
+
+
+def _assert_bitwise_equal(res, ref):
+    np.testing.assert_array_equal(res.delivery, ref.delivery)
+    np.testing.assert_array_equal(res.flow_completion, ref.flow_completion)
+    assert res.cct == ref.cct
+    assert res.max_queue == ref.max_queue
+    for name in ref.layers:
+        np.testing.assert_array_equal(res.layers[name].counts,
+                                      ref.layers[name].counts)
+        assert res.layers[name].max_queue == ref.layers[name].max_queue
+        assert res.layers[name].avg_wait == ref.layers[name].avg_wait
+
+
+@pytest.mark.parametrize("scheme", ("host_pkt", "switch_pkt_ar", "ofan"))
+def test_megabatch_bitwise_identical_to_serial(tree, perm_wl, scheme):
+    """One fused dispatch over two workloads x seeds must reproduce serial
+    simulate exactly, per point -- including shape-bucketing padding (the
+    second workload is padded from 384 to 512 packets)."""
+    sch = lbs.by_name(scheme)
+    wl_b = workloads.permutation(tree, 24, np.random.default_rng(3))
+    items = [(tree, perm_wl, sch, list(SEEDS), None),
+             (tree, wl_b, sch, [0, 1], None)]
+    out = fastsim.simulate_megabatch(items, npk_pad=512)
+    for (t, w, s_, seeds, _), results in zip(items, out):
+        for seed, res in zip(seeds, results):
+            assert res.delivery.shape[0] == w.n_packets
+            _assert_bitwise_equal(res, fastsim.simulate(t, w, s_, seed=seed))
+
+
+def test_megabatch_fuses_schemes_bitwise(tree, perm_wl):
+    """flow_ecmp / host_pkt / host_dr stack onto one fused axis; every
+    (scheme, seed) cell stays bitwise-identical to standalone simulate."""
+    items = [(tree, perm_wl, lbs.by_name(n), list(SEEDS), None)
+             for n in ("flow_ecmp", "host_pkt", "host_dr")]
+    out = fastsim.simulate_megabatch(items)
+    for (t, w, s_, seeds, _), results in zip(items, out):
+        for seed, res in zip(seeds, results):
+            _assert_bitwise_equal(res, fastsim.simulate(t, w, s_, seed=seed))
+            np.testing.assert_array_equal(
+                res.a_used, fastsim.simulate(t, w, s_, seed=seed).a_used)
+
+
+def test_megabatch_sharded_bitwise_identical(tree, perm_wl):
+    """shard_map over the fused axis (2 virtual devices from conftest's
+    XLA_FLAGS) must not change results; the 3x3=9-element batch also forces
+    the divisibility padding path (9 -> 10)."""
+    import jax
+    assert len(jax.devices()) >= 2
+    items = [(tree, perm_wl, lbs.by_name(n), [0, 1, 2], None)
+             for n in ("flow_ecmp", "host_pkt", "host_dr")]
+    sharded = fastsim.simulate_megabatch(items, n_shards="auto")
+    for (t, w, s_, seeds, _), results in zip(items, sharded):
+        for seed, res in zip(seeds, results):
+            _assert_bitwise_equal(res, fastsim.simulate(t, w, s_, seed=seed))
+
+
+def test_padding_preserves_delivered_packet_counts(tree):
+    """Shape-bucketing pad packets are inert: per-layer delivered-packet
+    counts match the unpadded run exactly."""
+    wl = workloads.permutation(tree, 24, np.random.default_rng(3))
+    sch = lbs.by_name("switch_pkt")
+    (padded,), = fastsim.simulate_megabatch([(tree, wl, sch, [0], None)],
+                                            npk_pad=1024)
+    ref = fastsim.simulate(tree, wl, sch, seed=0)
+    for name in ref.layers:
+        assert padded.layers[name].counts.sum() == ref.layers[name].counts.sum()
+        np.testing.assert_array_equal(padded.layers[name].counts,
+                                      ref.layers[name].counts)
+    assert padded.delivery.shape[0] == wl.n_packets
+
+
+def test_megabatch_jsq_overflow_retry_matches_serial(tree, perm_wl):
+    """A tiny jsq_pad_factor forces the pad-overflow retry ladder; the
+    megabatch must take exactly the serial retry decisions (per element)
+    and land on bitwise-identical results."""
+    sch = lbs.by_name("jsq")
+    (results,) = fastsim.simulate_megabatch(
+        [(tree, perm_wl, sch, [0, 1], None)], jsq_pad_factor=0.01)
+    for seed, res in zip([0, 1], results):
+        _assert_bitwise_equal(res, fastsim.simulate(
+            tree, perm_wl, sch, seed=seed, jsq_pad_factor=0.01))
+
+
+def test_campaign_shard_off_matches_auto(tree, perm_wl):
+    recs_auto, _ = sweep.run_campaign(_campaign(seeds=(0, 1)))
+    recs_off, _ = sweep.run_campaign(
+        _campaign(seeds=(0, 1), shard="off"))
+    assert recs_auto == recs_off
+
+
+def test_g_converge_is_a_grid_axis():
+    c = sweep.Campaign(
+        name="g", schemes=("host_pkt_ar",),
+        loads=(sweep.WorkloadSpec("permutation", 8, inter_pod_only=True),),
+        trees=(4,), seeds=(0,), engine="loop",
+        g_converge=(0, None),
+        failures=(sweep.FailureSpec(0.05, rng_seed=3),),
+        loop_opts=(("max_slots", 4000), ("rho", 0.9)))
+    assert c.n_points == 2
+    records, _ = sweep.run_campaign(c)
+    gs = [r["g_converge"] for r in records]
+    assert gs == [0, None]
+    assert len({r["cct"] for r in records}) == 2   # G changes the outcome
+
+
+def test_legacy_loop_opts_g_converge_migrates():
+    c = sweep.Campaign(
+        name="legacy", schemes=("host_pkt_ar",),
+        loads=(sweep.WorkloadSpec("permutation", 8),), trees=(4,),
+        engine="loop", loop_opts=(("g_converge", 7), ("max_slots", 100)))
+    assert c.g_converge == (7,)
+    assert "g_converge" not in dict(c.loop_opts)
+    c2 = sweep.Campaign.from_dict(json.loads(json.dumps(c.to_dict())))
+    assert c2 == c
+
+
+def test_compile_cache_persists_executables(tmp_path):
+    cache_dir = tmp_path / "jax-cache"
+    # Drop in-process compile reuse so the dispatch actually compiles (and
+    # therefore writes a persistent entry) inside this test.
+    fastsim._build_run.cache_clear()
+    sweep.run_campaign(_campaign(seeds=(0,), schemes=("host_pkt",)),
+                       compile_cache_dir=str(cache_dir))
+    entries = list(cache_dir.iterdir())
+    assert entries, "persistent compile cache left no entries"
 
 
 def test_scheme_shape_key_groups_pre_modes():
