@@ -89,7 +89,7 @@ def fig1(scale: C.Scale):
         recs, us, _ = _run_grid(sweep.Campaign(
             name=f"fig1_{matrix}_loop", schemes=tuple(LOOP_ONLY),
             loads=(load,), trees=(scale.k,), seeds=(0,), engine="loop",
-            loop_opts=(("max_slots", scale.max_slots),)))
+            max_slots=scale.max_slots))
         for r in recs:
             inc = 100.0 * (r["cct"] / bound - 1.0)
             C.emit(f"fig1_{matrix}_{r['scheme']}", us[r["scheme"]],
@@ -106,8 +106,8 @@ def _failure_campaign(scale: C.Scale, name, schemes, failures, g_converge):
         loads=(sweep.WorkloadSpec("permutation", scale.perm_msg, rng_seed=1),),
         trees=(scale.k,), seeds=(0,), engine="loop",
         failures=tuple(failures), g_converge=tuple(g_converge),
-        loop_opts=(("max_slots", scale.max_slots), ("rho", "auto"),
-                   ("rto_slots", 300)))
+        max_slots=scale.max_slots,
+        loop_opts=(("rho", "auto"), ("rto_slots", 300)))
 
 
 def _failure_bound(tree, wl, fspec, scale: C.Scale) -> float:
@@ -252,19 +252,23 @@ def fig8(scale: C.Scale):
 
 
 def fig9(scale: C.Scale):
-    """Short (20-packet) buffers."""
-    tree = FatTree(scale.k)
-    wl = workloads.permutation(tree, scale.perm_msg, np.random.default_rng(1))
+    """Short (20-packet) buffers: one loop-engine campaign, schemes fused
+    per compiled slotted-pipeline shape."""
     bound = C.perm_bound_slots(scale.perm_msg)
-    cfg = loopsim.LoopConfig(max_slots=scale.max_slots, buffer_pkts=20,
-                             loss="sack", sack_thresh=8)
+    recs, us, _ = _run_grid(sweep.Campaign(
+        name="fig9", schemes=("host_pkt", "switch_pkt_ar", "ofan"),
+        loads=(sweep.WorkloadSpec("permutation", scale.perm_msg, rng_seed=1),),
+        trees=(scale.k,), seeds=(0,), engine="loop",
+        max_slots=scale.max_slots,
+        loop_opts=(("buffer_pkts", 20), ("loss", "sack"),
+                   ("sack_thresh", 8))))
     out = {}
-    for name in ["host_pkt", "switch_pkt_ar", "ofan"]:
-        (inc, res), us = C.timed(
-            lambda: C.loop_cct_increase(tree, wl, name, bound, cfg))
-        C.emit(f"fig9_{name}", us, cct_increase_pct=round(inc, 2),
-               drops=res.drops, rtx=res.retransmissions)
-        out[name] = inc
+    for r in recs:
+        inc = 100.0 * (r["cct"] / bound - 1.0)
+        C.emit(f"fig9_{r['scheme']}", us[r["scheme"]],
+               cct_increase_pct=round(inc, 2), drops=r["drops"],
+               rtx=r["retransmissions"])
+        out[r["scheme"]] = inc
     return out
 
 
@@ -313,64 +317,79 @@ def fig11(scale: C.Scale):
 
 
 def fig12(scale: C.Scale):
-    """SACK-based loss recovery."""
-    tree = FatTree(scale.k)
-    wl = workloads.permutation(tree, scale.perm_msg, np.random.default_rng(1))
+    """SACK-based loss recovery: the ``fig12`` campaign preset scaled to the
+    benchmark's message size (host_pkt rides the fused 'pre/pre' slotted
+    dispatch; adaptive/switch schemes compile their own shapes)."""
     bound = C.perm_bound_slots(scale.perm_msg)
-    cfg = loopsim.LoopConfig(loss="sack", sack_thresh=32,
-                             max_slots=scale.max_slots)
+    recs, us, _ = _run_grid(sweep.Campaign(
+        name="fig12",
+        schemes=("host_pkt", "switch_pkt_ar", "host_pkt_ar", "ofan"),
+        loads=(sweep.WorkloadSpec("permutation", scale.perm_msg, rng_seed=1),),
+        trees=(scale.k,), seeds=(0,), engine="loop",
+        max_slots=scale.max_slots,
+        loop_opts=(("loss", "sack"), ("sack_thresh", 32))))
     out = {}
-    for name in ["host_pkt", "switch_pkt_ar", "host_pkt_ar", "ofan"]:
-        (inc, res), us = C.timed(
-            lambda: C.loop_cct_increase(tree, wl, name, bound, cfg))
-        C.emit(f"fig12_{name}", us, cct_increase_pct=round(inc, 2),
-               rtx=res.retransmissions)
-        out[name] = inc
+    for r in recs:
+        inc = 100.0 * (r["cct"] / bound - 1.0)
+        C.emit(f"fig12_{r['scheme']}", us[r["scheme"]],
+               cct_increase_pct=round(inc, 2), rtx=r["retransmissions"])
+        out[r["scheme"]] = inc
     return out
 
 
 def fig13(scale: C.Scale):
-    """MSwift CCA, short vs long messages (paper: 1 MB and 16 MB)."""
-    tree = FatTree(scale.k)
+    """MSwift CCA, short vs long messages (paper: 1 MB and 16 MB): ONE
+    campaign with the message size as a grid axis."""
+    ms = (scale.perm_msg, scale.perm_msg * 4)
+    loads = {m: sweep.WorkloadSpec("permutation", m, rng_seed=1) for m in ms}
+    store = sweep.ResultStore(None)
+    recs, _ = sweep.run_campaign(sweep.Campaign(
+        name="fig13", schemes=("host_pkt", "switch_pkt_ar", "ofan"),
+        loads=tuple(loads.values()), trees=(scale.k,), seeds=(0,),
+        engine="loop", max_slots=scale.max_slots,
+        loop_opts=(("cca", "mswift"), ("loss", "sack"),
+                   ("sw_target_slots", 120.0))), store=store)
+    us = _us_by(store, lambda b: (b.load.msg_packets, b.scheme))
+    by_label = {loads[m].label(): m for m in ms}
     out = {}
-    for m in [scale.perm_msg, scale.perm_msg * 4]:
-        wl = workloads.permutation(tree, m, np.random.default_rng(1))
-        bound = C.perm_bound_slots(m)
-        cfg = loopsim.LoopConfig(cca="mswift", loss="sack",
-                                 max_slots=scale.max_slots,
-                                 sw_target_slots=120.0)
-        for name in ["host_pkt", "switch_pkt_ar", "ofan"]:
-            (inc, res), us = C.timed(
-                lambda: C.loop_cct_increase(tree, wl, name, bound, cfg))
-            C.emit(f"fig13_m{m}_{name}", us, cct_increase_pct=round(inc, 2),
-                   mean_cwnd=round(res.mean_cwnd, 1))
-            out[(m, name)] = inc
+    for r in recs:
+        m = by_label[r["workload"]]
+        inc = 100.0 * (r["cct"] / C.perm_bound_slots(m) - 1.0)
+        C.emit(f"fig13_m{m}_{r['scheme']}", us[(m, r["scheme"])],
+               cct_increase_pct=round(inc, 2),
+               mean_cwnd=round(r["mean_cwnd"], 1))
+        out[(m, r["scheme"])] = inc
     return out
 
 
 def fig14(scale: C.Scale):
-    """FSDP Llama scenario: hierarchical 8-GPU-server rings, MSwift+SACK.
+    """FSDP Llama scenario: hierarchical 8-GPU-server rings, MSwift+SACK,
+    as ONE campaign over the three Llama message sizes.
 
     Packets per flow follow the paper (104 / 418 / 1570 for 7B/70B/405B at
     FP8 + 4 KB payloads); the fabric is our k=8, 128-port tree (16 servers)
     vs the paper's 1024 GPUs -- ring structure and per-flow sizes match.
     """
-    tree = FatTree(scale.k)
+    llamas = (("7B", 104), ("70B", 418), ("405B", 1570))
+    loads = {m: sweep.WorkloadSpec("fsdp_rings", m, gpus_per_server=8,
+                                   rng_seed=11) for _, m in llamas}
+    store = sweep.ResultStore(None)
+    recs, _ = sweep.run_campaign(sweep.Campaign(
+        name="fig14", schemes=("host_pkt_ar", "switch_pkt_ar", "ofan"),
+        loads=tuple(loads.values()), trees=(scale.k,), seeds=(0,),
+        engine="loop", max_slots=scale.max_slots,
+        loop_opts=(("cca", "mswift"), ("loss", "sack"),
+                   ("sw_target_slots", 120.0))), store=store)
+    us = _us_by(store, lambda b: (b.load.msg_packets, b.scheme))
+    by_label = {loads[m].label(): (llama, m) for llama, m in llamas}
     out = {}
-    for llama, m in (("7B", 104), ("70B", 418),
-                     ("405B", 1570) if scale.runs > 2 else ("405B", 1570)):
-        wl = workloads.fsdp_rings(tree, 8, m, np.random.default_rng(11))
-        bound = C.perm_bound_slots(m)
-        cfg = loopsim.LoopConfig(cca="mswift", loss="sack",
-                                 max_slots=scale.max_slots,
-                                 sw_target_slots=120.0)
-        for name in ["host_pkt_ar", "switch_pkt_ar", "ofan"]:
-            (inc, res), us = C.timed(
-                lambda: C.loop_cct_increase(tree, wl, name, bound, cfg))
-            C.emit(f"fig14_llama{llama}_{name}", us,
-                   cct_increase_pct=round(inc, 2),
-                   mean_cwnd=round(res.mean_cwnd, 1))
-            out[(llama, name)] = inc
+    for r in recs:
+        llama, m = by_label[r["workload"]]
+        inc = 100.0 * (r["cct"] / C.perm_bound_slots(m) - 1.0)
+        C.emit(f"fig14_llama{llama}_{r['scheme']}", us[(m, r["scheme"])],
+               cct_increase_pct=round(inc, 2),
+               mean_cwnd=round(r["mean_cwnd"], 1))
+        out[(llama, r["scheme"])] = inc
     return out
 
 

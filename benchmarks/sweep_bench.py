@@ -26,6 +26,12 @@ ways:
     point **per compiled shape actually present in the grid**, then
     extrapolating each shape's cold cost over its own point count.
 
+A **loop-engine sample** rides along: a host_pkt + host_dr x seeds grid on
+the slotted feedback engine, run once through the fused
+``loopsim.simulate_megabatch`` dispatch (both schemes share the 'pre/pre'
+slotted pipeline, so the planner emits ONE dispatch) and once as the serial
+per-point ``loopsim.simulate`` loop, recorded under the ``"loop"`` key.
+
 Per-point results are verified identical (exact CCT equality) between the
 megabatched and serial paths before any timing is reported.  Results are
 appended-by-overwrite to ``BENCH_sweep.json`` at the repo root so the perf
@@ -45,13 +51,14 @@ import time
 import numpy as np
 
 from repro.net.topology import FatTree
-from repro.net import fastsim
+from repro.net import fastsim, loopsim
 from repro.core import lb_schemes as lbs
 from repro import sweep
 
 from . import common as C
 
 SCHEMES = ("host_pkt", "flow_ecmp", "host_dr", "switch_pkt")
+LOOP_SCHEMES = ("host_pkt", "host_dr")   # both 'pre/pre': ONE fused dispatch
 N_SEEDS = 8
 MSGS = (64, 48)        # both land in one power-of-two packet-shape bucket
 SMOKE = os.environ.get("SWEEP_BENCH_SMOKE", "") not in ("", "0")
@@ -60,6 +67,60 @@ BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sweep.json"
 
 def _clear_compile_caches():
     fastsim._build_run.cache_clear()
+    loopsim._compiled.cache_clear()
+
+
+def _loop_sample(k: int, tree: FatTree):
+    """Loop-engine sample: a scheme x seed grid through the fused slotted
+    megabatch (one dispatch: host_pkt and host_dr share the 'pre/pre'
+    engine) vs the serial per-point ``loopsim.simulate`` loop, verified
+    exactly equal before timing is reported."""
+    seeds = tuple(range(2 if SMOKE else 4))
+    load = sweep.WorkloadSpec("permutation", 12 if SMOKE else 48, rng_seed=1)
+    campaign = sweep.Campaign(
+        name="sweep_bench_loop", schemes=LOOP_SCHEMES, loads=(load,),
+        trees=(k,), seeds=seeds, engine="loop", max_slots=20000,
+        loop_opts=(("loss", "sack"),))
+    p = sweep.plan(campaign)
+
+    _clear_compile_caches()
+    t0 = time.perf_counter()
+    records, _ = sweep.run_campaign(campaign)
+    mega_s = time.perf_counter() - t0
+
+    _clear_compile_caches()
+    wl = sweep.build_workload(tree, load)
+    cfg = campaign.loop_config()
+    t0 = time.perf_counter()
+    serial = {(nm, s): loopsim.simulate(tree, wl, lbs.by_name(nm), cfg,
+                                        seed=s).cct_slots
+              for nm in LOOP_SCHEMES for s in seeds}
+    serial_s = time.perf_counter() - t0
+
+    batched = {(r["scheme"], r["seed"]): r["cct"] for r in records}
+    mismatches = [key for key in serial if serial[key] != batched[key]]
+    assert not mismatches, f"loop megabatch CCTs diverge: {mismatches}"
+
+    # Isolated-job pattern: every grid point recompiles the slotted engine
+    # (one cold point sampled, extrapolated over the grid).
+    _clear_compile_caches()
+    t0 = time.perf_counter()
+    loopsim.simulate(tree, wl, lbs.by_name(LOOP_SCHEMES[0]), cfg,
+                     seed=seeds[0])
+    cold_s = time.perf_counter() - t0
+    isolated_s = cold_s * campaign.n_points
+
+    return {
+        "grid": {"k": k, "msg_packets": load.msg_packets,
+                 "schemes": list(LOOP_SCHEMES), "n_seeds": len(seeds),
+                 "points": campaign.n_points},
+        "plan": {"n_dispatches": p.n_dispatches, "n_shapes": p.n_shapes},
+        "megabatch_s": round(mega_s, 3),
+        "serial_warm_s": round(serial_s, 3),
+        "serial_isolated_s": round(isolated_s, 3),
+        "speedup_vs_warm": round(serial_s / mega_s, 2),
+        "speedup_vs_isolated": round(isolated_s / mega_s, 2),
+    }
 
 
 def sweep_speedup(scale: C.Scale):
@@ -143,6 +204,7 @@ def sweep_speedup(scale: C.Scale):
         "speedup_vs_isolated": round(speedup, 2),
         "speedup_vs_warm": round(speedup_warm, 2),
         "speedup_vs_pr1": round(speedup_pr1, 2),
+        "loop": _loop_sample(k, tree),
     }
     BENCH_JSON.write_text(json.dumps(result, indent=2) + "\n")
     C.emit("sweep_speedup", batch_s * 1e6 / n_points,
@@ -153,5 +215,8 @@ def sweep_speedup(scale: C.Scale):
            speedup=result["speedup_vs_isolated"],
            speedup_warm=result["speedup_vs_warm"],
            speedup_pr1=result["speedup_vs_pr1"],
+           loop_speedup=result["loop"]["speedup_vs_isolated"],
+           loop_speedup_warm=result["loop"]["speedup_vs_warm"],
+           loop_dispatches=result["loop"]["plan"]["n_dispatches"],
            points=n_points, dispatches=p.n_dispatches, shapes=p.n_shapes)
     return result

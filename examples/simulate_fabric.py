@@ -11,8 +11,10 @@ fixes the topology, traffic, failure pattern and transport, and the G sweep
 is the campaign's ``g_converge`` grid axis -- the whole what-if table comes
 back from a single ``run_campaign`` call.  Adaptive host schemes need ACK
 feedback, so this campaign runs on the slotted loop engine
-(``engine='loop'``); the same spec with fast-engine schemes would execute
-as fused megabatch dispatches.
+(``engine='loop'``) -- and, like fast-engine campaigns, it executes as
+fused megabatch dispatches: every G value of a scheme rides one batched
+``lax.while_loop`` (G is a per-row operand of the compiled slotted engine),
+so the whole 4-G-by-scheme table costs one dispatch per scheme shape.
 
     PYTHONPATH=src python examples/simulate_fabric.py
 """

@@ -84,6 +84,18 @@ class LBScheme:
         return (self.edge_mode, self.agg_mode, quanta, self.buffer_pkts,
                 self.reset_wraps)
 
+    def loop_shape_key(self) -> Tuple:
+        """Hashable key of everything that determines the compiled *loop*
+        engine (``net.loopsim``): the port-choice branches and the host
+        adaptation machinery.  Schemes with equal loop shape keys -- e.g.
+        flow_ecmp, host_pkt and host_dr, which all lower to the 'pre/pre'
+        slotted pipeline -- fuse into one megabatched loop dispatch (the
+        LoopConfig static fields are the other half of that fused key)."""
+        quanta = (tuple(self.quanta) if self.edge_mode == "jsq_quant"
+                  else None)
+        return (self.edge_mode, self.agg_mode, quanta, self.adaptive_host,
+                self.name == "host_flowlet_ar")
+
 
 # ---------------------------------------------------------------------------
 # Factories — Table 2 of the paper.

@@ -1,0 +1,83 @@
+"""Shared batching helpers for the two fabric engines.
+
+``fastsim`` (layered max-plus) and ``loopsim`` (slotted feedback) batch the
+same way: per-point operands are padded host-side to shared shapes, stacked
+onto one fused batch axis, and dispatched through a single jitted (and
+optionally ``shard_map``-sharded) executable.  The shape-bucketing and
+padding primitives live here so the two engines stop growing divergent
+copies:
+
+  * :func:`pow2_bucket` -- the power-of-two shape bucket both the planner
+    and the engines use so nearby array sizes share one compile;
+  * :func:`pad_tail` -- constant-fill tail padding along one axis;
+  * :func:`pad_to_group_max` -- pad a group of same-rank arrays to their
+    element-wise maximum shape (scheme tables, OFAN rotation orders);
+  * :func:`shard_pad` -- round a stacked batch up to a multiple of the shard
+    count by replicating the tail element (results are dropped);
+  * :func:`rank_by` -- rank of each element among same-key valid elements,
+    the associative-scan arbitration primitive the slotted engine uses for
+    same-slot switch arrivals.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def pow2_bucket(n: int) -> int:
+    """Next power of two >= ``n`` (and >= 1): sizes landing in one bucket
+    share a compiled pipeline shape."""
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+def pad_tail(x: np.ndarray, axis: int, target: int, fill=0) -> np.ndarray:
+    """Pad ``x`` along ``axis`` up to ``target`` with constant ``fill``."""
+    if x.shape[axis] >= target:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - x.shape[axis])
+    return np.pad(x, widths, constant_values=fill)
+
+
+def pad_to_group_max(arrays: Sequence[np.ndarray], fill=0) -> List[np.ndarray]:
+    """Pad every array of a same-rank group to the element-wise max shape."""
+    ndim = arrays[0].ndim
+    shape = tuple(max(a.shape[ax] for a in arrays) for ax in range(ndim))
+    out = []
+    for a in arrays:
+        for ax, tgt in enumerate(shape):
+            a = pad_tail(a, ax, tgt, fill)
+        out.append(a)
+    return out
+
+
+def shard_pad(stacked: Dict, n_batch: int, n_shards: int):
+    """Round the stacked batch up to a multiple of ``n_shards`` by
+    replicating the last element (padding results are dropped by the
+    caller's span bookkeeping).  Returns the (possibly) padded pytree."""
+    b_pad = -(-n_batch // n_shards) * n_shards
+    if b_pad == n_batch:
+        return stacked
+    return jax.tree_util.tree_map(
+        lambda x: np.concatenate(
+            [x, np.repeat(x[-1:], b_pad - n_batch, axis=0)]), stacked)
+
+
+def rank_by(keys: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Rank of each element among same-key valid elements (sort-based)."""
+    m = keys.shape[0]
+    k = jnp.where(valid, keys, jnp.int32(2**30))
+    order = jnp.argsort(k, stable=True)
+    ks = k[order]
+    idx = jnp.arange(m, dtype=jnp.float32)
+    flag = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+    start = jax.lax.associative_scan(
+        lambda a, b: (jnp.where(b[1], b[0], jnp.maximum(a[0], b[0])),
+                      a[1] | b[1]),
+        (jnp.where(flag, idx, -1.0), flag))[0]
+    rank_sorted = (idx - start).astype(jnp.int32)
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(m))
+    return jnp.where(valid, rank_sorted[inv], 0)

@@ -53,6 +53,7 @@ import jax.numpy as jnp
 from .topology import (FatTree, LinkState, N_LAYERS, LAYER_NAMES,
                        UP_E, UP_A, DN_C, DN_A, DN_E)
 from .workloads import Workload
+from ._batching import pad_tail as _pad_tail, pad_to_group_max, shard_pad
 from ..core.lb_schemes import LBScheme, precompute_host_choices
 from ..core import ofan as ofan_mod
 
@@ -518,14 +519,6 @@ _PKT_KEYS = ("p1", "e1", "p2", "e2", "dst", "inter_pod", "leaves_edge",
              "t_rel", "tie", "a_pre", "c_pre", "rand_a", "rand_c")
 
 
-def _pad_tail(x: np.ndarray, axis: int, target: int, fill=0) -> np.ndarray:
-    if x.shape[axis] >= target:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, target - x.shape[axis])
-    return np.pad(x, widths, constant_values=fill)
-
-
 def _pipeline_identity(plan: SimPlan) -> Tuple:
     """Everything two plans must agree on to share one megabatched dispatch
     (shapes of per-packet arrays and JSQ grids are padded; this is the rest)."""
@@ -593,14 +586,9 @@ def simulate_megabatch(items, *, prop_slots: float = 12.0,
     # per-position to the group-wide maximum shape; padded entries are only
     # ever indexed by inert packets, whose outputs are discarded.
     for key in ("te", "ta"):
-        n_tbl = len(elems[0][key])
-        for j in range(n_tbl):
-            shape = tuple(max(d[key][j].shape[ax] for d in elems)
-                          for ax in range(elems[0][key][j].ndim))
-            for d in elems:
-                t = d[key][j]
-                for ax, tgt in enumerate(shape):
-                    t = _pad_tail(t, ax, tgt)
+        for j in range(len(elems[0][key])):
+            padded = pad_to_group_max([d[key][j] for d in elems])
+            for d, t in zip(elems, padded):
                 d[key] = d[key][:j] + (t,) + d[key][j + 1:]
 
     stacked = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *elems)
@@ -609,11 +597,7 @@ def simulate_megabatch(items, *, prop_slots: float = 12.0,
     if n_shards == "auto":
         n_shards = max(1, min(len(jax.devices()), n_batch))
     n_shards = int(n_shards)
-    b_pad = -(-n_batch // n_shards) * n_shards
-    if b_pad > n_batch:     # replicate the tail element; results are dropped
-        stacked = jax.tree_util.tree_map(
-            lambda x: np.concatenate(
-                [x, np.repeat(x[-1:], b_pad - n_batch, axis=0)]), stacked)
+    stacked = shard_pad(stacked, n_batch, n_shards)
 
     run = plans[0].build_run("mega", pad_e=pad_e_m, pad_a=pad_a_m,
                              n_shards=n_shards)

@@ -28,6 +28,27 @@ valid paths.  Host-adaptive REPS additionally avoids dead paths *before*
 convergence because labels that black-hole never return ACKs and hence are
 never recycled into the pool -- the paper's key failure-resilience mechanism.
 
+Dispatch granularities (mirroring ``fastsim``):
+
+  * :func:`simulate` -- one (tree, workload, scheme, cfg, links, G) point,
+    one seed;
+  * :func:`simulate_batch` -- one point, many seeds, vmapped into a single
+    jitted dispatch;
+  * :func:`simulate_megabatch` -- many points sharing a pipeline identity
+    fused onto one batch axis (scheme tables, DR/OFAN state, SACK
+    scoreboards, MSwift cwnd state and buffer occupancy are all vmappable
+    operands), optionally ``shard_map``-sharded across devices.
+
+All three are bitwise-identical per point.  Batched variants run ONE
+``lax.while_loop`` whose termination is ``jnp.all`` over per-row done flags
+(the vmap batching rule for ``while_loop``): rows that finish early get
+their slot updates masked out, so padding and co-batched slower rows never
+perturb a finished row's state.  Shape padding (packet/flow axes to the
+planner's power-of-two buckets, ``host_flows`` columns, OFAN order widths)
+is bitwise-safe: pad flows have ``fsize = 0`` and therefore never become
+sendable, pad packets are never referenced by any live flow, and padded
+``host_flows`` slots rank below every real flow in the host round-robin.
+
 Documented approximations (vs. an event-driven byte-level simulator):
   * ACK return time is constant (no ACK queueing);
   * the SACK sender picks retransmit sequence numbers from the receiver
@@ -48,6 +69,7 @@ import jax.numpy as jnp
 
 from .topology import FatTree, LinkState
 from .workloads import Workload
+from ._batching import pad_tail, pad_to_group_max, rank_by, shard_pad
 from ..core.lb_schemes import LBScheme, precompute_host_choices
 from ..core import ofan as ofan_mod
 
@@ -92,6 +114,19 @@ class LoopConfig:
     sw_max_cwnd: float = 384.0
 
 
+def static_config(cfg: LoopConfig) -> LoopConfig:
+    """The compile-relevant normalization of a LoopConfig.
+
+    ``rho`` and ``max_slots`` ride as per-row *operands* in the jitted
+    engine (so an rho_max axis or differing slot budgets share one
+    executable); every other field is baked into the compiled pipeline --
+    either through shapes (``buffer_pkts``, ``prop_slots``, ``ack_delay``)
+    or through Python branches (``cca``, ``loss``).  Two points whose
+    ``static_config`` are equal can fuse into one megabatch dispatch.
+    """
+    return dataclasses.replace(cfg, rho=0.0, max_slots=0)
+
+
 @dataclasses.dataclass(frozen=True)
 class _Static:
     n: int; h: int; mid: int; F: int; P: int; Fh: int
@@ -100,20 +135,39 @@ class _Static:
     quanta: Optional[Tuple[float, ...]]
     adaptive_host: bool
     plb: bool
-    cfg: LoopConfig
+    cfg: LoopConfig                 # normalized via static_config()
 
 
-def simulate(tree: FatTree, wl: Workload, scheme: LBScheme,
-             cfg: LoopConfig = LoopConfig(), seed: int = 0,
-             links: Optional[LinkState] = None,
-             g_converge: Optional[int] = None) -> LoopSimResult:
-    """Run one collective on the slotted engine.
+@dataclasses.dataclass
+class LoopPlan:
+    """Seed-independent preparation of one (tree, workload, scheme, cfg,
+    links, g_converge) simulation point.
 
-    ``links``: failed-link state (None = all up).  ``g_converge``: slot at
-    which routing state converges; None => G = infinity (never converges).
+    Splitting this out of :func:`simulate` is what makes seed replication
+    and point fusion batchable: everything here is identical across seeds,
+    while :func:`_draw_seed_inputs` produces the per-seed operands that
+    become the leading ``vmap`` axis in :func:`simulate_batch` /
+    :func:`simulate_megabatch`.
     """
+    tree: FatTree
+    wl: Workload
+    scheme: LBScheme
+    cfg: LoopConfig
+    links: LinkState
+    any_fail: bool
+    pv: Optional[np.ndarray]
+    fsrc: np.ndarray
+    fdst: np.ndarray
+    static: _Static
+    tables: dict
+
+
+def _prepare(tree: FatTree, wl: Workload, scheme: LBScheme,
+             cfg: LoopConfig = LoopConfig(),
+             links: Optional[LinkState] = None,
+             g_converge: Optional[int] = None) -> LoopPlan:
+    """Host-side precomputation shared by every seed of a simulation point."""
     h = tree.half
-    rng = np.random.default_rng(seed)
     n = tree.n_hosts
     P = wl.n_packets
     F = wl.n_flows
@@ -197,29 +251,18 @@ def simulate(tree: FatTree, wl: Workload, scheme: LBScheme,
     e_dead = ~valid_e
     a_dead = ~valid_a
 
-    pre_kw = dict(tree=tree, flow=wl.flow, seq=wl.seq, flow_src=fsrc,
-                  flow_dst=fdst, rng=rng)
-    a_stale = c_stale = a_conv = c_conv = None
+    # Path-validity matrices (seed-independent, rng-free): consumed by the
+    # per-seed host-choice precompute and the REPS/PLB valid-label lists.
     pv = None
-    if scheme.edge_mode == "pre":
-        a_stale, c_stale = precompute_host_choices(scheme, path_valid=None,
-                                                   **pre_kw)
-        if any_fail:
-            pv = np.stack([links.path_matrix(int(s_), int(d_))
-                           for s_, d_ in zip(fsrc, fdst)])
-            a_conv, c_conv = precompute_host_choices(scheme, path_valid=pv,
-                                                     **pre_kw)
-        else:
-            a_conv, c_conv = a_stale, c_stale
+    if any_fail and (scheme.edge_mode == "pre" or scheme.adaptive_host):
+        pv = np.stack([links.path_matrix(int(s_), int(d_))
+                       for s_, d_ in zip(fsrc, fdst)])
 
     # Valid-path list per flow: post-convergence the W-ECMP rehash maps any
     # flow label onto an alive path (paper §5.2).  Used by REPS/PLB labels.
     f_vpaths = np.tile(np.arange(h * h, dtype=np.int32), (F, 1))
     f_vcnt = np.full(F, h * h, dtype=np.int32)
     if any_fail and scheme.adaptive_host:
-        if pv is None:
-            pv = np.stack([links.path_matrix(int(s_), int(d_))
-                           for s_, d_ in zip(fsrc, fdst)])
         for fi in range(F):
             cand = np.flatnonzero(pv[fi].reshape(-1))
             if len(cand) == 0:
@@ -228,26 +271,15 @@ def simulate(tree: FatTree, wl: Workload, scheme: LBScheme,
             f_vpaths[fi] = np.tile(cand, reps)[:h * h]
             f_vcnt[fi] = len(cand)
 
-    rand_pool = rng.integers(0, h * h, size=65536).astype(np.int32)
-
-    ofan_stale = ofan_conv = None
-    rr_starts_e = rng.integers(0, h, tree.n_edge_switches).astype(np.int32)
-    rr_starts_a = rng.integers(0, h, tree.n_agg_switches).astype(np.int32)
-    if scheme.edge_mode == "ofan":
-        ofan_stale = ofan_mod.build_tables(tree, rng, links=None)
-        ofan_conv = (ofan_mod.build_tables(tree, rng, links=links)
-                     if any_fail else ofan_stale)
-
     static = _Static(
         n=n, h=h, mid=mid, F=F, P=P, Fh=Fh,
-        n_edges=tree.n_edge_switches, n_aggs=tree.n_agg_switches,
-        n_pods=tree.n_pods,
+        n_edges=n_edges, n_aggs=n_aggs, n_pods=tree.n_pods,
         edge_mode=scheme.edge_mode, agg_mode=scheme.agg_mode,
         quanta=(tuple(scheme.quanta) if scheme.edge_mode == "jsq_quant"
                 else None),
         adaptive_host=scheme.adaptive_host,
         plb=scheme.name == "host_flowlet_ar",
-        cfg=cfg)
+        cfg=static_config(cfg))
 
     tables = dict(
         fsrc=fsrc, fdst=fdst, fsize=fsize, pkt_base=pkt_base,
@@ -256,9 +288,48 @@ def simulate(tree: FatTree, wl: Workload, scheme: LBScheme,
         alive=alive, G=G,
         e_ports=e_ports, e_pcnt=e_pcnt, a_ports=a_ports, a_pcnt=a_pcnt,
         e_dead=e_dead, a_dead=a_dead,
+        f_vpaths=f_vpaths, f_vcnt=f_vcnt,
+        rho=np.float32(cfg.rho), max_slots=np.int32(cfg.max_slots),
+    )
+    return LoopPlan(tree=tree, wl=wl, scheme=scheme, cfg=cfg, links=links,
+                    any_fail=any_fail, pv=pv, fsrc=fsrc, fdst=fdst,
+                    static=static, tables=tables)
+
+
+def _draw_seed_inputs(plan: LoopPlan, seed: int) -> dict:
+    """Per-seed randomness, drawn in the exact order the pre-batching engine
+    used so results stay bit-identical run-to-run and serial-to-batched."""
+    tree, wl, scheme = plan.tree, plan.wl, plan.scheme
+    h = tree.half
+    P = wl.n_packets
+    rng = np.random.default_rng(seed)
+
+    a_stale = c_stale = a_conv = c_conv = None
+    if scheme.edge_mode == "pre":
+        pre_kw = dict(tree=tree, flow=wl.flow, seq=wl.seq, flow_src=plan.fsrc,
+                      flow_dst=plan.fdst, rng=rng)
+        a_stale, c_stale = precompute_host_choices(scheme, path_valid=None,
+                                                   **pre_kw)
+        if plan.any_fail:
+            a_conv, c_conv = precompute_host_choices(scheme,
+                                                     path_valid=plan.pv,
+                                                     **pre_kw)
+        else:
+            a_conv, c_conv = a_stale, c_stale
+
+    rand_pool = rng.integers(0, h * h, size=65536).astype(np.int32)
+
+    ofan_stale = ofan_conv = None
+    rr_starts_e = rng.integers(0, h, tree.n_edge_switches).astype(np.int32)
+    rr_starts_a = rng.integers(0, h, tree.n_agg_switches).astype(np.int32)
+    if scheme.edge_mode == "ofan":
+        ofan_stale = ofan_mod.build_tables(tree, rng, links=None)
+        ofan_conv = (ofan_mod.build_tables(tree, rng, links=plan.links)
+                     if plan.any_fail else ofan_stale)
+
+    return dict(
         a_stale=_z(a_stale, P), c_stale=_z(c_stale, P),
         a_conv=_z(a_conv, P), c_conv=_z(c_conv, P),
-        f_vpaths=f_vpaths, f_vcnt=f_vcnt,
         rand_pool=rand_pool,
         rr_starts_e=rr_starts_e, rr_starts_a=rr_starts_a,
         ofan_e_orders=_tbl(ofan_stale, ofan_conv, "edge_orders"),
@@ -269,14 +340,18 @@ def simulate(tree: FatTree, wl: Workload, scheme: LBScheme,
         ofan_a_len=_tbl(ofan_stale, ofan_conv, "agg_len"),
         seed=np.int64(seed),
     )
-    out = _run(static, tables)
-    out = jax.tree_util.tree_map(np.asarray, out)
 
-    comp = out["flow_complete"]
-    data_done = out["f_data_done"]
+
+def _postprocess(out: dict, cfg: LoopConfig, n_packets: int,
+                 n_flows: int) -> LoopSimResult:
+    """Assemble a LoopSimResult from one (unbatched) engine output tree,
+    slicing off any shape-bucketing padding."""
+    comp = out["flow_complete"][:n_flows]
+    data_done = out["f_data_done"][:n_flows]
+    f_cwnd = np.asarray(out["f_cwnd"][:n_flows], np.float32)
     finished = bool((comp >= 0).all())
     return LoopSimResult(
-        delivered_slot=out["delivered_slot"],
+        delivered_slot=out["delivered_slot"][:n_packets],
         flow_complete_slot=comp,
         flow_data_done_slot=data_done,
         cct_slots=float(data_done.max()) if (data_done >= 0).all()
@@ -287,8 +362,158 @@ def simulate(tree: FatTree, wl: Workload, scheme: LBScheme,
         max_queue=int(out["max_q"]),
         avg_queue=float(out["sum_q"]) / max(float(out["enq_events"]), 1.0),
         finished=finished,
-        mean_cwnd=float(out["mean_cwnd"]),
+        mean_cwnd=float(f_cwnd.mean()) if n_flows else 0.0,
     )
+
+
+def simulate(tree: FatTree, wl: Workload, scheme: LBScheme,
+             cfg: LoopConfig = LoopConfig(), seed: int = 0,
+             links: Optional[LinkState] = None,
+             g_converge: Optional[int] = None) -> LoopSimResult:
+    """Run one collective on the slotted engine.
+
+    ``links``: failed-link state (None = all up).  ``g_converge``: slot at
+    which routing state converges; None => G = infinity (never converges).
+    """
+    plan = _prepare(tree, wl, scheme, cfg, links, g_converge)
+    tables = {**plan.tables, **_draw_seed_inputs(plan, seed)}
+    out = jax.tree_util.tree_map(np.asarray, _run(plan.static, tables))
+    return _postprocess(out, cfg, wl.n_packets, wl.n_flows)
+
+
+def simulate_batch(tree: FatTree, wl: Workload, scheme: LBScheme,
+                   seeds, cfg: LoopConfig = LoopConfig(),
+                   links: Optional[LinkState] = None,
+                   g_converge: Optional[int] = None) -> list:
+    """Run one simulation point for many seeds as a single vmapped dispatch.
+
+    Per-seed randomness (host labels, spray entropy, RR starts, OFAN
+    rotation orders) is drawn host-side exactly as :func:`simulate` draws it
+    and stacked onto a leading batch axis; seed-independent operands are
+    broadcast.  The fused ``while_loop`` steps until every row's flows have
+    completed (or hit ``max_slots``); finished rows freeze.  Results are
+    bitwise-identical, per seed, to serial :func:`simulate` calls.
+    """
+    seeds = list(seeds)
+    if not seeds:
+        return []
+    plan = _prepare(tree, wl, scheme, cfg, links, g_converge)
+    per_seed = [_draw_seed_inputs(plan, s) for s in seeds]
+    stacked = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *per_seed)
+    out = jax.tree_util.tree_map(
+        np.asarray, _run(plan.static, {**plan.tables, **stacked},
+                         batch="seed"))
+    return [_postprocess(jax.tree_util.tree_map(lambda x: x[i], out),
+                         cfg, wl.n_packets, wl.n_flows)
+            for i in range(len(seeds))]
+
+
+def _pipeline_identity(plan: LoopPlan) -> _Static:
+    """Everything two plans must agree on to share one megabatched dispatch
+    (packet/flow/host-flow axes are padded; this is the rest: tree dims,
+    scheme modes, and the static LoopConfig fields)."""
+    return dataclasses.replace(plan.static, P=0, F=0, Fh=0)
+
+
+# Seed-independent per-point operands that carry a padded flow/packet axis.
+_F_PAD0 = ("fsrc", "fdst", "fsize", "fp1", "fe1", "fp2", "fe2")
+
+
+def simulate_megabatch(items, *, npk_pad: Optional[int] = None,
+                       n_shards=1) -> list:
+    """Run many loop-engine simulation points as ONE fused, jitted dispatch.
+
+    ``items`` is a sequence of ``(tree, wl, scheme, cfg, seeds, links,
+    g_converge)`` tuples whose points lower to the same compiled engine
+    (equal :func:`_pipeline_identity`: tree dims, scheme modes, and static
+    LoopConfig fields -- ``rho``, ``max_slots`` and ``g_converge`` ride as
+    per-row operands).  Per-seed inputs are drawn host-side exactly as
+    :func:`simulate` draws them, padded to shared shapes (packet arrays up
+    to ``npk_pad``, flow arrays and ``host_flows`` columns to group-wide
+    maxima, OFAN order widths to the group maximum; pad flows have size 0
+    and are inert), stacked onto one fused (scheme x load x failure x seed)
+    batch axis, and executed by a single vmapped -- and, with ``n_shards >
+    1`` (or ``"auto"``), ``shard_map``-sharded -- dispatch whose
+    ``while_loop`` terminates once every row is done.
+
+    Returns one list of :class:`LoopSimResult` per item (aligned with its
+    ``seeds``); every result is bitwise-identical to the standalone
+    :func:`simulate` call with the same arguments (tested in
+    ``tests/test_loopsim.py``).
+    """
+    items = [(t, w, s, c, list(seeds), l, g)
+             for (t, w, s, c, seeds, l, g) in items]
+    if not items or all(not it[4] for it in items):
+        return [[] for _ in items]
+
+    plans = [_prepare(t, w, s, c, l, g)
+             for (t, w, s, c, _, l, g) in items]
+    idents = {_pipeline_identity(p) for p in plans}
+    if len(idents) > 1:
+        raise ValueError(f"megabatch items span {len(idents)} pipeline "
+                         f"identities; group by tree size, scheme loop "
+                         f"shape and static LoopConfig first")
+
+    P_max = max(p.wl.n_packets for p in plans)
+    npk_pad = P_max if npk_pad is None else max(int(npk_pad), P_max)
+    F_pad = max(p.wl.n_flows for p in plans)
+    Fh_pad = max(p.static.Fh for p in plans)
+
+    elems: list = []          # merged (static + per-seed) dicts, padded
+    spans: list = []          # (item index, seed) per fused-axis element
+    for i, ((tree, wl, scheme, cfg, seeds, links, g), plan) in enumerate(
+            zip(items, plans)):
+        st = dict(plan.tables)
+        # Flow-axis padding: pad flows have fsize 0, so they complete at the
+        # first slot, never send, and never reference a packet; pkt_base is
+        # edge-padded so searchsorted still lands real packets on real flows.
+        st["pkt_base"] = pad_tail(st["pkt_base"], 0, F_pad + 1,
+                                  fill=int(st["pkt_base"][-1]))
+        for k in _F_PAD0:
+            st[k] = pad_tail(st[k], 0, F_pad)
+        st["f_inter"] = pad_tail(st["f_inter"], 0, F_pad, fill=False)
+        st["f_leaves"] = pad_tail(st["f_leaves"], 0, F_pad, fill=False)
+        st["f_vpaths"] = pad_tail(st["f_vpaths"], 0, F_pad)
+        st["f_vcnt"] = pad_tail(st["f_vcnt"], 0, F_pad, fill=1)
+        # Padded host_flows columns hold -1 and rank below every real flow
+        # in the host round-robin, so picks (and hence all sends) match the
+        # unpadded point exactly.
+        st["host_flows"] = pad_tail(st["host_flows"], 1, Fh_pad, fill=-1)
+        for s in seeds:
+            d = {**st, **_draw_seed_inputs(plan, s)}
+            for k in ("a_stale", "c_stale", "a_conv", "c_conv"):
+                d[k] = pad_tail(d[k], 0, npk_pad)
+            elems.append(d)
+            spans.append((i, s))
+
+    # OFAN rotation orders are padded to the group-wide width; entries past
+    # a row's own table length are never indexed (pointers wrap modulo the
+    # per-group length operand).
+    for key in ("ofan_e_orders", "ofan_a_orders"):
+        for d, arr in zip(elems, pad_to_group_max([d[key] for d in elems])):
+            d[key] = arr
+
+    stacked = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *elems)
+
+    n_batch = len(elems)
+    if n_shards == "auto":
+        n_shards = max(1, min(len(jax.devices()), n_batch))
+    n_shards = int(n_shards)
+    stacked = shard_pad(stacked, n_batch, n_shards)
+
+    static = dataclasses.replace(plans[0].static, P=npk_pad, F=F_pad,
+                                 Fh=Fh_pad)
+    out = jax.tree_util.tree_map(
+        np.asarray, _run(static, stacked, batch="mega", n_shards=n_shards))
+
+    results = [dict() for _ in items]
+    for b, (i, s) in enumerate(spans):
+        out_b = jax.tree_util.tree_map(lambda x: x[b], out)
+        results[i][s] = _postprocess(out_b, items[i][3],
+                                     plans[i].wl.n_packets,
+                                     plans[i].wl.n_flows)
+    return [[results[i][s] for s in seeds]
+            for i, (_, _, _, _, seeds, _, _) in enumerate(items)]
 
 
 def _z(x, P):
@@ -309,38 +534,53 @@ def _tbl(stale, conv, attr):
     return np.stack([sarr, carr])
 
 
+# Positional order of the engine arguments; the first block is
+# seed-independent (vmap in_axes=None in the seed-batched variant), the
+# rest carry the seed batch axis.  In the megabatched variant *every*
+# argument carries the fused (scheme x load x failure x seed) axis.
+_STATIC_KEYS = ("fsrc", "fdst", "fsize", "pkt_base", "fp1", "fe1", "fp2",
+                "fe2", "f_inter", "f_leaves", "host_flows", "alive", "G",
+                "e_ports", "e_pcnt", "a_ports", "a_pcnt", "e_dead", "a_dead",
+                "f_vpaths", "f_vcnt", "rho", "max_slots")
+_SEED_KEYS = ("a_stale", "c_stale", "a_conv", "c_conv", "rand_pool",
+              "rr_starts_e", "rr_starts_a",
+              "ofan_e_orders", "ofan_e_starts", "ofan_e_len",
+              "ofan_a_orders", "ofan_a_starts", "ofan_a_len", "seed")
+_ARG_ORDER = _STATIC_KEYS + _SEED_KEYS
+
+
 @functools.lru_cache(maxsize=32)
-def _compiled(static: _Static, shapes: tuple):
-    return jax.jit(functools.partial(_engine, static))
+def _compiled(static: _Static, shapes: tuple, batch, n_shards: int):
+    def fn(*args):
+        return _engine(static, **dict(zip(_ARG_ORDER, args)))
+    if batch == "mega":
+        f = jax.vmap(fn, in_axes=(0,) * len(_ARG_ORDER))
+        if n_shards > 1:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import Mesh, PartitionSpec
+            mesh = Mesh(np.asarray(jax.devices()[:n_shards]), ("b",))
+            # check_rep=False: shard_map has no replication rule for the
+            # while_loop primitive; every operand/output is sharded anyway.
+            f = shard_map(f, mesh=mesh, in_specs=PartitionSpec("b"),
+                          out_specs=PartitionSpec("b"), check_rep=False)
+        return jax.jit(f)
+    if batch == "seed":
+        in_axes = tuple(0 if k in _SEED_KEYS else None for k in _ARG_ORDER)
+        return jax.jit(jax.vmap(fn, in_axes=in_axes))
+    return jax.jit(fn)
 
 
-def _run(static: _Static, tables: dict):
+def _run(static: _Static, tables: dict, batch=False, n_shards: int = 1):
     shapes = tuple(sorted((k, np.asarray(v).shape) for k, v in tables.items()))
-    fn = _compiled(static, shapes)
-    return fn(**{k: jnp.asarray(v) for k, v in tables.items()})
-
-
-def _rank_by(keys, valid):
-    """Rank of each element among same-key valid elements (sort-based)."""
-    m = keys.shape[0]
-    k = jnp.where(valid, keys, jnp.int32(2**30))
-    order = jnp.argsort(k, stable=True)
-    ks = k[order]
-    idx = jnp.arange(m, dtype=jnp.float32)
-    flag = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
-    start = jax.lax.associative_scan(
-        lambda a, b: (jnp.where(b[1], b[0], jnp.maximum(a[0], b[0])),
-                      a[1] | b[1]),
-        (jnp.where(flag, idx, -1.0), flag))[0]
-    rank_sorted = (idx - start).astype(INT)
-    inv = jnp.zeros_like(order).at[order].set(jnp.arange(m))
-    return jnp.where(valid, rank_sorted[inv], 0)
+    fn = _compiled(static, shapes, batch, int(n_shards))
+    return fn(*(jnp.asarray(tables[k]) for k in _ARG_ORDER))
 
 
 def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
             f_inter, f_leaves, host_flows, alive, G,
             e_ports, e_pcnt, a_ports, a_pcnt, e_dead, a_dead,
-            a_stale, c_stale, a_conv, c_conv, f_vpaths, f_vcnt, rand_pool,
+            f_vpaths, f_vcnt, rho, max_slots,
+            a_stale, c_stale, a_conv, c_conv, rand_pool,
             rr_starts_e, rr_starts_a,
             ofan_e_orders, ofan_e_starts, ofan_e_len,
             ofan_a_orders, ofan_a_starts, ofan_a_len, seed):
@@ -496,7 +736,7 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
         prio = jnp.where(hf_ok, prio, Fh + 1)
         pick = jnp.argmin(prio, axis=1)
         can_send = jnp.take_along_axis(hf_ok, pick[:, None], axis=1)[:, 0]
-        st["h_credit"] = jnp.minimum(st["h_credit"] + jnp.float32(cfg.rho), 4.0)
+        st["h_credit"] = jnp.minimum(st["h_credit"] + rho, 4.0)
         debt_ok = st["h_ackdebt"] < 1.0
         st["h_ackdebt"] = jnp.where(~debt_ok, st["h_ackdebt"] - 1.0,
                                     st["h_ackdebt"])
@@ -583,7 +823,7 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
             gp = sw * s.n_edges + de
             if s.edge_mode == "ofan":
                 gid = gp
-                rk = _rank_by(gid, north)
+                rk = rank_by(gid, north)
                 ctr = st["ptr_e"][gid] + rk
                 L = jnp.maximum(ofan_e_len[ci, gid], 1)
                 a_new = ofan_e_orders[
@@ -592,7 +832,7 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
                     jnp.where(north, gid, st["ptr_e"].shape[0])].add(
                     1, mode="drop")
             else:
-                rk = _rank_by(sw, north)
+                rk = rank_by(sw, north)
                 ctr = st["ptr_e"][sw] + rk
                 # pre-convergence: all ports; post: W-ECMP-valid for dest
                 naive = ((rr_starts_e[sw] + ctr) % h).astype(INT)
@@ -654,7 +894,7 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
         elif s.agg_mode in ("rr", "rr_reset", "ofan"):
             if s.agg_mode == "ofan":
                 gid = gpa
-                rk = _rank_by(gid, to_agg)
+                rk = rank_by(gid, to_agg)
                 ctr = st["ptr_a"][gid] + rk
                 L = jnp.maximum(ofan_a_len[ci, gid], 1)
                 c_fin = ofan_a_orders[
@@ -663,7 +903,7 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
                     jnp.where(to_agg, gid, st["ptr_a"].shape[0])].add(
                     1, mode="drop")
             else:
-                rk = _rank_by(asw, to_agg)
+                rk = rank_by(asw, to_agg)
                 ctr = st["ptr_a"][asw] + rk
                 naive = ((rr_starts_a[asw] + ctr) % h).astype(INT)
                 pcn = jnp.maximum(a_pcnt[gpa], 1)
@@ -693,7 +933,7 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
         dead = ~alive[aqc]
         enq_try = avalid & ~dead
         st["drops"] = st["drops"] + (avalid & dead).sum()
-        rkq = _rank_by(aq, enq_try)
+        rkq = rank_by(aq, enq_try)
         room = st["qcnt"][aqc] + rkq < CAP
         do_enq = enq_try & room
         st["drops"] = st["drops"] + (enq_try & ~room).sum()
@@ -809,7 +1049,7 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
         return st
 
     def cond(st):
-        return (st["f_complete"] < 0).any() & (st["t"] < cfg.max_slots)
+        return (st["f_complete"] < 0).any() & (st["t"] < max_slots)
 
     final = jax.lax.while_loop(cond, step, st0)
     return {
@@ -821,5 +1061,5 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
         "max_q": final["max_q"],
         "sum_q": final["sum_q"],
         "enq_events": final["enq_events"],
-        "mean_cwnd": jnp.mean(final["f_cwnd"]),
+        "f_cwnd": final["f_cwnd"],
     }

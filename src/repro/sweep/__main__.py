@@ -87,9 +87,8 @@ def cmd_plan(args) -> int:
     p = plan(c)
     print(p.describe())
     for i, mega in enumerate(p.megabatches):
-        pad = (f" pad={mega.npk_pad}" if mega.engine == "fast" else "")
         print(f"dispatch {i}: engine={mega.engine} "
-              f"{mega.n_points} points{pad}")
+              f"{mega.n_points} points pad={mega.npk_pad}")
         for b in mega.members:
             fail = b.failure.label() if b.failure else "nofail"
             g = "" if b.g_converge is None else f" G={b.g_converge}"

@@ -13,11 +13,14 @@ Three-level grouping of the expanded grid:
    shape-bucketed packet padding -- nearby message sizes all stack onto one
    fused ``(scheme x load x failure x seed)`` batch axis.
 3. **Compiled shapes** -- one per distinct megabatch key, so
-   ``n_dispatches == n_compiled_shapes`` for fast-engine campaigns: every
-   compile is amortized over the whole grid slice that shares it.
+   ``n_dispatches == n_compiled_shapes``: every compile is amortized over
+   the whole grid slice that shares it.
 
-Loop-engine batches (ACK/ECN schemes) cannot fuse; each remains its own
-serial dispatch.
+Both engines fuse.  Fast-engine batches group by ``LBScheme.shape_key()``;
+loop-engine batches (ACK/ECN schemes) group by ``LBScheme.loop_shape_key()``
+plus the static ``LoopConfig`` fields (``loss``, ``cca``, ``buffer_pkts``,
+timing constants) and the power-of-two-bucketed slot budget -- the failure,
+``g_converge``, rho and seed axes all ride the fused batch axis as operands.
 """
 from __future__ import annotations
 
@@ -25,13 +28,15 @@ import dataclasses
 from typing import List, Optional, Tuple
 
 from ..core import lb_schemes as lbs
+from ..net._batching import pow2_bucket
+from ..net import loopsim
 from .spec import Campaign, FailureSpec, GridPoint, WorkloadSpec
 
 
 def bucket_packets(n: int) -> int:
     """Shape bucket for packet-array padding: next power of two.  Workloads
     whose packet counts land in one bucket share a compiled pipeline."""
-    return 1 << max(0, int(n - 1).bit_length())
+    return pow2_bucket(n)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,12 +57,15 @@ class SeedBatch:
 
     def fused_key(self, campaign: Campaign) -> Tuple:
         """Megabatch identity: everything the fused dispatch compiles over.
-        Loads/failures are *not* part of it (their per-packet arrays ride the
-        batch axis, padded to the bucketed packet count); loop-engine points
-        can't fuse and get a per-batch key."""
+        Loads/failures/g_converge are *not* part of it (their per-packet
+        arrays and convergence/rho scalars ride the batch axis, padded to
+        the bucketed packet count); loop-engine points additionally key on
+        the static LoopConfig fields and the bucketed slot budget."""
         if campaign.engine == "loop" or lbs.by_name(self.scheme).needs_feedback:
-            return ("loop", self.k, self.load, self.failure, self.scheme,
-                    self.g_converge)
+            return ("loop", self.k, bucket_packets(self.load.n_packets(self.k)),
+                    lbs.by_name(self.scheme).loop_shape_key(),
+                    loopsim.static_config(campaign.loop_config()),
+                    pow2_bucket(max(int(campaign.max_slots), 1)))
         return ("fast", self.k, bucket_packets(self.load.n_packets(self.k)),
                 lbs.by_name(self.scheme).shape_key(), campaign.backend,
                 float(campaign.prop_slots))
@@ -65,9 +73,9 @@ class SeedBatch:
 
 @dataclasses.dataclass
 class MegaBatch:
-    """One runner dispatch: either a fused fast-engine megabatch (all member
-    batches execute as a single jitted ``simulate_megabatch`` call) or a
-    single loop-engine batch."""
+    """One runner dispatch: all member batches execute as a single jitted
+    ``simulate_megabatch`` call on their engine (``fastsim`` or
+    ``loopsim``)."""
     key: Tuple
     members: List[SeedBatch]
 
@@ -78,7 +86,7 @@ class MegaBatch:
     @property
     def npk_pad(self) -> int:
         """Bucketed packet-array padding of the fused dispatch."""
-        return self.key[2] if self.engine == "fast" else 0
+        return self.key[2]
 
     @property
     def n_points(self) -> int:

@@ -8,8 +8,10 @@ workloads and failure states across batches, and executes
     jitted batch axis -- padded to the megabatch's bucketed packet shape and,
     when several devices are visible (``Campaign.shard='auto'``),
     ``shard_map``-sharded across them;
-  * loop-engine batches (and any ACK/ECN scheme) serially on the slotted
-    feedback engine, with the batch's ``g_converge`` grid-axis value.
+  * loop-engine megabatches (ACK/ECN schemes) as a single
+    ``loopsim.simulate_megabatch`` call: the scheme/load/failure/seed cells
+    of one compiled slotted engine -- plus the ``g_converge`` and rho axes,
+    which ride as per-row operands -- fuse the same way.
 
 Each grid point yields one record in the :class:`~repro.sweep.results
 .ResultStore`; per-point results are bitwise-identical to standalone
@@ -109,20 +111,22 @@ def _run_fast_mega(mega: MegaBatch, campaign: Campaign, cache: _Cache):
                                       n_shards=n_shards)
 
 
-def _run_loop_batch(batch: SeedBatch, campaign: Campaign, cache: _Cache):
-    tree = cache.tree(batch.k)
-    wl = cache.workload(batch.k, batch.load)
-    links = cache.link_state(batch.k, batch.failure)
-    scheme = lbs.by_name(batch.scheme)
-    opts = campaign.loop_options()
-    rho = opts.pop("rho", 1.0)
-    if rho == "auto":
-        rho = cache.rho_auto(batch.k, batch.load, batch.failure)
-    cfg = loopsim.LoopConfig(prop_slots=int(round(campaign.prop_slots)),
-                             rho=float(rho), **opts)
-    return [loopsim.simulate(tree, wl, scheme, cfg, seed=s, links=links,
-                             g_converge=batch.g_converge)
-            for s in batch.seeds]
+def _run_loop_mega(mega: MegaBatch, campaign: Campaign, cache: _Cache):
+    """One fused loop-engine dispatch for all member batches; rho (possibly
+    rho_max under each member's failure pattern) and g_converge are per-row
+    operands, so the whole grid slice shares one compiled engine."""
+    rho_opt = campaign.loop_options().get("rho", 1.0)
+    items = []
+    for b in mega.members:
+        rho = (cache.rho_auto(b.k, b.load, b.failure) if rho_opt == "auto"
+               else float(rho_opt))
+        items.append((cache.tree(b.k), cache.workload(b.k, b.load),
+                      lbs.by_name(b.scheme), campaign.loop_config(rho),
+                      b.seeds, cache.link_state(b.k, b.failure),
+                      b.g_converge))
+    n_shards = "auto" if campaign.shard == "auto" else 1
+    return loopsim.simulate_megabatch(items, npk_pad=mega.npk_pad,
+                                      n_shards=n_shards)
 
 
 def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,
@@ -155,8 +159,7 @@ def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,
     for mega in p.megabatches:
         tb = time.perf_counter()
         if mega.engine == "loop":
-            per_member = [_run_loop_batch(b, campaign, cache)
-                          for b in mega.members]
+            per_member = _run_loop_mega(mega, campaign, cache)
             to_record = loop_point_record
         else:
             per_member = _run_fast_mega(mega, campaign, cache)

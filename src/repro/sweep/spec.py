@@ -92,9 +92,14 @@ class Campaign:
     ACK/ECN schemes like REPS and PLB).  ``g_converge`` is a grid axis of
     routing-convergence slots for loop-engine points (None = never converge;
     fast-engine campaigns leave it at the default ``(None,)``).
-    ``loop_opts`` carries the remaining ``net.loopsim.LoopConfig`` overrides
-    plus the special key ``rho`` (sending rate; the string ``'auto'`` means
-    rho_max under the point's failure pattern, Appendix A).
+    ``max_slots`` is the loop-engine slot budget -- a first-class field: the
+    compiled engine takes it as a per-row *operand* (so differing budgets
+    share one executable; the planner's fused keys carry only its
+    power-of-two bucket), and legacy specs that carried it inside
+    ``loop_opts`` auto-migrate.  ``loop_opts``
+    carries the remaining ``net.loopsim.LoopConfig`` overrides plus the
+    special key ``rho`` (sending rate; the string ``'auto'`` means rho_max
+    under the point's failure pattern, Appendix A).
     ``shard`` controls device sharding of fused megabatch dispatches:
     ``'auto'`` splits the fused axis over all visible devices via
     ``shard_map``, ``'off'`` keeps single-device vmap.
@@ -110,6 +115,7 @@ class Campaign:
     backend: str = "auto"
     engine: str = "fast"
     shard: str = "auto"
+    max_slots: int = 200_000           # loop-engine slot budget
     loop_opts: Tuple[Tuple[str, object], ...] = ()
 
     def __post_init__(self):
@@ -124,13 +130,19 @@ class Campaign:
             raise ValueError(f"unknown engine {self.engine!r}")
         if self.shard not in ("auto", "off"):
             raise ValueError(f"unknown shard policy {self.shard!r}")
-        # Legacy spec migration: g_converge used to live in loop_opts.
+        # Legacy spec migration: g_converge and max_slots used to live in
+        # loop_opts; the spec layer is now their single source of truth.
         opts = dict(self.loop_opts)
         if "g_converge" in opts:
             g = opts.pop("g_converge")
-            object.__setattr__(self, "loop_opts", tuple(sorted(opts.items())))
             if self.g_converge == (None,):
                 object.__setattr__(self, "g_converge", (g,))
+        if "max_slots" in opts:
+            m = opts.pop("max_slots")
+            if self.max_slots == 200_000:
+                object.__setattr__(self, "max_slots", int(m))
+        if len(opts) != len(self.loop_opts):
+            object.__setattr__(self, "loop_opts", tuple(sorted(opts.items())))
 
     @property
     def n_points(self) -> int:
@@ -139,6 +151,19 @@ class Campaign:
 
     def loop_options(self) -> Dict:
         return dict(self.loop_opts)
+
+    def loop_config(self, rho: float = 1.0):
+        """The ``net.loopsim.LoopConfig`` this campaign's loop-engine points
+        run under (``rho`` is the one per-point field; 'auto' is resolved by
+        the runner).  The planner keys fused loop dispatches by its static
+        part (``loopsim.static_config``), so this is the single place the
+        spec-to-engine translation happens."""
+        from ..net import loopsim
+        opts = self.loop_options()
+        opts.pop("rho", None)
+        return loopsim.LoopConfig(prop_slots=int(round(self.prop_slots)),
+                                  rho=float(rho), max_slots=self.max_slots,
+                                  **opts)
 
     def points(self):
         """Expand the grid in a deterministic order (seeds innermost, so
@@ -221,9 +246,23 @@ def _failures(k: int = 4, seeds: Tuple[int, ...] = (0,)) -> Campaign:
         trees=(k,), seeds=seeds,
         failures=(FailureSpec(p_fail=0.08, rng_seed=42),),
         g_converge=(0,),
-        engine="loop",
-        loop_opts=(("max_slots", 20000), ("rho", "auto"),
-                   ("rto_slots", 250)))
+        engine="loop", max_slots=20000,
+        loop_opts=(("rho", "auto"), ("rto_slots", 250)))
+
+
+def _fig12(k: int = 8, seeds: Tuple[int, ...] = (0, 1)) -> Campaign:
+    """Fig. 12 SACK loss-recovery grid on the loop engine: the scheme x
+    load x seed axes run as fused megabatch dispatches (host_pkt and
+    host_dr share the 'pre/pre' slotted pipeline and fuse; adaptive and
+    switch schemes each compile their own shape)."""
+    return Campaign(
+        name="fig12",
+        schemes=("host_pkt", "host_dr", "switch_pkt_ar", "host_pkt_ar",
+                 "ofan"),
+        loads=(WorkloadSpec("permutation", 256, rng_seed=1),),
+        trees=(k,), seeds=seeds,
+        engine="loop", max_slots=60000,
+        loop_opts=(("loss", "sack"), ("sack_thresh", 32)))
 
 
 PRESETS = {
@@ -231,6 +270,7 @@ PRESETS = {
     "theory": _theory,
     "layer_balance": _layer_balance,
     "failures": _failures,
+    "fig12": _fig12,
 }
 
 

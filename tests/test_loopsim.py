@@ -126,3 +126,103 @@ def test_ack_debt_slows_bidirectional_hosts(tree):
     res = loopsim.simulate(tree, wl2, lbs.ofan(), CFG, seed=0)
     # one-way send time is 64 slots; with ack debt ~2% and pipeline ~5 hops
     assert res.cct_slots >= 64 * 1.01
+
+
+# ---------------------------------------------------------------------------
+# Batched dispatch: bitwise parity with serial simulate.
+# ---------------------------------------------------------------------------
+
+def _assert_loop_equal(res, ref):
+    np.testing.assert_array_equal(res.delivered_slot, ref.delivered_slot)
+    np.testing.assert_array_equal(res.flow_complete_slot,
+                                  ref.flow_complete_slot)
+    np.testing.assert_array_equal(res.flow_data_done_slot,
+                                  ref.flow_data_done_slot)
+    assert res.cct_slots == ref.cct_slots
+    assert res.cct_acked_slots == ref.cct_acked_slots
+    assert res.drops == ref.drops
+    assert res.retransmissions == ref.retransmissions
+    assert res.max_queue == ref.max_queue
+    assert res.avg_queue == ref.avg_queue
+    assert res.finished == ref.finished
+    assert res.mean_cwnd == ref.mean_cwnd
+
+
+_CFGS = {
+    "erasure": loopsim.LoopConfig(max_slots=4000),
+    "sack": loopsim.LoopConfig(loss="sack", sack_thresh=8, max_slots=4000),
+    "short_buffer": loopsim.LoopConfig(loss="sack", sack_thresh=8,
+                                       buffer_pkts=20, max_slots=4000),
+    "mswift": loopsim.LoopConfig(cca="mswift", loss="sack", max_slots=8000,
+                                 sw_target_slots=80.0),
+}
+
+
+@pytest.mark.parametrize("cfg_name", sorted(_CFGS))
+@pytest.mark.parametrize("scheme", ("host_pkt", "ofan"))
+def test_batch_bitwise_identical_to_serial(tree, wl, cfg_name, scheme):
+    """simulate_batch must reproduce serial simulate exactly per seed across
+    the erasure / SACK / short-buffer / MSwift paths (rows finish at
+    different slot counts; the fused while_loop masks finished rows)."""
+    cfg = _CFGS[cfg_name]
+    seeds = [0, 1, 2]
+    batch = loopsim.simulate_batch(tree, wl, lbs.by_name(scheme), seeds, cfg)
+    for s, res in zip(seeds, batch):
+        _assert_loop_equal(res, loopsim.simulate(tree, wl,
+                                                 lbs.by_name(scheme), cfg,
+                                                 seed=s))
+
+
+@pytest.mark.parametrize("cfg_name", ("sack", "mswift"))
+def test_megabatch_bitwise_identical_to_serial(tree, wl, cfg_name):
+    """One fused dispatch over two workloads with different packet AND flow
+    counts (permutation vs all-to-all: the flow axis, host_flows columns and
+    pkt_base all pad) must reproduce serial simulate exactly, per point."""
+    cfg = _CFGS[cfg_name]
+    wl_b = workloads.all_to_all(tree, 2)
+    items = [(tree, wl, lbs.host_pkt(), cfg, [0, 1], None, None),
+             (tree, wl_b, lbs.host_dr(), cfg, [0], None, None)]
+    out = loopsim.simulate_megabatch(items, npk_pad=1024)
+    for (t, w, sch, c, seeds, l, g), results in zip(items, out):
+        for s, res in zip(seeds, results):
+            assert res.delivered_slot.shape[0] == w.n_packets
+            assert res.flow_complete_slot.shape[0] == w.n_flows
+            _assert_loop_equal(res, loopsim.simulate(t, w, sch, c, seed=s))
+
+
+def test_megabatch_fuses_failure_and_g_axes_bitwise(tree, wl):
+    """Failure pattern, g_converge, rho and max_slots are per-row operands:
+    points differing only in them share one fused dispatch and stay
+    bitwise-identical to serial."""
+    links = _links_with_failures(tree, 0.08, 4)
+    cfg_a = loopsim.LoopConfig(max_slots=12000, rto_slots=300, rho=0.8)
+    cfg_b = loopsim.LoopConfig(max_slots=9000, rto_slots=300, rho=1.0)
+    items = [(tree, wl, lbs.host_pkt_ar(), cfg_a, [0], links, 0),
+             (tree, wl, lbs.host_pkt_ar(), cfg_a, [0], links, None),
+             (tree, wl, lbs.host_pkt_ar(), cfg_b, [0, 1], None, None)]
+    out = loopsim.simulate_megabatch(items)
+    for (t, w, sch, c, seeds, l, g), results in zip(items, out):
+        for s, res in zip(seeds, results):
+            _assert_loop_equal(res, loopsim.simulate(t, w, sch, c, seed=s,
+                                                     links=l, g_converge=g))
+
+
+def test_megabatch_sharded_bitwise_identical(tree, wl):
+    """shard_map over the fused axis (2 virtual devices from conftest's
+    XLA_FLAGS) must not change results; the 3-element batch also forces the
+    shard-divisibility padding path (3 -> 4)."""
+    import jax
+    assert len(jax.devices()) >= 2
+    cfg = _CFGS["sack"]
+    items = [(tree, wl, lbs.ofan(), cfg, [0, 1, 2], None, None)]
+    (results,) = loopsim.simulate_megabatch(items, n_shards="auto")
+    for s, res in zip([0, 1, 2], results):
+        _assert_loop_equal(res, loopsim.simulate(tree, wl, lbs.ofan(), cfg,
+                                                 seed=s))
+
+
+def test_megabatch_rejects_mixed_pipeline_identities(tree, wl):
+    with pytest.raises(ValueError, match="pipeline identities"):
+        loopsim.simulate_megabatch(
+            [(tree, wl, lbs.host_pkt(), _CFGS["erasure"], [0], None, None),
+             (tree, wl, lbs.host_pkt(), _CFGS["sack"], [0], None, None)])

@@ -259,6 +259,96 @@ def test_legacy_loop_opts_g_converge_migrates():
     assert c2 == c
 
 
+def test_legacy_loop_opts_max_slots_migrates():
+    """max_slots is a first-class Campaign field; legacy specs that carried
+    it inside loop_opts auto-migrate and round-trip."""
+    c = sweep.Campaign(
+        name="legacy", schemes=("host_pkt_ar",),
+        loads=(sweep.WorkloadSpec("permutation", 8),), trees=(4,),
+        engine="loop", loop_opts=(("max_slots", 123), ("rto_slots", 50)))
+    assert c.max_slots == 123
+    assert dict(c.loop_opts) == {"rto_slots": 50}
+    assert c.loop_config().max_slots == 123
+    assert c.loop_config().rto_slots == 50
+    c2 = sweep.Campaign.from_dict(json.loads(json.dumps(c.to_dict())))
+    assert c2 == c
+    # An explicit field value wins over a legacy loop_opts entry.
+    c3 = sweep.Campaign(
+        name="legacy2", schemes=("host_pkt_ar",),
+        loads=(sweep.WorkloadSpec("permutation", 8),), trees=(4,),
+        engine="loop", max_slots=777, loop_opts=(("max_slots", 123),))
+    assert c3.max_slots == 777 and dict(c3.loop_opts) == {}
+
+
+def _loop_campaign(**kw):
+    base = dict(name="loop", schemes=("host_pkt", "host_dr", "ofan"),
+                loads=(sweep.WorkloadSpec("permutation", 32,
+                                          inter_pod_only=True),),
+                trees=(4,), seeds=(0, 1), engine="loop", max_slots=4000)
+    base.update(kw)
+    return sweep.Campaign(**base)
+
+
+def test_planner_fuses_loop_schemes_into_megabatches():
+    """Loop-engine grids fuse like fast ones: host_pkt and host_dr share the
+    'pre/pre' slotted engine (ONE dispatch); ofan compiles its own shape.
+    g_converge and failure values ride as operands, not keys."""
+    c = _loop_campaign(g_converge=(0, None),
+                       failures=(None, sweep.FailureSpec(0.05, rng_seed=3)))
+    p = sweep.plan(c)
+    assert p.n_points == 3 * 2 * 2 * 2
+    assert p.n_dispatches == p.n_shapes == 2
+    fused = {frozenset(b.scheme for b in m.members) for m in p.megabatches}
+    assert frozenset({"host_pkt", "host_dr"}) in fused
+
+
+def test_planner_loop_keys_on_static_loop_config():
+    """Static LoopConfig fields split compiled shapes; rho and bucketed
+    max_slots do not."""
+    base = _loop_campaign()
+    assert sweep.plan(base).n_dispatches == 2
+    sack = _loop_campaign(loop_opts=(("loss", "sack"),))
+    k0 = sweep.plan(base).megabatches[0].key
+    k1 = sweep.plan(sack).megabatches[0].key
+    assert k0 != k1
+    rho = _loop_campaign(loop_opts=(("rho", 0.9),), max_slots=4095)
+    assert sweep.plan(rho).megabatches[0].key == k0
+
+
+def test_fig12_preset_plans_one_dispatch_per_shape():
+    """The acceptance grid: a fig12-style scheme x load x seed campaign on
+    the loop engine runs as fused dispatches, one per compiled shape."""
+    c = sweep.preset("fig12")
+    p = sweep.plan(c)
+    assert p.n_dispatches == p.n_shapes
+    # host_pkt + host_dr fuse ('pre/pre'); switch_pkt_ar, host_pkt_ar and
+    # ofan each compile their own slotted pipeline.
+    assert p.n_dispatches == 4
+    fused = {frozenset(b.scheme for b in m.members) for m in p.megabatches}
+    assert frozenset({"host_pkt", "host_dr"}) in fused
+
+
+def test_loop_campaign_matches_standalone_simulate(tree, perm_wl):
+    """End-to-end: fused loop-engine campaign results == standalone
+    loopsim.simulate calls (the acceptance bitwise-parity criterion)."""
+    from repro.net import loopsim
+    c = _loop_campaign(loop_opts=(("loss", "sack"),))
+    p = sweep.plan(c)
+    assert p.n_dispatches == p.n_shapes == 2
+    _, full = sweep.run_campaign(c, keep_full=True)
+    assert len(full) == 6
+    cfg = c.loop_config()
+    for point, res in full.items():
+        ref = loopsim.simulate(tree, perm_wl, lbs.by_name(point.scheme),
+                               cfg, seed=point.seed)
+        np.testing.assert_array_equal(res.delivered_slot, ref.delivered_slot)
+        np.testing.assert_array_equal(res.flow_complete_slot,
+                                      ref.flow_complete_slot)
+        assert res.cct_slots == ref.cct_slots
+        assert res.drops == ref.drops
+        assert res.retransmissions == ref.retransmissions
+
+
 def test_compile_cache_persists_executables(tmp_path):
     cache_dir = tmp_path / "jax-cache"
     # Drop in-process compile reuse so the dispatch actually compiles (and
