@@ -32,6 +32,13 @@ the slotted feedback engine, run once through the fused
 slotted pipeline, so the planner emits ONE dispatch) and once as the serial
 per-point ``loopsim.simulate`` loop, recorded under the ``"loop"`` key.
 
+A **cross-k sample** (``"kfuse"`` key) measures tree-size fusion: one grid
+sweeping fat-tree size with fixed schemes/loads, run once as the fused
+campaign (every k pads to the bucket head: ONE dispatch per compiled
+shape) and once as the per-k campaign pattern it replaces (one campaign
+per tree size, each compiling its own pipeline shape).  Per-point CCTs are
+verified identical before timing is reported.
+
 Per-point results are verified identical (exact CCT equality) between the
 megabatched and serial paths before any timing is reported.  Results are
 appended-by-overwrite to ``BENCH_sweep.json`` at the repo root so the perf
@@ -123,6 +130,53 @@ def _loop_sample(k: int, tree: FatTree):
     }
 
 
+def _kfuse_sample():
+    """Cross-k fusion sample: a (scheme x tree size x seed) grid as ONE
+    fused campaign (tree sizes share a k-bucket, so the planner emits one
+    dispatch per compiled shape) vs the per-k campaign pattern tree sweeps
+    used before tree-size bucketing (each k compiles its own shape)."""
+    trees = (4, 6) if SMOKE else (4, 6, 8)
+    seeds = tuple(range(2 if SMOKE else 4))
+    schemes = ("host_pkt", "host_dr")
+    load = sweep.WorkloadSpec("permutation", 8 if SMOKE else 32, rng_seed=1)
+
+    fused_c = sweep.Campaign(name="sweep_bench_kfuse", schemes=schemes,
+                             loads=(load,), trees=trees, seeds=seeds)
+    p = sweep.plan(fused_c)
+    assert p.n_dispatches == 1, p.describe()
+
+    _clear_compile_caches()
+    t0 = time.perf_counter()
+    records, _ = sweep.run_campaign(fused_c)
+    fused_s = time.perf_counter() - t0
+
+    _clear_compile_caches()
+    t0 = time.perf_counter()
+    per_k_records = []
+    for k in trees:
+        recs, _ = sweep.run_campaign(sweep.Campaign(
+            name="sweep_bench_kfuse", schemes=schemes, loads=(load,),
+            trees=(k,), seeds=seeds))
+        per_k_records.extend(recs)
+    per_k_s = time.perf_counter() - t0
+
+    fused_cct = {(r["scheme"], r["k"], r["seed"]): r["cct"] for r in records}
+    per_k_cct = {(r["scheme"], r["k"], r["seed"]): r["cct"]
+                 for r in per_k_records}
+    assert fused_cct == per_k_cct, "cross-k fused CCTs diverge from per-k"
+
+    return {
+        "grid": {"trees": list(trees), "msg_packets": load.msg_packets,
+                 "schemes": list(schemes), "n_seeds": len(seeds),
+                 "points": fused_c.n_points},
+        "plan": {"n_dispatches": p.n_dispatches, "n_shapes": p.n_shapes,
+                 "k_pad": p.megabatches[0].k_pad},
+        "fused_s": round(fused_s, 3),
+        "per_k_s": round(per_k_s, 3),
+        "speedup_vs_per_k": round(per_k_s / fused_s, 2),
+    }
+
+
 def sweep_speedup(scale: C.Scale):
     """Grid-completion wall time: megabatched campaign vs per-scheme batched
     (PR1) vs serial loops."""
@@ -205,6 +259,7 @@ def sweep_speedup(scale: C.Scale):
         "speedup_vs_warm": round(speedup_warm, 2),
         "speedup_vs_pr1": round(speedup_pr1, 2),
         "loop": _loop_sample(k, tree),
+        "kfuse": _kfuse_sample(),
     }
     BENCH_JSON.write_text(json.dumps(result, indent=2) + "\n")
     C.emit("sweep_speedup", batch_s * 1e6 / n_points,
@@ -218,5 +273,7 @@ def sweep_speedup(scale: C.Scale):
            loop_speedup=result["loop"]["speedup_vs_isolated"],
            loop_speedup_warm=result["loop"]["speedup_vs_warm"],
            loop_dispatches=result["loop"]["plan"]["n_dispatches"],
+           kfuse_speedup=result["kfuse"]["speedup_vs_per_k"],
+           kfuse_dispatches=result["kfuse"]["plan"]["n_dispatches"],
            points=n_points, dispatches=p.n_dispatches, shapes=p.n_shapes)
     return result

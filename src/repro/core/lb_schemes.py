@@ -36,6 +36,13 @@ from ..net.topology import FatTree
 from . import dr as dr_mod
 
 
+# Port-choice modes whose slotted-engine randomness is drawn with host- or
+# queue-shaped arrays: tree-size padding resizes those draws, so these modes
+# cannot cross-k fuse bitwise on the loop engine.  Single source of truth for
+# LBScheme.loop_kfusable (planner) and loopsim's runtime guard.
+LOOP_KFUSE_UNSAFE_MODES = ("rand", "jsq", "jsq_quant")
+
+
 @dataclasses.dataclass(frozen=True)
 class LBScheme:
     name: str
@@ -83,6 +90,19 @@ class LBScheme:
                   else None)
         return (self.edge_mode, self.agg_mode, quanta, self.buffer_pkts,
                 self.reset_wraps)
+
+    def loop_kfusable(self) -> bool:
+        """Whether the slotted engine can pad this scheme's points onto a
+        larger fat tree while staying bitwise-identical (the planner's
+        cross-tree-size fusion).  Pointer and host-label schemes qualify:
+        their randomness is drawn host-side or from shape-independent pools.
+        rand/JSQ switch modes draw in-loop randomness with host- and
+        queue-shaped arrays, which a padded tree would resize -- changing
+        the drawn values -- so they must group by raw ``k``.  (The fast
+        engine draws all randomness host-side; every scheme k-fuses there.)
+        """
+        return (self.edge_mode not in LOOP_KFUSE_UNSAFE_MODES
+                and self.agg_mode not in LOOP_KFUSE_UNSAFE_MODES)
 
     def loop_shape_key(self) -> Tuple:
         """Hashable key of everything that determines the compiled *loop*

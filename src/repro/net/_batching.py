@@ -9,6 +9,12 @@ copies:
 
   * :func:`pow2_bucket` -- the power-of-two shape bucket both the planner
     and the engines use so nearby array sizes share one compile;
+  * :func:`k_buckets` -- the tree-size analog: group a campaign's fat-tree
+    sizes so every tree pads to the largest ``k`` of its bucket and the whole
+    bucket shares ONE compiled pipeline;
+  * :class:`TreePad` -- scatter index maps between a real fat tree and the
+    padded (bucket-max) fat tree: where each real switch / pointer / queue id
+    lands in the padded coordinate space;
   * :func:`pad_tail` -- constant-fill tail padding along one axis;
   * :func:`pad_to_group_max` -- pad a group of same-rank arrays to their
     element-wise maximum shape (scheme tables, OFAN rotation orders);
@@ -31,6 +37,85 @@ def pow2_bucket(n: int) -> int:
     """Next power of two >= ``n`` (and >= 1): sizes landing in one bucket
     share a compiled pipeline shape."""
     return 1 << max(0, int(n - 1).bit_length())
+
+
+def k_buckets(trees: Sequence[int]) -> Dict[int, int]:
+    """Group fat-tree sizes into padding buckets: ``{k: k_pad}``.
+
+    Greedy from the largest tree down: a tree joins the current bucket when
+    padding it to the bucket head costs at most 2x in ``k``, otherwise it
+    opens its own bucket.  For workloads whose packet count is linear in
+    the host count (permutation, fsdp_rings) that bounds the padding waste
+    at 8x packet rows -- k^3/4 hosts; all_to_all is quadratic in hosts, so
+    its waste can reach ~64x at a full 2x pad (the cost-model-driven bucket
+    policy in ROADMAP.md is the standing fix).  Every ``k`` of one bucket
+    pads its topology operands to the bucket head and shares ONE compiled
+    pipeline, so a campaign's dispatch count no longer scales with the
+    number of tree sizes.  Buckets are campaign-relative (computed over
+    the grid's ``trees`` axis): a single-size campaign never pads.
+    """
+    out: Dict[int, int] = {}
+    head = 0
+    for k in sorted(set(int(k) for k in trees), reverse=True):
+        if head == 0 or head > 2 * k:
+            head = k
+        out[k] = head
+    return out
+
+
+class TreePad:
+    """Index maps from a real fat tree's id spaces into a padded tree's.
+
+    Both engines identify switches, DR/OFAN pointers and queues by dense
+    ids derived from ``(pod, edge/agg, port)`` coordinates with modulus
+    ``k``/``k/2``; running a small tree inside a larger compiled pipeline
+    therefore needs every id-indexed operand scattered to the padded
+    layout (real coordinates are unchanged -- they are simply sparse in the
+    padded id space).  The maps below give, for each real id in order, its
+    position in the padded space; scattering with them is monotone, so
+    relative id order (and hence every sort-based arbitration) is
+    preserved.  ``tree`` and ``padded`` are ``topology.FatTree``-likes
+    (only ``k``/``half``/counts are used).
+    """
+
+    def __init__(self, tree, padded):
+        if padded.k < tree.k:
+            raise ValueError(f"cannot pad k={tree.k} down to k={padded.k}")
+        self.tree, self.padded = tree, padded
+        kr, hr = tree.k, tree.half
+        hp = padded.half
+        # Real switch id p*hr + e  ->  padded id p*hp + e  (edge and agg
+        # layers share the (pod, index<k/2) coordinate scheme).
+        self.switch = (np.arange(kr)[:, None] * hp
+                       + np.arange(hr)[None, :]).reshape(-1)
+        # Mid-layer queue id (x*hr + y)*hr + z -> (x*hp + y)*hp + z; the same
+        # map serves UP_E/UP_A/DN_C/DN_A (all are k * (k/2)^2 spaces).
+        self.mid = ((np.arange(kr)[:, None, None] * hp
+                     + np.arange(hr)[None, :, None]) * hp
+                    + np.arange(hr)[None, None, :]).reshape(-1)
+        # OFAN edge pointer id  se*n_edges + de  (se-major, de-minor).
+        ne_p = padded.n_edge_switches
+        self.edge_pair = (self.switch[:, None] * ne_p
+                          + self.switch[None, :]).reshape(-1)
+        # OFAN/W-ECMP agg pointer id  ga*n_pods + dst_pod.
+        self.agg_pod = (self.switch[:, None] * padded.n_pods
+                        + np.arange(kr)[None, :]).reshape(-1)
+
+    @property
+    def noop(self) -> bool:
+        return self.padded.k == self.tree.k
+
+    def scatter(self, x: np.ndarray, idx: np.ndarray, size: int,
+                axis: int = 0, fill=0) -> np.ndarray:
+        """Place ``x``'s entries along ``axis`` at positions ``idx`` of a
+        ``fill``-initialized axis of length ``size``."""
+        shape = list(x.shape)
+        shape[axis] = size
+        out = np.full(shape, fill, dtype=x.dtype)
+        sl = [slice(None)] * x.ndim
+        sl[axis] = idx
+        out[tuple(sl)] = x
+        return out
 
 
 def pad_tail(x: np.ndarray, axis: int, target: int, fill=0) -> np.ndarray:

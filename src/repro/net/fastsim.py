@@ -53,7 +53,8 @@ import jax.numpy as jnp
 from .topology import (FatTree, LinkState, N_LAYERS, LAYER_NAMES,
                        UP_E, UP_A, DN_C, DN_A, DN_E)
 from .workloads import Workload
-from ._batching import pad_tail as _pad_tail, pad_to_group_max, shard_pad
+from ._batching import (TreePad, pad_tail as _pad_tail, pad_to_group_max,
+                        shard_pad)
 from ..core.lb_schemes import LBScheme, precompute_host_choices
 from ..core import ofan as ofan_mod
 
@@ -103,7 +104,10 @@ def _ranks_and_starts(sorted_gkey: jnp.ndarray,
 def _lindley_layer(qid, a, tie, n_queues: int, backend: str):
     """FIFO service of one layer.  ``qid`` int32 (-1 => bypass).
 
-    Returns (departure, counts[n_queues], max_occ, sum_wait).
+    Returns (departure, counts[n_queues], occ): ``occ`` is the per-packet
+    queue length seen on arrival (0 for bypass rows).  Occupancy sums are
+    taken host-side over the unpadded packet slice so padding can never
+    perturb the float reduction order (see :func:`_postprocess`).
     """
     npk = qid.shape[0]
     real = qid >= 0
@@ -122,7 +126,7 @@ def _lindley_layer(qid, a, tie, n_queues: int, backend: str):
     occ = jnp.where(real, d - a - 1.0, 0.0)      # queue length seen on arrival
     counts = jnp.zeros((n_queues,), jnp.int32).at[
         jnp.where(real, qid, 0)].add(jnp.where(real, 1, 0))
-    return d, counts, jnp.max(occ), jnp.sum(occ)
+    return d, counts, occ
 
 
 # ---------------------------------------------------------------------------
@@ -132,7 +136,11 @@ def _lindley_layer(qid, a, tie, n_queues: int, backend: str):
 def _ranked_ports(gkey, a, tie, active, select_fn, backend):
     """Sort active packets by (group pointer key, arrival), compute the rank of
     each packet within its group, and map rank -> port via ``select_fn(gid,
-    rank)``.  Inactive packets get port 0 (unused)."""
+    rank)``.  Inactive packets get port 0 (unused): masking them -- rather
+    than letting them keep the pseudo-rank of the discard group -- keeps the
+    reported per-packet ports deterministic under shape-bucketing padding
+    (pad rows join the discard group and would otherwise shift the ranks,
+    and hence the garbage ports, of real bypass packets)."""
     npk = gkey.shape[0]
     g = jnp.where(active, gkey, jnp.int32(2**30))
     order = jnp.lexsort((tie, a, g))
@@ -141,7 +149,7 @@ def _ranked_ports(gkey, a, tie, active, select_fn, backend):
     rank, _ = _ranks_and_starts(gs, backend)
     gid = jnp.where(gs < 2**30, gs, 0)
     port_sorted = select_fn(gid, rank)
-    return port_sorted[inv].astype(jnp.int32)
+    return jnp.where(active, port_sorted[inv], 0).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -149,7 +157,7 @@ def _ranked_ports(gkey, a, tie, active, select_fn, backend):
 # ---------------------------------------------------------------------------
 
 def _jsq_layer(switch, a, tie, active, *, n_switches: int, pad: int, h: int,
-               quanta: Optional[Tuple[float, ...]], buffer_pkts: int,
+               h_log, quanta: Optional[Tuple[float, ...]], buffer_pkts: int,
                noise, backend: str):
     """Joint port-choice + FIFO service for one adaptive layer.
 
@@ -181,6 +189,11 @@ def _jsq_layer(switch, a, tie, active, *, n_switches: int, pad: int, h: int,
     thresholds = None
     if quanta is not None:
         thresholds = jnp.asarray(quanta, jnp.float32) * buffer_pkts
+    # Ports beyond the point's logical k/2 exist only because the grid is
+    # padded to a larger tree's width; a huge additive penalty keeps argmin
+    # off them (exact no-op when h_log == h: adding 0.0 is bitwise-neutral).
+    port_pen = jnp.where(jnp.arange(h) >= h_log, jnp.float32(1e9),
+                         jnp.float32(0.0))
 
     def step(d_last, inp):
         t, ok, nz = inp
@@ -190,7 +203,7 @@ def _jsq_layer(switch, a, tie, active, *, n_switches: int, pad: int, h: int,
         else:
             bin_ = jnp.sum(qlen[:, None] > thresholds[None, :], axis=1)
             score = bin_.astype(jnp.float32) + nz * 0.5
-        p = jnp.argmin(score)
+        p = jnp.argmin(score + port_pen)
         d_new = jnp.maximum(t, d_last[p]) + 1.0
         d_next = jnp.where(ok, d_last.at[p].set(d_new), d_last)
         return d_next, (p.astype(jnp.int32), jnp.where(ok, d_new, t),
@@ -237,8 +250,13 @@ class FastSimResult:
         return self.layers[LAYER_NAMES[layer]].max_queue
 
 
-def _select_fn_for(mode: str, h: int, tables: dict):
-    """Build select_fn(gid, rank)->port for rank-based modes."""
+def _select_fn_for(mode: str, h, tables: dict):
+    """Build select_fn(gid, rank)->port for rank-based modes.
+
+    ``h`` is the *logical* port count of the point being simulated -- a
+    per-row operand, not the compiled grid width: a point padded onto a
+    larger tree's pipeline must still rotate over its own k/2 ports.
+    """
     if mode == "rr":
         starts = tables["rr_starts"]          # (n_groups,)
         def f(gid, rank):
@@ -294,11 +312,15 @@ class SimPlan:
     def jsq(self) -> bool:
         return self.scheme.edge_mode in ("jsq", "jsq_quant")
 
-    def build_run(self, batch, *, pad_e=None, pad_a=None, n_shards=1):
+    def build_run(self, batch, *, pad_e=None, pad_a=None, n_shards=1,
+                  tree=None):
         """``batch``: False | "seed" | "mega" (see :func:`_build_run`).
         ``pad_e``/``pad_a`` override the plan's own JSQ grid padding when a
-        megabatch pads members to a group-wide maximum."""
-        tree, scheme = self.tree, self.scheme
+        megabatch pads members to a group-wide maximum; ``tree`` overrides
+        the plan's own tree when a megabatch pads members onto a k-bucket's
+        largest fat tree."""
+        tree = self.tree if tree is None else tree
+        scheme = self.scheme
         if batch is True:
             batch = "seed"
         return _build_run(h=tree.half, n_pods=tree.n_pods,
@@ -332,7 +354,11 @@ def _prepare(tree: FatTree, wl: Workload, scheme: LBScheme, prop_slots: float,
     leaves_edge = inter_pod | (e1 != e2)
     plan.static_args = dict(p1=p1, e1=e1, p2=p2, e2=e2,
                             dst=dst.astype(np.int32), inter_pod=inter_pod,
-                            leaves_edge=leaves_edge)
+                            leaves_edge=leaves_edge,
+                            # Logical port count: an operand, so a point
+                            # padded onto a larger tree's pipeline still
+                            # rotates/sprays over its own k/2 ports.
+                            h_log=np.int32(tree.half))
 
     # ---- path validity under failures (host visibility: converged state) --
     if links is not None and links.any_failure() and scheme.edge_mode == "pre":
@@ -435,9 +461,13 @@ def _postprocess(out: dict, wl: Workload) -> FastSimResult:
     max_q = 0.0
     for li, name in enumerate(LAYER_NAMES):
         cnts = out["counts"][li]
-        mq = float(out["max_occ"][li])
+        occ = np.asarray(out["occ"][li])
+        mq = float(occ.max()) if occ.size else 0.0
         n_real = int(out["n_real"][li])
-        aw = float(out["sum_occ"][li]) / max(n_real, 1)
+        # Host-side f64 sum over the (already unpadded) per-packet occupancy:
+        # every dispatch granularity reduces the identical array, so padding
+        # and fusion can never perturb the average through reduction order.
+        aw = float(occ.sum(dtype=np.float64)) / max(n_real, 1)
         layers[name] = LayerStats(counts=cnts, max_queue=mq, avg_wait=aw)
         max_q = max(max_q, mq)
     return FastSimResult(delivery=delivery, flow_completion=flow_completion,
@@ -521,33 +551,75 @@ _PKT_KEYS = ("p1", "e1", "p2", "e2", "dst", "inter_pod", "leaves_edge",
 
 def _pipeline_identity(plan: SimPlan) -> Tuple:
     """Everything two plans must agree on to share one megabatched dispatch
-    (shapes of per-packet arrays and JSQ grids are padded; this is the rest)."""
-    t = plan.tree
-    return (t.half, t.n_pods, t.n_edge_switches, t.n_agg_switches, t.n_hosts,
-            plan.scheme.shape_key(), plan.tables_e_keys, plan.tables_a_keys,
+    (shapes of per-packet arrays and JSQ grids are padded, and tree sizes
+    pad to the group's largest k; this is the rest)."""
+    return (plan.scheme.shape_key(), plan.tables_e_keys, plan.tables_a_keys,
             float(plan.prop_slots), plan.backend)
+
+
+def _repad_elem(d: dict, plan: SimPlan, tp: TreePad) -> dict:
+    """Re-lay one point's switch-id-indexed operands into the padded tree's
+    id space (:class:`~._batching.TreePad`).  Per-packet coordinate arrays
+    are untouched: real (pod, edge, port) coordinates are simply sparse in
+    the padded id space, and the scatter maps are monotone, so every
+    sort-based arbitration sees the same relative order as the standalone
+    run.  Padded table rows are only ever indexed by inert pad packets."""
+    if tp.noop:
+        return d
+    pt = tp.padded
+    d = dict(d)
+    n_sw = pt.n_edge_switches            # == n_agg_switches
+
+    def _sw(x):
+        return tp.scatter(x, tp.switch, n_sw)
+
+    for key, keys, ptr_idx, n_ptr in (
+            ("te", plan.tables_e_keys, tp.edge_pair, n_sw * n_sw),
+            ("ta", plan.tables_a_keys, tp.agg_pod, n_sw * pt.n_pods)):
+        tbl = dict(zip(keys, d[key]))
+        if "rr_starts" in tbl:
+            tbl["rr_starts"] = _sw(tbl["rr_starts"])
+        if "rr_perms" in tbl:
+            tbl["rr_perms"] = _sw(_pad_tail(tbl["rr_perms"], 2, pt.half))
+        if "orders" in tbl:                       # OFAN pointer tables
+            tbl["orders"] = tp.scatter(tbl["orders"], ptr_idx, n_ptr)
+            tbl["starts"] = tp.scatter(tbl["starts"], ptr_idx, n_ptr)
+            tbl["lens"] = tp.scatter(tbl["lens"], ptr_idx, n_ptr)
+        d[key] = tuple(tbl[k] for k in keys)
+    if plan.jsq:
+        for k in ("noise_e", "noise_a"):
+            d[k] = _sw(_pad_tail(d[k], 2, pt.half))
+    return d
 
 
 def simulate_megabatch(items, *, prop_slots: float = 12.0,
                        backend: str = "auto", jsq_pad_factor: float = 4.0,
-                       npk_pad: Optional[int] = None, n_shards=1) -> list:
+                       npk_pad: Optional[int] = None, n_shards=1,
+                       k_pad: Optional[int] = None) -> list:
     """Run many simulation points as ONE fused, jitted dispatch.
 
     ``items`` is a sequence of ``(tree, wl, scheme, seeds, links)`` tuples
     whose points lower to the same compiled pipeline (equal
-    ``LBScheme.shape_key()``, same tree size, same backend) -- e.g. flow_ecmp,
-    subflow_mptcp, host_pkt and host_dr grids on any mix of workloads and
-    failure patterns.  Per-seed inputs are drawn host-side exactly as
-    :func:`simulate` draws them, padded to shared shapes (packet arrays up to
-    ``npk_pad``, JSQ noise grids and scheme tables up to group-wide maxima;
-    pad packets are inert bypass rows with ``dst = -1``), stacked onto one
-    fused batch axis, and executed by a single ``vmap``-ed -- and, with
+    ``LBScheme.shape_key()``, same backend) -- e.g. flow_ecmp,
+    subflow_mptcp, host_pkt and host_dr grids on any mix of workloads,
+    failure patterns and tree sizes.  Per-seed inputs are drawn host-side
+    exactly as :func:`simulate` draws them, padded to shared shapes (packet
+    arrays up to ``npk_pad``, JSQ noise grids and scheme tables up to
+    group-wide maxima, switch-indexed tables scattered into the padded
+    ``k_pad`` tree's id space; pad packets are inert bypass rows with
+    ``dst = -1`` and padded switches never receive traffic), stacked onto
+    one fused batch axis, and executed by a single ``vmap``-ed -- and, with
     ``n_shards > 1`` (or ``"auto"``), ``shard_map``-sharded -- dispatch.
+
+    ``k_pad`` (default: the largest tree among the items) is the fat-tree
+    size every member's topology operands pad to; the planner passes the
+    k-bucket head so campaigns sweeping tree size share one compile.
 
     Returns one list of :class:`FastSimResult` per item (aligned with its
     ``seeds``); every result is bitwise-identical to the standalone
     :func:`simulate` call with the same arguments, including the JSQ
-    pad-overflow retry decision (tested in ``tests/test_sweep.py``).
+    pad-overflow retry decision (tested in ``tests/test_sweep.py`` and
+    ``tests/test_differential.py``).
     """
     items = [(t, w, s, list(seeds), l) for (t, w, s, seeds, l) in items]
     if not items or all(not it[3] for it in items):
@@ -561,6 +633,12 @@ def simulate_megabatch(items, *, prop_slots: float = 12.0,
         raise ValueError(f"megabatch items span {len(idents)} pipeline "
                          f"identities; group by LBScheme.shape_key() first")
 
+    k_max = max(p.tree.k for p in plans)
+    k_pad = k_max if k_pad is None else max(int(k_pad), k_max)
+    tree_pad = next((p.tree for p in plans if p.tree.k == k_pad),
+                    FatTree(k_pad))
+    pads = [TreePad(p.tree, tree_pad) for p in plans]
+
     npk_max = max(p.wl.n_packets for p in plans)
     npk_pad = npk_max if npk_pad is None else max(int(npk_pad), npk_max)
     pad_e_m = max(p.pad_e for p in plans)
@@ -572,7 +650,8 @@ def simulate_megabatch(items, *, prop_slots: float = 12.0,
     for i, ((tree, wl, scheme, seeds, links), plan) in enumerate(
             zip(items, plans)):
         for s in seeds:
-            d = {**plan.static_args, **_draw_seed_inputs(plan, s)}
+            d = _repad_elem({**plan.static_args,
+                             **_draw_seed_inputs(plan, s)}, plan, pads[i])
             for k in _PKT_KEYS:
                 d[k] = _pad_tail(d[k], 0, npk_pad,
                                  fill=-1 if k == "dst" else 0)
@@ -600,7 +679,7 @@ def simulate_megabatch(items, *, prop_slots: float = 12.0,
     stacked = shard_pad(stacked, n_batch, n_shards)
 
     run = plans[0].build_run("mega", pad_e=pad_e_m, pad_a=pad_a_m,
-                             n_shards=n_shards)
+                             n_shards=n_shards, tree=tree_pad)
     out = run(stacked)
     out = jax.tree_util.tree_map(np.asarray, out)
 
@@ -614,6 +693,12 @@ def simulate_megabatch(items, *, prop_slots: float = 12.0,
         npk_i = plans[i].wl.n_packets
         for k in ("delivery", "a_used", "c_used"):
             out_b[k] = out_b[k][:npk_i]
+        out_b["occ"] = out_b["occ"][:, :npk_i]
+        if not pads[i].noop:
+            # Gather per-queue packet counts back onto the real tree's queue
+            # ids (padded queues hold zero: no real packet ever lands there).
+            out_b["counts"] = ([c[pads[i].mid] for c in out_b["counts"][:4]]
+                               + [out_b["counts"][4][:plans[i].tree.n_hosts]])
         results[i][s] = _postprocess(out_b, plans[i].wl)
 
     # JSQ pad overflow: re-run exactly the (item, seed) cells a standalone
@@ -636,10 +721,10 @@ def simulate_megabatch(items, *, prop_slots: float = 12.0,
 # carry the seed batch axis.  In the megabatched variant ("mega") *every*
 # argument carries the fused (scheme x load x failure x seed) axis.
 _ARG_ORDER = ("p1", "e1", "p2", "e2", "dst", "inter_pod", "leaves_edge",
-              "pad_lim_e", "pad_lim_a",
+              "pad_lim_e", "pad_lim_a", "h_log",
               "t_rel", "tie", "a_pre", "c_pre", "rand_a", "rand_c",
               "noise_e", "noise_a", "te", "ta")
-_N_STATIC = 9
+_N_STATIC = 10
 
 
 @functools.lru_cache(maxsize=64)
@@ -668,7 +753,7 @@ def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
     mid = n_pods * h * h   # queues per middle layer
 
     def pipeline(p1, e1, p2, e2, dst, inter_pod, leaves_edge,
-                 pad_lim_e, pad_lim_a, t_rel, tie,
+                 pad_lim_e, pad_lim_a, h_log, t_rel, tie,
                  a_pre, c_pre, rand_a, rand_c, noise_e, noise_a, te, ta):
         tbl_e = dict(zip(tables_e_keys, te))
         tbl_a = dict(zip(tables_a_keys, ta))
@@ -676,7 +761,7 @@ def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
             tbl_e["reset_wraps"] = reset_wraps
             tbl_a["reset_wraps"] = reset_wraps
         overflow = jnp.asarray(False)
-        counts, max_occ, sum_occ, n_real = [], [], [], []
+        counts, occs, n_real = [], [], []
 
         a_t = t_rel + prop                      # arrival at source edge switch
         edge_switch = p1 * h + e1
@@ -689,28 +774,30 @@ def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
         elif edge_mode in ("rr", "rr_reset"):
             a_used = _ranked_ports(edge_switch, a_t, tie, leaves_edge,
                                    _select_fn_for("rr" if edge_mode == "rr"
-                                                  else "rr_reset", h, tbl_e),
+                                                  else "rr_reset", h_log,
+                                                  tbl_e),
                                    backend)
         elif edge_mode == "ofan":
             dst_edge = p2 * h + e2
             gkey = edge_switch * n_edges + dst_edge
             a_used = _ranked_ports(gkey, a_t, tie, leaves_edge,
-                                   _select_fn_for("ofan", h, tbl_e), backend)
+                                   _select_fn_for("ofan", h_log, tbl_e),
+                                   backend)
         if edge_mode in ("jsq", "jsq_quant"):
             a_used, d, occ, max_rank = _jsq_layer(
                 edge_switch, a_t, tie, leaves_edge, n_switches=n_edges,
-                pad=pad_e, h=h, quanta=quanta, buffer_pkts=buffer_pkts,
-                noise=noise_e, backend=backend)
+                pad=pad_e, h=h, h_log=h_log, quanta=quanta,
+                buffer_pkts=buffer_pkts, noise=noise_e, backend=backend)
             overflow |= max_rank >= pad_lim_e
             qid = jnp.where(leaves_edge, edge_switch * h + a_used, -1)
             cnt = jnp.zeros((mid,), jnp.int32).at[
                 jnp.where(qid >= 0, qid, 0)].add(jnp.where(qid >= 0, 1, 0))
-            counts.append(cnt); max_occ.append(jnp.max(occ))
-            sum_occ.append(jnp.sum(occ)); n_real.append(jnp.sum(leaves_edge))
+            counts.append(cnt); occs.append(occ)
+            n_real.append(jnp.sum(leaves_edge))
         else:
             qid = jnp.where(leaves_edge, edge_switch * h + a_used, -1)
-            d, cnt, mo, so = _lindley_layer(qid, a_t, tie, mid, backend)
-            counts.append(cnt); max_occ.append(mo); sum_occ.append(so)
+            d, cnt, occ = _lindley_layer(qid, a_t, tie, mid, backend)
+            counts.append(cnt); occs.append(occ)
             n_real.append(jnp.sum(leaves_edge))
         a_t = jnp.where(leaves_edge, d + prop, a_t)
 
@@ -723,47 +810,49 @@ def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
         elif agg_mode in ("rr", "rr_reset"):
             c_used = _ranked_ports(agg_switch, a_t, tie, inter_pod,
                                    _select_fn_for("rr" if agg_mode == "rr"
-                                                  else "rr_reset", h, tbl_a),
+                                                  else "rr_reset", h_log,
+                                                  tbl_a),
                                    backend)
         elif agg_mode == "ofan":
             gkey = agg_switch * n_pods + p2
             c_used = _ranked_ports(gkey, a_t, tie, inter_pod,
-                                   _select_fn_for("ofan", h, tbl_a), backend)
+                                   _select_fn_for("ofan", h_log, tbl_a),
+                                   backend)
         if agg_mode in ("jsq", "jsq_quant"):
             c_used, d, occ, max_rank = _jsq_layer(
                 agg_switch, a_t, tie, inter_pod, n_switches=n_aggs,
-                pad=pad_a, h=h, quanta=quanta, buffer_pkts=buffer_pkts,
-                noise=noise_a, backend=backend)
+                pad=pad_a, h=h, h_log=h_log, quanta=quanta,
+                buffer_pkts=buffer_pkts, noise=noise_a, backend=backend)
             overflow |= max_rank >= pad_lim_a
             qid = jnp.where(inter_pod, agg_switch * h + c_used, -1)
             cnt = jnp.zeros((mid,), jnp.int32).at[
                 jnp.where(qid >= 0, qid, 0)].add(jnp.where(qid >= 0, 1, 0))
-            counts.append(cnt); max_occ.append(jnp.max(occ))
-            sum_occ.append(jnp.sum(occ)); n_real.append(jnp.sum(inter_pod))
+            counts.append(cnt); occs.append(occ)
+            n_real.append(jnp.sum(inter_pod))
         else:
             qid = jnp.where(inter_pod, agg_switch * h + c_used, -1)
-            d, cnt, mo, so = _lindley_layer(qid, a_t, tie, mid, backend)
-            counts.append(cnt); max_occ.append(mo); sum_occ.append(so)
+            d, cnt, occ = _lindley_layer(qid, a_t, tie, mid, backend)
+            counts.append(cnt); occs.append(occ)
             n_real.append(jnp.sum(inter_pod))
         a_t = jnp.where(inter_pod, d + prop, a_t)
 
         # ---------- DN_C (forced: core (a_used, c_used) -> agg a_used of p2) --
         qid = jnp.where(inter_pod, (p2 * h + a_used) * h + c_used, -1)
-        d, cnt, mo, so = _lindley_layer(qid, a_t, tie, mid, backend)
-        counts.append(cnt); max_occ.append(mo); sum_occ.append(so)
+        d, cnt, occ = _lindley_layer(qid, a_t, tie, mid, backend)
+        counts.append(cnt); occs.append(occ)
         n_real.append(jnp.sum(inter_pod))
         a_t = jnp.where(inter_pod, d + prop, a_t)
 
         # ---------- DN_A (forced: agg a_used -> edge e2) ----------
         qid = jnp.where(leaves_edge, (p2 * h + a_used) * h + e2, -1)
-        d, cnt, mo, so = _lindley_layer(qid, a_t, tie, mid, backend)
-        counts.append(cnt); max_occ.append(mo); sum_occ.append(so)
+        d, cnt, occ = _lindley_layer(qid, a_t, tie, mid, backend)
+        counts.append(cnt); occs.append(occ)
         n_real.append(jnp.sum(leaves_edge))
         a_t = jnp.where(leaves_edge, d + prop, a_t)
 
         # ---------- DN_E (forced: edge -> host) ----------
-        d, cnt, mo, so = _lindley_layer(dst, a_t, tie, n_hosts, backend)
-        counts.append(cnt); max_occ.append(mo); sum_occ.append(so)
+        d, cnt, occ = _lindley_layer(dst, a_t, tie, n_hosts, backend)
+        counts.append(cnt); occs.append(occ)
         # dst == -1 marks shape-bucketing pad packets (inert bypass rows);
         # without padding this equals dst.shape[0] exactly.
         n_real.append(jnp.sum(dst >= 0))
@@ -771,8 +860,7 @@ def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
 
         return {"delivery": delivery,
                 "counts": counts,
-                "max_occ": jnp.stack(max_occ),
-                "sum_occ": jnp.stack(sum_occ),
+                "occ": jnp.stack(occs),
                 "n_real": jnp.stack([jnp.asarray(x, jnp.int32) for x in n_real]),
                 "a_used": a_used, "c_used": c_used,
                 "overflow": overflow}

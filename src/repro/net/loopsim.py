@@ -69,8 +69,9 @@ import jax.numpy as jnp
 
 from .topology import FatTree, LinkState
 from .workloads import Workload
-from ._batching import pad_tail, pad_to_group_max, rank_by, shard_pad
-from ..core.lb_schemes import LBScheme, precompute_host_choices
+from ._batching import TreePad, pad_tail, pad_to_group_max, rank_by, shard_pad
+from ..core.lb_schemes import (LBScheme, LOOP_KFUSE_UNSAFE_MODES,
+                               precompute_host_choices)
 from ..core import ofan as ofan_mod
 
 INT = jnp.int32
@@ -290,6 +291,10 @@ def _prepare(tree: FatTree, wl: Workload, scheme: LBScheme,
         e_dead=e_dead, a_dead=a_dead,
         f_vpaths=f_vpaths, f_vcnt=f_vcnt,
         rho=np.float32(cfg.rho), max_slots=np.int32(cfg.max_slots),
+        # Logical port count: an operand, so a point padded onto a larger
+        # tree's compiled engine still decodes labels / rotates pointers
+        # over its own k/2 ports.
+        h_log=np.int32(h),
     )
     return LoopPlan(tree=tree, wl=wl, scheme=scheme, cfg=cfg, links=links,
                     any_fail=any_fail, pv=pv, fsrc=fsrc, fdst=fdst,
@@ -408,11 +413,90 @@ def simulate_batch(tree: FatTree, wl: Workload, scheme: LBScheme,
             for i in range(len(seeds))]
 
 
+def _kfuse_safe(static: _Static) -> bool:
+    """Shape-independent in-loop randomness?  (rand/JSQ modes draw over
+    ``(n,)`` / ``(n, h)`` / move-list shapes, which tree padding resizes --
+    single source of truth in ``lb_schemes.LOOP_KFUSE_UNSAFE_MODES``.)"""
+    return (static.edge_mode not in LOOP_KFUSE_UNSAFE_MODES
+            and static.agg_mode not in LOOP_KFUSE_UNSAFE_MODES)
+
+
 def _pipeline_identity(plan: LoopPlan) -> _Static:
     """Everything two plans must agree on to share one megabatched dispatch
-    (packet/flow/host-flow axes are padded; this is the rest: tree dims,
-    scheme modes, and the static LoopConfig fields)."""
-    return dataclasses.replace(plan.static, P=0, F=0, Fh=0)
+    (packet/flow/host-flow axes are padded; tree dims additionally pad to
+    the group's largest k for schemes whose in-loop randomness is
+    shape-independent; this is the rest: scheme modes and the static
+    LoopConfig fields)."""
+    st = dataclasses.replace(plan.static, P=0, F=0, Fh=0)
+    if _kfuse_safe(st):
+        st = dataclasses.replace(st, n=0, h=0, mid=0, n_edges=0, n_aggs=0,
+                                 n_pods=0)
+    return st
+
+
+def _repad_tables(st: dict, plan: LoopPlan, tp: TreePad) -> dict:
+    """Re-lay one point's switch-/queue-id-indexed operands into the padded
+    tree's id space (:class:`~._batching.TreePad`).  Host ids and per-flow
+    coordinates are unchanged: real hosts are a dense prefix of the padded
+    host space, and real (pod, edge/agg, port) coordinates are sparse in
+    the padded switch/queue id spaces.  Padded queues stay empty (no real
+    packet ever routes to one) and padded table rows are never indexed by a
+    live flow, so dynamics match the standalone run exactly."""
+    if tp.noop:
+        return st
+    pt = tp.padded
+    st = dict(st)
+    n_sw = pt.n_edge_switches            # == n_agg_switches
+    mid_r = plan.tree.queues_per_mid_layer
+    mid_p = pt.queues_per_mid_layer
+
+    # Per-queue aliveness: 4 mid layers scatter through the queue-id map;
+    # padded queues read True, which is inert (nothing is enqueued there).
+    alive = np.ones(4 * mid_p + pt.n_hosts, dtype=bool)
+    for L in range(4):
+        alive[L * mid_p + tp.mid] = st["alive"][L * mid_r:(L + 1) * mid_r]
+    st["alive"] = alive
+
+    st["host_flows"] = pad_tail(st["host_flows"], 0, pt.n_hosts, fill=-1)
+    # Valid-label lists keep their raw h_log-encoded entries; only the pool
+    # axis widens (entries past a flow's own f_vcnt are never indexed).
+    st["f_vpaths"] = pad_tail(st["f_vpaths"], 1, pt.half * pt.half)
+    # W-ECMP valid-port lists: (switch, dst-group) rows scatter; the port
+    # axis pads with zeros that sit beyond every row's count operand.
+    st["e_ports"] = pad_tail(
+        tp.scatter(st["e_ports"], tp.edge_pair, n_sw * n_sw), 1, pt.half)
+    st["e_pcnt"] = tp.scatter(st["e_pcnt"], tp.edge_pair, n_sw * n_sw,
+                              fill=1)
+    st["a_ports"] = pad_tail(
+        tp.scatter(st["a_ports"], tp.agg_pod, n_sw * pt.n_pods), 1, pt.half)
+    st["a_pcnt"] = tp.scatter(st["a_pcnt"], tp.agg_pod, n_sw * pt.n_pods,
+                              fill=1)
+    st["e_dead"] = pad_tail(tp.scatter(
+        tp.scatter(st["e_dead"], tp.switch, n_sw, axis=0, fill=True),
+        tp.switch, n_sw, axis=1, fill=True), 2, pt.half, fill=True)
+    st["a_dead"] = pad_tail(pad_tail(
+        tp.scatter(st["a_dead"], tp.switch, n_sw, axis=0, fill=True),
+        1, pt.n_pods, fill=True), 2, pt.half, fill=True)
+    return st
+
+
+def _repad_seed(d: dict, plan: LoopPlan, tp: TreePad) -> dict:
+    """Scatter the per-seed switch tables (RR starts, OFAN pointer tables)
+    into the padded tree's id space."""
+    if tp.noop:
+        return d
+    pt = tp.padded
+    d = dict(d)
+    n_sw = pt.n_edge_switches
+    d["rr_starts_e"] = tp.scatter(d["rr_starts_e"], tp.switch, n_sw)
+    d["rr_starts_a"] = tp.scatter(d["rr_starts_a"], tp.switch, n_sw)
+    if plan.scheme.edge_mode == "ofan":
+        for pre, idx, n_ptr in (("ofan_e", tp.edge_pair, n_sw * n_sw),
+                                ("ofan_a", tp.agg_pod, n_sw * pt.n_pods)):
+            for suf in ("orders", "starts", "len"):
+                d[f"{pre}_{suf}"] = tp.scatter(d[f"{pre}_{suf}"], idx,
+                                               n_ptr, axis=1)
+    return d
 
 
 # Seed-independent per-point operands that carry a padded flow/packet axis.
@@ -420,26 +504,35 @@ _F_PAD0 = ("fsrc", "fdst", "fsize", "fp1", "fe1", "fp2", "fe2")
 
 
 def simulate_megabatch(items, *, npk_pad: Optional[int] = None,
-                       n_shards=1) -> list:
+                       n_shards=1, k_pad: Optional[int] = None) -> list:
     """Run many loop-engine simulation points as ONE fused, jitted dispatch.
 
     ``items`` is a sequence of ``(tree, wl, scheme, cfg, seeds, links,
     g_converge)`` tuples whose points lower to the same compiled engine
-    (equal :func:`_pipeline_identity`: tree dims, scheme modes, and static
-    LoopConfig fields -- ``rho``, ``max_slots`` and ``g_converge`` ride as
-    per-row operands).  Per-seed inputs are drawn host-side exactly as
+    (equal :func:`_pipeline_identity`: scheme modes and static LoopConfig
+    fields -- ``rho``, ``max_slots`` and ``g_converge`` ride as per-row
+    operands).  Per-seed inputs are drawn host-side exactly as
     :func:`simulate` draws them, padded to shared shapes (packet arrays up
     to ``npk_pad``, flow arrays and ``host_flows`` columns to group-wide
-    maxima, OFAN order widths to the group maximum; pad flows have size 0
-    and are inert), stacked onto one fused (scheme x load x failure x seed)
-    batch axis, and executed by a single vmapped -- and, with ``n_shards >
-    1`` (or ``"auto"``), ``shard_map``-sharded -- dispatch whose
-    ``while_loop`` terminates once every row is done.
+    maxima, OFAN order widths to the group maximum, switch/queue tables
+    scattered into the padded ``k_pad`` tree's id space; pad flows have
+    size 0 and are inert, padded switches and queues never see traffic),
+    stacked onto one fused (scheme x load x failure x seed) batch axis, and
+    executed by a single vmapped -- and, with ``n_shards > 1`` (or
+    ``"auto"``), ``shard_map``-sharded -- dispatch whose ``while_loop``
+    terminates once every row is done.
+
+    ``k_pad`` (default: the largest tree among the items) is the fat-tree
+    size every member's topology operands pad to; the planner passes the
+    k-bucket head so campaigns sweeping tree size share one compile.
+    Tree-size padding is only available for schemes whose in-loop
+    randomness is shape-independent (pointer and host-label schemes; see
+    ``_KFUSE_UNSAFE``) -- rand/JSQ switch schemes must group by raw ``k``.
 
     Returns one list of :class:`LoopSimResult` per item (aligned with its
     ``seeds``); every result is bitwise-identical to the standalone
     :func:`simulate` call with the same arguments (tested in
-    ``tests/test_loopsim.py``).
+    ``tests/test_loopsim.py`` and ``tests/test_differential.py``).
     """
     items = [(t, w, s, c, list(seeds), l, g)
              for (t, w, s, c, seeds, l, g) in items]
@@ -454,6 +547,19 @@ def simulate_megabatch(items, *, npk_pad: Optional[int] = None,
                          f"identities; group by tree size, scheme loop "
                          f"shape and static LoopConfig first")
 
+    k_max = max(p.tree.k for p in plans)
+    k_pad = k_max if k_pad is None else max(int(k_pad), k_max)
+    if k_pad != k_max or len({p.tree.k for p in plans}) > 1:
+        bad = [p.scheme.name for p in plans if not _kfuse_safe(p.static)]
+        if bad:
+            raise ValueError(
+                f"schemes {sorted(set(bad))} draw host/queue-shaped in-loop "
+                f"randomness; tree-size padding would change their draws -- "
+                f"group these points by raw k")
+    tree_pad = next((p.tree for p in plans if p.tree.k == k_pad),
+                    FatTree(k_pad))
+    pads = [TreePad(p.tree, tree_pad) for p in plans]
+
     P_max = max(p.wl.n_packets for p in plans)
     npk_pad = P_max if npk_pad is None else max(int(npk_pad), P_max)
     F_pad = max(p.wl.n_flows for p in plans)
@@ -463,7 +569,7 @@ def simulate_megabatch(items, *, npk_pad: Optional[int] = None,
     spans: list = []          # (item index, seed) per fused-axis element
     for i, ((tree, wl, scheme, cfg, seeds, links, g), plan) in enumerate(
             zip(items, plans)):
-        st = dict(plan.tables)
+        st = _repad_tables(plan.tables, plan, pads[i])
         # Flow-axis padding: pad flows have fsize 0, so they complete at the
         # first slot, never send, and never reference a packet; pkt_base is
         # edge-padded so searchsorted still lands real packets on real flows.
@@ -480,7 +586,8 @@ def simulate_megabatch(items, *, npk_pad: Optional[int] = None,
         # unpadded point exactly.
         st["host_flows"] = pad_tail(st["host_flows"], 1, Fh_pad, fill=-1)
         for s in seeds:
-            d = {**st, **_draw_seed_inputs(plan, s)}
+            d = {**st, **_repad_seed(_draw_seed_inputs(plan, s), plan,
+                                     pads[i])}
             for k in ("a_stale", "c_stale", "a_conv", "c_conv"):
                 d[k] = pad_tail(d[k], 0, npk_pad)
             elems.append(d)
@@ -501,8 +608,12 @@ def simulate_megabatch(items, *, npk_pad: Optional[int] = None,
     n_shards = int(n_shards)
     stacked = shard_pad(stacked, n_batch, n_shards)
 
-    static = dataclasses.replace(plans[0].static, P=npk_pad, F=F_pad,
-                                 Fh=Fh_pad)
+    static = dataclasses.replace(
+        plans[0].static, P=npk_pad, F=F_pad, Fh=Fh_pad,
+        n=tree_pad.n_hosts, h=tree_pad.half,
+        mid=tree_pad.queues_per_mid_layer,
+        n_edges=tree_pad.n_edge_switches, n_aggs=tree_pad.n_agg_switches,
+        n_pods=tree_pad.n_pods)
     out = jax.tree_util.tree_map(
         np.asarray, _run(static, stacked, batch="mega", n_shards=n_shards))
 
@@ -541,7 +652,7 @@ def _tbl(stale, conv, attr):
 _STATIC_KEYS = ("fsrc", "fdst", "fsize", "pkt_base", "fp1", "fe1", "fp2",
                 "fe2", "f_inter", "f_leaves", "host_flows", "alive", "G",
                 "e_ports", "e_pcnt", "a_ports", "a_pcnt", "e_dead", "a_dead",
-                "f_vpaths", "f_vcnt", "rho", "max_slots")
+                "f_vpaths", "f_vcnt", "rho", "max_slots", "h_log")
 _SEED_KEYS = ("a_stale", "c_stale", "a_conv", "c_conv", "rand_pool",
               "rr_starts_e", "rr_starts_a",
               "ofan_e_orders", "ofan_e_starts", "ofan_e_len",
@@ -579,7 +690,7 @@ def _run(static: _Static, tables: dict, batch=False, n_shards: int = 1):
 def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
             f_inter, f_leaves, host_flows, alive, G,
             e_ports, e_pcnt, a_ports, a_pcnt, e_dead, a_dead,
-            f_vpaths, f_vcnt, rho, max_slots,
+            f_vpaths, f_vcnt, rho, max_slots, h_log,
             a_stale, c_stale, a_conv, c_conv, rand_pool,
             rr_starts_e, rr_starts_a,
             ofan_e_orders, ofan_e_starts, ofan_e_len,
@@ -799,11 +910,14 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
 
         if s.edge_mode == "pre":
             if s.adaptive_host:
-                # post-convergence W-ECMP rehash: labels land on valid paths
+                # post-convergence W-ECMP rehash: labels land on valid paths.
+                # Labels stay encoded in the point's own h_log port space so
+                # the draw/recycle stream matches the standalone run even
+                # when the point rides a larger padded tree's engine.
                 eff = jnp.where(converged,
                                 f_vpaths[sfv, lab % f_vcnt[sfv]], lab)
-                a_new = ((eff // h) % h).astype(INT)
-                c_new = (eff % h).astype(INT)
+                a_new = ((eff // h_log) % h_log).astype(INT)
+                c_new = (eff % h_log).astype(INT)
             else:
                 a_new = jnp.where(converged, a_conv[pid], a_stale[pid])
                 c_new = jnp.where(converged, c_conv[pid], c_stale[pid])
@@ -835,7 +949,7 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
                 rk = rank_by(sw, north)
                 ctr = st["ptr_e"][sw] + rk
                 # pre-convergence: all ports; post: W-ECMP-valid for dest
-                naive = ((rr_starts_e[sw] + ctr) % h).astype(INT)
+                naive = ((rr_starts_e[sw] + ctr) % h_log).astype(INT)
                 pcn = jnp.maximum(e_pcnt[gp], 1)
                 live = e_ports[gp, (rr_starts_e[sw] + ctr) % pcn].astype(INT)
                 a_new = jnp.where(converged, live, naive)
@@ -905,7 +1019,7 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
             else:
                 rk = rank_by(asw, to_agg)
                 ctr = st["ptr_a"][asw] + rk
-                naive = ((rr_starts_a[asw] + ctr) % h).astype(INT)
+                naive = ((rr_starts_a[asw] + ctr) % h_log).astype(INT)
                 pcn = jnp.maximum(a_pcnt[gpa], 1)
                 live = a_ports[gpa, (rr_starts_a[asw] + ctr) % pcn].astype(INT)
                 c_fin = jnp.where(converged, live, naive)
@@ -979,7 +1093,7 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
                 st["f_cum"] = jnp.minimum(cum + adv, fsize)
         mk = st["p_ecn"][akc]
         if s.adaptive_host and not s.plb:      # REPS recycle
-            lab_back = st["p_a"][akc] * h + st["p_c"][akc]
+            lab_back = st["p_a"][akc] * h_log + st["p_c"][akc]
             good = aok & ~mk
             pc0 = st["pool_cnt"][jnp.maximum(akf, 0)]
             st["pool_lab"] = st["pool_lab"].at[

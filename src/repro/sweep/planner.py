@@ -21,14 +21,25 @@ loop-engine batches (ACK/ECN schemes) group by ``LBScheme.loop_shape_key()``
 plus the static ``LoopConfig`` fields (``loss``, ``cca``, ``buffer_pkts``,
 timing constants) and the power-of-two-bucketed slot budget -- the failure,
 ``g_converge``, rho and seed axes all ride the fused batch axis as operands.
+
+The *tree-size* axis buckets too (``_batching.k_buckets``): every tree of a
+campaign pads its topology operands to the largest ``k`` of its bucket, so
+fused keys carry the k-bucket head instead of the raw ``k`` and a grid
+sweeping tree size costs ONE dispatch per compiled shape, not one per tree.
+Packet buckets are taken at the bucket-head tree (``n_packets(k_pad)``) so
+the packet axis can't silently re-split what the k axis fused.  The one
+exception: loop-engine schemes whose in-loop randomness is host/queue-shaped
+(rand/JSQ modes, ``LBScheme.loop_kfusable() == False``) key on raw ``k`` --
+padding would change their random draws and break bitwise parity.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+import functools
+from typing import Dict, List, Optional, Tuple
 
 from ..core import lb_schemes as lbs
-from ..net._batching import pow2_bucket
+from ..net._batching import k_buckets, pow2_bucket
 from ..net import loopsim
 from .spec import Campaign, FailureSpec, GridPoint, WorkloadSpec
 
@@ -37,6 +48,12 @@ def bucket_packets(n: int) -> int:
     """Shape bucket for packet-array padding: next power of two.  Workloads
     whose packet counts land in one bucket share a compiled pipeline."""
     return pow2_bucket(n)
+
+
+@functools.lru_cache(maxsize=256)
+def _kmap(trees: Tuple[int, ...]) -> Dict[int, int]:
+    """Campaign-scoped tree-size buckets (``{k: k_pad}``)."""
+    return k_buckets(trees)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,15 +76,24 @@ class SeedBatch:
         """Megabatch identity: everything the fused dispatch compiles over.
         Loads/failures/g_converge are *not* part of it (their per-packet
         arrays and convergence/rho scalars ride the batch axis, padded to
-        the bucketed packet count); loop-engine points additionally key on
-        the static LoopConfig fields and the bucketed slot budget."""
-        if campaign.engine == "loop" or lbs.by_name(self.scheme).needs_feedback:
-            return ("loop", self.k, bucket_packets(self.load.n_packets(self.k)),
-                    lbs.by_name(self.scheme).loop_shape_key(),
+        the bucketed packet count), and neither is the raw tree size: the
+        key carries the campaign's k-bucket head, to which every member's
+        topology operands pad (packet buckets are taken at the bucket-head
+        tree for the same reason).  Loop-engine points additionally key on
+        the static LoopConfig fields and the bucketed slot budget; loop
+        schemes with host/queue-shaped in-loop randomness keep the raw k
+        (tree padding would change their draws)."""
+        scheme = lbs.by_name(self.scheme)
+        if campaign.engine == "loop" or scheme.needs_feedback:
+            kb = (_kmap(campaign.trees)[self.k] if scheme.loop_kfusable()
+                  else self.k)
+            return ("loop", kb, bucket_packets(self.load.n_packets(kb)),
+                    scheme.loop_shape_key(),
                     loopsim.static_config(campaign.loop_config()),
                     pow2_bucket(max(int(campaign.max_slots), 1)))
-        return ("fast", self.k, bucket_packets(self.load.n_packets(self.k)),
-                lbs.by_name(self.scheme).shape_key(), campaign.backend,
+        kb = _kmap(campaign.trees)[self.k]
+        return ("fast", kb, bucket_packets(self.load.n_packets(kb)),
+                scheme.shape_key(), campaign.backend,
                 float(campaign.prop_slots))
 
 
@@ -82,6 +108,12 @@ class MegaBatch:
     @property
     def engine(self) -> str:
         return "loop" if self.key[0] == "loop" else "fast"
+
+    @property
+    def k_pad(self) -> int:
+        """Tree size every member's topology operands pad to (the k-bucket
+        head; equals the raw k for unbucketed members)."""
+        return self.key[1]
 
     @property
     def npk_pad(self) -> int:

@@ -108,7 +108,7 @@ def _run_fast_mega(mega: MegaBatch, campaign: Campaign, cache: _Cache):
     return fastsim.simulate_megabatch(items, prop_slots=campaign.prop_slots,
                                       backend=campaign.backend,
                                       npk_pad=mega.npk_pad,
-                                      n_shards=n_shards)
+                                      n_shards=n_shards, k_pad=mega.k_pad)
 
 
 def _run_loop_mega(mega: MegaBatch, campaign: Campaign, cache: _Cache):
@@ -126,7 +126,7 @@ def _run_loop_mega(mega: MegaBatch, campaign: Campaign, cache: _Cache):
                       b.g_converge))
     n_shards = "auto" if campaign.shard == "auto" else 1
     return loopsim.simulate_megabatch(items, npk_pad=mega.npk_pad,
-                                      n_shards=n_shards)
+                                      n_shards=n_shards, k_pad=mega.k_pad)
 
 
 def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,

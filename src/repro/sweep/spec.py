@@ -203,7 +203,8 @@ class Campaign:
 # Named presets: the paper's standing experiments.
 # ---------------------------------------------------------------------------
 
-def _table2(k: int = 8, seeds: Tuple[int, ...] = (0, 1, 2, 3)) -> Campaign:
+def _table2(trees: Tuple[int, ...] = (8,),
+            seeds: Tuple[int, ...] = (0, 1, 2, 3)) -> Campaign:
     """Fast-engine Table 2 contenders + DR schemes, permutation and
     all-to-all (the Fig. 1 comparison grid)."""
     return Campaign(
@@ -212,10 +213,25 @@ def _table2(k: int = 8, seeds: Tuple[int, ...] = (0, 1, 2, 3)) -> Campaign:
                  "switch_pkt_ar", "host_dr", "ofan"),
         loads=(WorkloadSpec("permutation", 256),
                WorkloadSpec("all_to_all", 8)),
-        trees=(k,), seeds=seeds)
+        trees=trees, seeds=seeds)
 
 
-def _theory(k: int = 8, seeds: Tuple[int, ...] = (0, 1, 2, 3)) -> Campaign:
+def _fig1(trees: Tuple[int, ...] = (4, 6, 8),
+          seeds: Tuple[int, ...] = (0, 1)) -> Campaign:
+    """The Fig. 1 contender comparison swept over fat-tree size: all three
+    trees pad to one k-bucket, so the whole grid runs as ONE fused dispatch
+    per compiled pipeline shape (4 shapes: pre/pre, rr_reset, jsq_quant,
+    ofan) -- dispatch count does not scale with the number of tree sizes."""
+    return Campaign(
+        name="fig1",
+        schemes=("flow_ecmp", "subflow_mptcp", "host_pkt", "switch_pkt",
+                 "switch_pkt_ar", "host_dr", "ofan"),
+        loads=(WorkloadSpec("permutation", 64),),
+        trees=trees, seeds=seeds)
+
+
+def _theory(trees: Tuple[int, ...] = (8,),
+            seeds: Tuple[int, ...] = (0, 1, 2, 3)) -> Campaign:
     """§6.1 simplified theory schemes over the Table-3 message-size ladder
     (inter-pod permutations; the queue-scaling-law clusters)."""
     return Campaign(
@@ -223,50 +239,56 @@ def _theory(k: int = 8, seeds: Tuple[int, ...] = (0, 1, 2, 3)) -> Campaign:
         schemes=("simple_rr", "jsq", "rsq", "host_pkt", "host_dr", "ofan"),
         loads=tuple(WorkloadSpec("permutation", m, inter_pod_only=True,
                                  rng_seed=2) for m in (64, 256, 1024)),
-        trees=(k,), seeds=seeds)
+        trees=trees, seeds=seeds)
 
 
-def _layer_balance(k: int = 8, seeds: Tuple[int, ...] = (5,)) -> Campaign:
+def _layer_balance(trees: Tuple[int, ...] = (8,),
+                   seeds: Tuple[int, ...] = (5,)) -> Campaign:
     """Fig. 7 worst-case per-layer overload study."""
     return Campaign(
         name="layer_balance",
         schemes=("simple_rr", "jsq", "host_pkt", "host_dr", "ofan"),
         loads=(WorkloadSpec("permutation", 256, inter_pod_only=True,
                             rng_seed=4),),
-        trees=(k,), seeds=seeds)
+        trees=trees, seeds=seeds)
 
 
-def _failures(k: int = 4, seeds: Tuple[int, ...] = (0,)) -> Campaign:
+def _failures(trees: Tuple[int, ...] = (4,),
+              seeds: Tuple[int, ...] = (0,)) -> Campaign:
     """Loop-engine failure study skeleton (examples/simulate_fabric.py runs
     its G-convergence sweep by widening the g_converge axis)."""
     return Campaign(
         name="failures",
         schemes=("host_pkt_ar", "switch_pkt_ar", "ofan"),
         loads=(WorkloadSpec("permutation", 64, inter_pod_only=True),),
-        trees=(k,), seeds=seeds,
+        trees=trees, seeds=seeds,
         failures=(FailureSpec(p_fail=0.08, rng_seed=42),),
         g_converge=(0,),
         engine="loop", max_slots=20000,
         loop_opts=(("rho", "auto"), ("rto_slots", 250)))
 
 
-def _fig12(k: int = 8, seeds: Tuple[int, ...] = (0, 1)) -> Campaign:
+def _fig12(trees: Tuple[int, ...] = (8,),
+           seeds: Tuple[int, ...] = (0, 1)) -> Campaign:
     """Fig. 12 SACK loss-recovery grid on the loop engine: the scheme x
     load x seed axes run as fused megabatch dispatches (host_pkt and
     host_dr share the 'pre/pre' slotted pipeline and fuse; adaptive and
-    switch schemes each compile their own shape)."""
+    switch schemes each compile their own shape).  Sweeping ``trees`` keeps
+    one dispatch per shape for every scheme except switch_pkt_ar, whose
+    in-loop JSQ randomness pins it to raw k (``LBScheme.loop_kfusable``)."""
     return Campaign(
         name="fig12",
         schemes=("host_pkt", "host_dr", "switch_pkt_ar", "host_pkt_ar",
                  "ofan"),
         loads=(WorkloadSpec("permutation", 256, rng_seed=1),),
-        trees=(k,), seeds=seeds,
+        trees=trees, seeds=seeds,
         engine="loop", max_slots=60000,
         loop_opts=(("loss", "sack"), ("sack_thresh", 32)))
 
 
 PRESETS = {
     "table2": _table2,
+    "fig1": _fig1,
     "theory": _theory,
     "layer_balance": _layer_balance,
     "failures": _failures,

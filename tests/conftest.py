@@ -8,10 +8,33 @@ if "xla_force_host_platform_device_count" not in _flags:
     os.environ["XLA_FLAGS"] = (
         _flags + " --xla_force_host_platform_device_count=2").strip()
 
-import numpy as np
-import pytest
+# Lock the backend NOW, before any test module imports.  Some in-repo modules
+# (repro.launch.dryrun / .perf) append their own 512-device forcing to
+# XLA_FLAGS at import time; if jax were still uninitialized when a test
+# module pulled one of them in, the device count the suite runs under would
+# depend on which subset of tests was collected and in what order.  Touching
+# jax.devices() here pins it: every `pytest -x -q` invocation -- full run or
+# single file -- sees the identical device topology.
+import jax  # noqa: E402
+
+_N_DEVICES = len(jax.devices())
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
 
 
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def two_devices():
+    """Tests exercising the sharded (shard_map) megabatch paths require the
+    two virtual CPU devices forced above.  If the user's environment pinned
+    a different device count via XLA_FLAGS, skip with a clear message
+    instead of failing deep inside a mesh construction."""
+    if _N_DEVICES < 2:
+        pytest.skip(f"sharded-path tests need >= 2 devices, have "
+                    f"{_N_DEVICES} (XLA_FLAGS pinned elsewhere?)")
+    return _N_DEVICES

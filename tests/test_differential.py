@@ -1,0 +1,215 @@
+"""Differential-testing layer for the fused campaign engines.
+
+Cross-tree-size fusion is the riskiest bitwise-parity surface in the repo: a
+padded core switch that silently absorbs one packet skews queue-depth tails
+without failing any coarse assertion.  Three independent oracles guard it:
+
+  1. **Property-based parity** (hypothesis, with the ``_hyp_fallback``
+     deterministic sweep when hypothesis isn't installed): randomized small
+     campaigns -- mixed tree sizes, traffic matrices, schemes, failures,
+     convergence times -- must produce bitwise-identical results through
+     ``simulate_megabatch`` (via the planner/runner) and per-point serial
+     ``simulate``, on BOTH engines.
+  2. **Cross-engine agreement**: on contention-free workloads under the
+     ideal fixed-rate CCA the two engines' timing models coincide exactly:
+     ``loopsim.delivered_slot == floor(fastsim.delivery)`` packet-for-packet
+     (hosts pace one packet/slot, queues never build, so the fractional
+     phase is the only difference).  Run across a *fused mixed-k grid* this
+     catches any padding bug one engine masks -- an absorbed or re-routed
+     packet shifts a completion slot in one engine but not the other.
+  3. **Sharded fusion**: the same mixed-k fused dispatch, ``shard_map``-ed
+     over the two virtual CPU devices, must not perturb either engine.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # pragma: no cover
+    from _hyp_fallback import given, settings, st
+
+from repro.net.topology import FatTree, rho_max
+from repro.net import workloads, fastsim, loopsim
+from repro.core import lb_schemes as lbs
+from repro import sweep
+from repro.sweep.runner import build_links, build_workload
+
+
+_TREES = (4, 6)
+
+
+def _assert_fast_equal(res, ref):
+    np.testing.assert_array_equal(res.delivery, ref.delivery)
+    np.testing.assert_array_equal(res.flow_completion, ref.flow_completion)
+    np.testing.assert_array_equal(res.a_used, ref.a_used)
+    np.testing.assert_array_equal(res.c_used, ref.c_used)
+    assert res.cct == ref.cct
+    assert res.max_queue == ref.max_queue
+    for name in ref.layers:
+        np.testing.assert_array_equal(res.layers[name].counts,
+                                      ref.layers[name].counts)
+        assert res.layers[name].max_queue == ref.layers[name].max_queue
+        assert res.layers[name].avg_wait == ref.layers[name].avg_wait
+
+
+def _assert_loop_equal(res, ref):
+    np.testing.assert_array_equal(res.delivered_slot, ref.delivered_slot)
+    np.testing.assert_array_equal(res.flow_complete_slot,
+                                  ref.flow_complete_slot)
+    np.testing.assert_array_equal(res.flow_data_done_slot,
+                                  ref.flow_data_done_slot)
+    assert res.cct_slots == ref.cct_slots
+    assert res.drops == ref.drops
+    assert res.retransmissions == ref.retransmissions
+    assert res.max_queue == ref.max_queue
+    assert res.avg_queue == ref.avg_queue
+    assert res.mean_cwnd == ref.mean_cwnd
+
+
+# ---------------------------------------------------------------------------
+# 1. Property-based megabatch-vs-serial parity (both engines).
+# ---------------------------------------------------------------------------
+
+# Schemes are drawn per-example but the compile universe stays bounded:
+# message sizes and tree sizes come from small fixed pools so repeated
+# examples reuse the in-process executable caches.
+
+@settings(max_examples=6, deadline=None)
+@given(st.sampled_from(("host_pkt", "host_dr", "switch_pkt", "ofan", "jsq")),
+       st.sampled_from((2, 3)),
+       st.integers(min_value=1, max_value=10_000),
+       st.sampled_from((None, 0.05, 0.1)))
+def test_random_fast_campaign_bitwise(scheme, msg, wl_seed, p_fail):
+    """Random mixed-k fast-engine campaigns: the fused planner/runner path
+    must reproduce per-point serial ``fastsim.simulate`` bitwise."""
+    failures = (None if p_fail is None
+                else sweep.FailureSpec(p_fail, rng_seed=wl_seed % 97))
+    c = sweep.Campaign(
+        name="diff_fast", schemes=(scheme,),
+        loads=(sweep.WorkloadSpec("permutation", msg, rng_seed=wl_seed),),
+        trees=_TREES, seeds=(0, 1), failures=(failures,))
+    plan = sweep.plan(c)
+    assert plan.n_dispatches == plan.n_shapes
+    _, full = sweep.run_campaign(c, keep_full=True)
+    assert len(full) == c.n_points
+    for point, res in full.items():
+        tree = FatTree(point.k)
+        ref = fastsim.simulate(tree, build_workload(tree, point.load),
+                               lbs.by_name(point.scheme), seed=point.seed,
+                               links=build_links(tree, point.failure))
+        _assert_fast_equal(res, ref)
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.sampled_from(("host_pkt", "host_dr", "ofan", "host_pkt_ar")),
+       st.integers(min_value=1, max_value=10_000),
+       st.sampled_from((None, 0.05)),
+       st.sampled_from((None, 0, 300)))
+def test_random_loop_campaign_bitwise(scheme, wl_seed, p_fail, g):
+    """Random mixed-k loop-engine campaigns (failures, convergence times and
+    rho_max riding the fused axis): the fused path must reproduce per-point
+    serial ``loopsim.simulate`` bitwise."""
+    failures = (None if p_fail is None
+                else sweep.FailureSpec(p_fail, rng_seed=wl_seed % 89))
+    c = sweep.Campaign(
+        name="diff_loop", schemes=(scheme,),
+        loads=(sweep.WorkloadSpec("permutation", 4, inter_pod_only=True,
+                                  rng_seed=wl_seed),),
+        trees=_TREES, seeds=(0,), failures=(failures,), g_converge=(g,),
+        engine="loop", max_slots=4000,
+        loop_opts=(("rho", "auto"), ("rto_slots", 300)))
+    plan = sweep.plan(c)
+    assert plan.n_dispatches == plan.n_shapes == 1
+    _, full = sweep.run_campaign(c, keep_full=True)
+    assert len(full) == c.n_points
+    for point, res in full.items():
+        tree = FatTree(point.k)
+        wl = build_workload(tree, point.load)
+        links = build_links(tree, point.failure)
+        rho = (rho_max(tree, links, wl.flow_src, wl.flow_dst)
+               if links is not None else 1.0)
+        ref = loopsim.simulate(tree, wl, lbs.by_name(point.scheme),
+                               c.loop_config(rho), seed=point.seed,
+                               links=links, g_converge=point.g_converge)
+        _assert_loop_equal(res, ref)
+
+
+# ---------------------------------------------------------------------------
+# 2. Cross-engine agreement on per-packet completion slots.
+# ---------------------------------------------------------------------------
+
+def _single_flow(tree: FatTree, m: int):
+    """One inter-pod flow: traverses all 5 queueing layers, no contention."""
+    return workloads._packets_from_flows(
+        "single", tree.n_hosts, np.array([0]),
+        np.array([tree.n_hosts - 1]), np.array([m]))
+
+
+def _same_edge_perm(tree: FatTree, m: int):
+    """Every host sends to the next slot of its own edge switch: each DN_E
+    queue serves exactly one 1-packet-per-slot flow -- contention-free."""
+    src = np.arange(tree.n_hosts)
+    dst = tree.host_id(tree.host_pod(src), tree.host_edge(src),
+                       (tree.host_slot(src) + 1) % tree.hosts_per_edge)
+    return workloads._packets_from_flows("same_edge", tree.n_hosts, src, dst,
+                                         np.full(tree.n_hosts, m))
+
+
+_XENGINE_CFG = loopsim.LoopConfig(rho=1.0, ack_cost=0.0, prop_slots=12,
+                                  max_slots=4000)
+
+
+@pytest.mark.parametrize("make_wl", (_single_flow, _same_edge_perm),
+                         ids=("single_flow", "same_edge"))
+@pytest.mark.parametrize("scheme", ("host_pkt", "host_dr", "ofan"))
+def test_engines_agree_on_completion_slots_cross_k(scheme, make_wl):
+    """Feedback-free schemes under the ideal fixed-rate CCA: on
+    contention-free traffic the slotted engine's per-packet delivery slot
+    equals floor() of the max-plus engine's delivery time, packet-for-packet
+    -- asserted across a MIXED-k fused dispatch on both engines, so a padded
+    switch absorbing or re-routing even one packet breaks the equality in
+    exactly one engine."""
+    sch = lbs.by_name(scheme)
+    trees = [FatTree(k) for k in _TREES]
+    wls = [make_wl(t, 12) for t in trees]
+    fast = fastsim.simulate_megabatch(
+        [(t, w, sch, [0], None) for t, w in zip(trees, wls)],
+        prop_slots=12.0)
+    loop = loopsim.simulate_megabatch(
+        [(t, w, sch, _XENGINE_CFG, [0], None, None)
+         for t, w in zip(trees, wls)])
+    for t, w, (fres,), (lres,) in zip(trees, wls, fast, loop):
+        # Premise: genuinely contention-free in both engines (the fast
+        # engine's occupancies are f32 differences, so "empty" is ~1e-6).
+        assert fres.max_queue < 0.5
+        assert lres.max_queue <= 1 and lres.drops == 0
+        np.testing.assert_array_equal(
+            lres.delivered_slot,
+            np.floor(fres.delivery).astype(lres.delivered_slot.dtype))
+
+
+# ---------------------------------------------------------------------------
+# 3. Mixed-k fusion through the sharded dispatch path.
+# ---------------------------------------------------------------------------
+
+def test_cross_k_sharded_megabatch_bitwise(two_devices):
+    """shard_map over a fused axis whose rows span two tree sizes must not
+    change results on either engine (3 rows also force the 3 -> 4 shard
+    divisibility padding)."""
+    trees = [FatTree(k) for k in _TREES]
+    wls = [workloads.permutation(t, 4, np.random.default_rng(5))
+           for t in trees]
+    sch = lbs.by_name("host_dr")
+    items_f = [(trees[0], wls[0], sch, [0, 1], None),
+               (trees[1], wls[1], sch, [0], None)]
+    for (t, w, s_, seeds, _), results in zip(
+            items_f, fastsim.simulate_megabatch(items_f, n_shards="auto")):
+        for seed, res in zip(seeds, results):
+            _assert_fast_equal(res, fastsim.simulate(t, w, s_, seed=seed))
+    cfg = loopsim.LoopConfig(max_slots=4000)
+    items_l = [(trees[0], wls[0], sch, cfg, [0, 1], None, None),
+               (trees[1], wls[1], sch, cfg, [0], None, None)]
+    for (t, w, s_, c, seeds, _, _), results in zip(
+            items_l, loopsim.simulate_megabatch(items_l, n_shards="auto")):
+        for seed, res in zip(seeds, results):
+            _assert_loop_equal(res, loopsim.simulate(t, w, s_, c, seed=seed))

@@ -207,12 +207,10 @@ def test_megabatch_fuses_failure_and_g_axes_bitwise(tree, wl):
                                                      links=l, g_converge=g))
 
 
-def test_megabatch_sharded_bitwise_identical(tree, wl):
+def test_megabatch_sharded_bitwise_identical(tree, wl, two_devices):
     """shard_map over the fused axis (2 virtual devices from conftest's
     XLA_FLAGS) must not change results; the 3-element batch also forces the
     shard-divisibility padding path (3 -> 4)."""
-    import jax
-    assert len(jax.devices()) >= 2
     cfg = _CFGS["sack"]
     items = [(tree, wl, lbs.ofan(), cfg, [0, 1, 2], None, None)]
     (results,) = loopsim.simulate_megabatch(items, n_shards="auto")

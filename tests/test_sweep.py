@@ -1,5 +1,6 @@
 """Campaign subsystem: batched-vs-serial equivalence, planner grouping,
 result-store determinism, and spec round-trips."""
+import dataclasses
 import json
 
 import numpy as np
@@ -185,12 +186,10 @@ def test_megabatch_fuses_schemes_bitwise(tree, perm_wl):
                 res.a_used, fastsim.simulate(t, w, s_, seed=seed).a_used)
 
 
-def test_megabatch_sharded_bitwise_identical(tree, perm_wl):
+def test_megabatch_sharded_bitwise_identical(tree, perm_wl, two_devices):
     """shard_map over the fused axis (2 virtual devices from conftest's
     XLA_FLAGS) must not change results; the 3x3=9-element batch also forces
     the divisibility padding path (9 -> 10)."""
-    import jax
-    assert len(jax.devices()) >= 2
     items = [(tree, perm_wl, lbs.by_name(n), [0, 1, 2], None)
              for n in ("flow_ecmp", "host_pkt", "host_dr")]
     sharded = fastsim.simulate_megabatch(items, n_shards="auto")
@@ -358,6 +357,72 @@ def test_compile_cache_persists_executables(tmp_path):
                        compile_cache_dir=str(cache_dir))
     entries = list(cache_dir.iterdir())
     assert entries, "persistent compile cache left no entries"
+
+
+def test_cross_k_grid_one_dispatch_per_engine():
+    """Acceptance: a grid sweeping k in {4, 6, 8} with fixed schemes/loads
+    runs as ONE fused dispatch per (engine, packet-bucket) -- n_dispatches
+    no longer scales with the number of tree sizes (the whole bucket pads
+    to k=8 and the packet bucket is taken at the bucket head)."""
+    for extra in ({}, dict(engine="loop", max_slots=4000)):
+        c = sweep.Campaign(name="kk", schemes=("host_pkt", "host_dr"),
+                           loads=(sweep.WorkloadSpec("permutation", 4),),
+                           trees=(4, 6, 8), seeds=(0,), **extra)
+        p = sweep.plan(c)
+        assert p.n_dispatches == p.n_shapes == 1
+        assert {b.k for m in p.megabatches for b in m.members} == {4, 6, 8}
+        assert p.megabatches[0].k_pad == 8
+
+
+def _axes_reversed(c):
+    return dataclasses.replace(
+        c, schemes=tuple(reversed(c.schemes)), loads=tuple(reversed(c.loads)),
+        trees=tuple(reversed(c.trees)), seeds=tuple(reversed(c.seeds)),
+        failures=tuple(reversed(c.failures)),
+        g_converge=tuple(reversed(c.g_converge)))
+
+
+@pytest.mark.parametrize("name", sorted(sweep.PRESETS))
+def test_preset_planner_invariants(name):
+    """Every CLI preset plans one dispatch per compiled shape, covers the
+    full grid, and its fused keys are stable under grid permutation."""
+    c = sweep.preset(name)
+    p = sweep.plan(c)
+    assert p.n_dispatches == p.n_shapes
+    assert p.n_points == c.n_points
+    assert sum(len(b.seeds) for m in p.megabatches
+               for b in m.members) == c.n_points
+    p2 = sweep.plan(_axes_reversed(c))
+    assert {m.key for m in p2.megabatches} == {m.key for m in p.megabatches}
+    assert p2.n_dispatches == p.n_dispatches
+
+
+@pytest.mark.parametrize("name", sorted(sweep.PRESETS))
+def test_preset_dispatches_independent_of_k_bucket_population(name):
+    """How many k values share a bucket must not change the dispatch count:
+    k-fusable work keeps the *identical* fused keys whether the bucket holds
+    one tree or three, and only raw-k loop schemes (rand/JSQ in-loop
+    randomness) scale with the tree count."""
+    c = sweep.preset(name)
+    base_k = max(c.trees)
+    ks = tuple(k for k in (base_k, base_k - 2, base_k - 4)
+               if k >= max(4, -(-base_k // 2)))
+    p1 = sweep.plan(dataclasses.replace(c, trees=(base_k,)))
+    pn = sweep.plan(dataclasses.replace(c, trees=ks))
+
+    def split(p):
+        fused, raw = [], []
+        for m in p.megabatches:
+            ok = (m.engine == "fast"
+                  or all(lbs.by_name(b.scheme).loop_kfusable()
+                         for b in m.members))
+            (fused if ok else raw).append(m.key)
+        return fused, raw
+
+    f1, r1 = split(p1)
+    fn, rn = split(pn)
+    assert set(fn) == set(f1) and len(fn) == len(f1)
+    assert len(rn) == len(r1) * len(ks)
 
 
 def test_scheme_shape_key_groups_pre_modes():
