@@ -39,6 +39,12 @@ shape) and once as the per-k campaign pattern it replaces (one campaign
 per tree size, each compiling its own pipeline shape).  Per-point CCTs are
 verified identical before timing is reported.
 
+A **loop-engine cross-k sample** (``"kfuse_loop"`` key) does the same for
+the slotted engine's randomized switch schemes (rand + quantized JSQ) --
+the family whose in-loop draws used to pin fused keys to raw ``k`` and now
+rides counter streams (``core.entropy``): a (scheme x tree x seed) grid as
+one fused dispatch per scheme vs one campaign per tree size.
+
 Per-point results are verified identical (exact CCT equality) between the
 megabatched and serial paths before any timing is reported.  Results are
 appended-by-overwrite to ``BENCH_sweep.json`` at the repo root so the perf
@@ -177,6 +183,55 @@ def _kfuse_sample():
     }
 
 
+def _kfuse_loop_sample():
+    """Loop-engine cross-k fusion for rand/JSQ switch schemes: each scheme's
+    (tree size x seed) slice runs as ONE fused slotted dispatch at the
+    k-bucket head vs the per-k campaign pattern those schemes were pinned
+    to before counter-stream randomness.  CCTs verified identical first."""
+    trees = (4, 6) if SMOKE else (4, 6, 8)
+    seeds = tuple(range(1 if SMOKE else 2))
+    schemes = ("rsq", "switch_pkt_ar")
+    load = sweep.WorkloadSpec("permutation", 8 if SMOKE else 32, rng_seed=1)
+
+    fused_c = sweep.Campaign(name="sweep_bench_kfuse_loop", schemes=schemes,
+                             loads=(load,), trees=trees, seeds=seeds,
+                             engine="loop", max_slots=20000)
+    p = sweep.plan(fused_c)
+    assert p.n_dispatches == p.n_shapes == len(schemes), p.describe()
+
+    _clear_compile_caches()
+    t0 = time.perf_counter()
+    records, _ = sweep.run_campaign(fused_c)
+    fused_s = time.perf_counter() - t0
+
+    _clear_compile_caches()
+    t0 = time.perf_counter()
+    per_k_records = []
+    for k in trees:
+        recs, _ = sweep.run_campaign(sweep.Campaign(
+            name="sweep_bench_kfuse_loop", schemes=schemes, loads=(load,),
+            trees=(k,), seeds=seeds, engine="loop", max_slots=20000))
+        per_k_records.extend(recs)
+    per_k_s = time.perf_counter() - t0
+
+    fused_cct = {(r["scheme"], r["k"], r["seed"]): r["cct"] for r in records}
+    per_k_cct = {(r["scheme"], r["k"], r["seed"]): r["cct"]
+                 for r in per_k_records}
+    assert fused_cct == per_k_cct, ("loop cross-k fused CCTs diverge from "
+                                    "per-k")
+
+    return {
+        "grid": {"trees": list(trees), "msg_packets": load.msg_packets,
+                 "schemes": list(schemes), "n_seeds": len(seeds),
+                 "points": fused_c.n_points},
+        "plan": {"n_dispatches": p.n_dispatches, "n_shapes": p.n_shapes,
+                 "k_pad": p.megabatches[0].k_pad},
+        "fused_s": round(fused_s, 3),
+        "per_k_s": round(per_k_s, 3),
+        "speedup_vs_per_k": round(per_k_s / fused_s, 2),
+    }
+
+
 def sweep_speedup(scale: C.Scale):
     """Grid-completion wall time: megabatched campaign vs per-scheme batched
     (PR1) vs serial loops."""
@@ -260,6 +315,7 @@ def sweep_speedup(scale: C.Scale):
         "speedup_vs_pr1": round(speedup_pr1, 2),
         "loop": _loop_sample(k, tree),
         "kfuse": _kfuse_sample(),
+        "kfuse_loop": _kfuse_loop_sample(),
     }
     BENCH_JSON.write_text(json.dumps(result, indent=2) + "\n")
     C.emit("sweep_speedup", batch_s * 1e6 / n_points,
@@ -275,5 +331,7 @@ def sweep_speedup(scale: C.Scale):
            loop_dispatches=result["loop"]["plan"]["n_dispatches"],
            kfuse_speedup=result["kfuse"]["speedup_vs_per_k"],
            kfuse_dispatches=result["kfuse"]["plan"]["n_dispatches"],
+           kfuse_loop_speedup=result["kfuse_loop"]["speedup_vs_per_k"],
+           kfuse_loop_dispatches=result["kfuse_loop"]["plan"]["n_dispatches"],
            points=n_points, dispatches=p.n_dispatches, shapes=p.n_shapes)
     return result

@@ -36,13 +36,6 @@ from ..net.topology import FatTree
 from . import dr as dr_mod
 
 
-# Port-choice modes whose slotted-engine randomness is drawn with host- or
-# queue-shaped arrays: tree-size padding resizes those draws, so these modes
-# cannot cross-k fuse bitwise on the loop engine.  Single source of truth for
-# LBScheme.loop_kfusable (planner) and loopsim's runtime guard.
-LOOP_KFUSE_UNSAFE_MODES = ("rand", "jsq", "jsq_quant")
-
-
 @dataclasses.dataclass(frozen=True)
 class LBScheme:
     name: str
@@ -94,15 +87,14 @@ class LBScheme:
     def loop_kfusable(self) -> bool:
         """Whether the slotted engine can pad this scheme's points onto a
         larger fat tree while staying bitwise-identical (the planner's
-        cross-tree-size fusion).  Pointer and host-label schemes qualify:
-        their randomness is drawn host-side or from shape-independent pools.
-        rand/JSQ switch modes draw in-loop randomness with host- and
-        queue-shaped arrays, which a padded tree would resize -- changing
-        the drawn values -- so they must group by raw ``k``.  (The fast
-        engine draws all randomness host-side; every scheme k-fuses there.)
+        cross-tree-size fusion).  Always True: pointer and host-label
+        schemes draw host-side or from shape-independent pools, and
+        rand/JSQ switch modes draw in-loop from the counter streams of
+        ``core.entropy`` -- pure functions of (seed, draw site, logical
+        host/packet id, slot) that padding cannot perturb.  Retained (as a
+        constant) for API stability; no planner branch keys on it anymore.
         """
-        return (self.edge_mode not in LOOP_KFUSE_UNSAFE_MODES
-                and self.agg_mode not in LOOP_KFUSE_UNSAFE_MODES)
+        return True
 
     def loop_shape_key(self) -> Tuple:
         """Hashable key of everything that determines the compiled *loop*

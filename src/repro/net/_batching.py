@@ -22,7 +22,10 @@ copies:
     count by replicating the tail element (results are dropped);
   * :func:`rank_by` -- rank of each element among same-key valid elements,
     the associative-scan arbitration primitive the slotted engine uses for
-    same-slot switch arrivals.
+    same-slot switch arrivals;
+  * :func:`port_pad_penalty` -- the JSQ guard both engines add to their
+    port-choice scores so tree-size padding can never elect a port beyond a
+    point's logical ``k/2``.
 """
 from __future__ import annotations
 
@@ -149,6 +152,21 @@ def shard_pad(stacked: Dict, n_batch: int, n_shards: int):
     return jax.tree_util.tree_map(
         lambda x: np.concatenate(
             [x, np.repeat(x[-1:], b_pad - n_batch, axis=0)]), stacked)
+
+
+def port_pad_penalty(h: int, h_log) -> jnp.ndarray:
+    """(h,) float32 additive JSQ score penalty masking padded port columns.
+
+    Ports at indices >= ``h_log`` (the point's logical ``k/2``, a per-row
+    operand) exist only because the pipeline is compiled for a larger padded
+    tree; a huge penalty keeps ``argmin`` off them.  Real ports get ``0.0``,
+    which is bitwise-neutral on the non-negative queue scores both engines
+    build -- an unpadded point (``h_log == h``) is untouched.  Padded-tree
+    queues are empty, so without this guard pre-convergence JSQ would
+    happily elect a phantom empty port.
+    """
+    return jnp.where(jnp.arange(h) >= h_log, jnp.float32(1e9),
+                     jnp.float32(0.0))
 
 
 def rank_by(keys: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:

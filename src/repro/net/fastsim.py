@@ -54,8 +54,9 @@ from .topology import (FatTree, LinkState, N_LAYERS, LAYER_NAMES,
                        UP_E, UP_A, DN_C, DN_A, DN_E)
 from .workloads import Workload
 from ._batching import (TreePad, pad_tail as _pad_tail, pad_to_group_max,
-                        shard_pad)
+                        port_pad_penalty, shard_pad)
 from ..core.lb_schemes import LBScheme, precompute_host_choices
+from ..core import entropy as ent
 from ..core import ofan as ofan_mod
 
 _NEG = -1.0e9
@@ -190,10 +191,8 @@ def _jsq_layer(switch, a, tie, active, *, n_switches: int, pad: int, h: int,
     if quanta is not None:
         thresholds = jnp.asarray(quanta, jnp.float32) * buffer_pkts
     # Ports beyond the point's logical k/2 exist only because the grid is
-    # padded to a larger tree's width; a huge additive penalty keeps argmin
-    # off them (exact no-op when h_log == h: adding 0.0 is bitwise-neutral).
-    port_pen = jnp.where(jnp.arange(h) >= h_log, jnp.float32(1e9),
-                         jnp.float32(0.0))
+    # padded to a larger tree's width (shared guard with the slotted engine).
+    port_pen = port_pad_penalty(h, h_log)
 
     def step(d_last, inp):
         t, ok, nz = inp
@@ -438,10 +437,18 @@ def _draw_seed_inputs(plan: SimPlan, seed: int) -> dict:
         tables_a = {"orders": ot.agg_orders, "starts": ot.agg_starts,
                     "lens": ot.agg_len}
 
+    # JSQ tie-break noise comes from the counter streams (core.entropy),
+    # keyed on (seed, site, logical switch id, arrival rank, port): the
+    # same function the slotted engine evaluates in-loop, precomputed here
+    # because the fast engine knows its arrival ranks host-side.  Growing
+    # the rank axis (pad-overflow retry, megabatch group-wide padding)
+    # extends the grid without perturbing existing entries.
     noise_e = noise_a = np.zeros((1, 1, 1), np.float32)
     if plan.jsq:
-        noise_e = rng.random((n_edges, plan.pad_e, h)).astype(np.float32)
-        noise_a = rng.random((n_aggs, plan.pad_a, h)).astype(np.float32)
+        noise_e = ent.uniform_grid(seed, ent.SITE_FAST_EDGE_JSQ,
+                                   n_edges, plan.pad_e, h)
+        noise_a = ent.uniform_grid(seed, ent.SITE_FAST_AGG_JSQ,
+                                   n_aggs, plan.pad_a, h)
 
     return dict(t_rel=t_rel, tie=tie,
                 a_pre=a_pre if a_pre is not None else np.zeros(npk, np.int32),

@@ -49,6 +49,16 @@ is bitwise-safe: pad flows have ``fsize = 0`` and therefore never become
 sendable, pad packets are never referenced by any live flow, and padded
 ``host_flows`` slots rank below every real flow in the host round-robin.
 
+In-loop randomness (rand spraying, JSQ tie-break noise) comes from the
+stateless counter streams of :mod:`repro.core.entropy`: every draw is a
+pure function of (seed, draw site, *logical* host/packet id, slot, port),
+never of array shapes or batch position.  Hosts and packets are dense
+prefixes of any padded id space, so a point padded onto a larger tree's
+compiled engine -- or onto a fused megabatch axis -- draws bitwise-identical
+values, which is what lets rand/JSQ switch schemes cross-tree-size fuse
+like every other scheme (padded port columns are masked out of JSQ argmins
+via :func:`~._batching.port_pad_penalty`).
+
 Documented approximations (vs. an event-driven byte-level simulator):
   * ACK return time is constant (no ACK queueing);
   * the SACK sender picks retransmit sequence numbers from the receiver
@@ -69,9 +79,10 @@ import jax.numpy as jnp
 
 from .topology import FatTree, LinkState
 from .workloads import Workload
-from ._batching import TreePad, pad_tail, pad_to_group_max, rank_by, shard_pad
-from ..core.lb_schemes import (LBScheme, LOOP_KFUSE_UNSAFE_MODES,
-                               precompute_host_choices)
+from ._batching import (TreePad, pad_tail, pad_to_group_max,
+                        port_pad_penalty, rank_by, shard_pad)
+from ..core.lb_schemes import LBScheme, precompute_host_choices
+from ..core import entropy as ent
 from ..core import ofan as ofan_mod
 
 INT = jnp.int32
@@ -308,6 +319,7 @@ def _draw_seed_inputs(plan: LoopPlan, seed: int) -> dict:
     h = tree.half
     P = wl.n_packets
     rng = np.random.default_rng(seed)
+    key_lo, key_hi = ent.key_words(seed)
 
     a_stale = c_stale = a_conv = c_conv = None
     if scheme.edge_mode == "pre":
@@ -343,7 +355,10 @@ def _draw_seed_inputs(plan: LoopPlan, seed: int) -> dict:
         ofan_a_orders=_tbl(ofan_stale, ofan_conv, "agg_orders"),
         ofan_a_starts=_tbl(ofan_stale, ofan_conv, "agg_starts"),
         ofan_a_len=_tbl(ofan_stale, ofan_conv, "agg_len"),
-        seed=np.int64(seed),
+        # Counter-stream key words: the in-loop randomness operands.  Draws
+        # are pure functions of (seed, site, logical id, slot), so they ride
+        # any padding/batching unchanged (core.entropy).
+        seed_lo=key_lo, seed_hi=key_hi,
     )
 
 
@@ -413,25 +428,14 @@ def simulate_batch(tree: FatTree, wl: Workload, scheme: LBScheme,
             for i in range(len(seeds))]
 
 
-def _kfuse_safe(static: _Static) -> bool:
-    """Shape-independent in-loop randomness?  (rand/JSQ modes draw over
-    ``(n,)`` / ``(n, h)`` / move-list shapes, which tree padding resizes --
-    single source of truth in ``lb_schemes.LOOP_KFUSE_UNSAFE_MODES``.)"""
-    return (static.edge_mode not in LOOP_KFUSE_UNSAFE_MODES
-            and static.agg_mode not in LOOP_KFUSE_UNSAFE_MODES)
-
-
 def _pipeline_identity(plan: LoopPlan) -> _Static:
-    """Everything two plans must agree on to share one megabatched dispatch
-    (packet/flow/host-flow axes are padded; tree dims additionally pad to
-    the group's largest k for schemes whose in-loop randomness is
-    shape-independent; this is the rest: scheme modes and the static
-    LoopConfig fields)."""
-    st = dataclasses.replace(plan.static, P=0, F=0, Fh=0)
-    if _kfuse_safe(st):
-        st = dataclasses.replace(st, n=0, h=0, mid=0, n_edges=0, n_aggs=0,
-                                 n_pods=0)
-    return st
+    """Everything two plans must agree on to share one megabatched dispatch:
+    scheme modes and the static LoopConfig fields.  Packet/flow/host-flow
+    axes are padded, and tree dims pad to the group's largest k for EVERY
+    scheme -- in-loop randomness comes from counter streams keyed on logical
+    ids (``core.entropy``), so the draws survive padding."""
+    return dataclasses.replace(plan.static, P=0, F=0, Fh=0, n=0, h=0, mid=0,
+                               n_edges=0, n_aggs=0, n_pods=0)
 
 
 def _repad_tables(st: dict, plan: LoopPlan, tp: TreePad) -> dict:
@@ -525,9 +529,12 @@ def simulate_megabatch(items, *, npk_pad: Optional[int] = None,
     ``k_pad`` (default: the largest tree among the items) is the fat-tree
     size every member's topology operands pad to; the planner passes the
     k-bucket head so campaigns sweeping tree size share one compile.
-    Tree-size padding is only available for schemes whose in-loop
-    randomness is shape-independent (pointer and host-label schemes; see
-    ``_KFUSE_UNSAFE``) -- rand/JSQ switch schemes must group by raw ``k``.
+    Tree-size padding holds for EVERY scheme, including rand/JSQ switch
+    modes: their in-loop draws come from the counter streams of
+    ``core.entropy`` (keyed on seed, draw site, logical host/packet id and
+    slot), so padding extends the id range the stream is evaluated over
+    without perturbing any real entity's draws, and padded JSQ port columns
+    are masked out of the argmin (``_batching.port_pad_penalty``).
 
     Returns one list of :class:`LoopSimResult` per item (aligned with its
     ``seeds``); every result is bitwise-identical to the standalone
@@ -549,13 +556,6 @@ def simulate_megabatch(items, *, npk_pad: Optional[int] = None,
 
     k_max = max(p.tree.k for p in plans)
     k_pad = k_max if k_pad is None else max(int(k_pad), k_max)
-    if k_pad != k_max or len({p.tree.k for p in plans}) > 1:
-        bad = [p.scheme.name for p in plans if not _kfuse_safe(p.static)]
-        if bad:
-            raise ValueError(
-                f"schemes {sorted(set(bad))} draw host/queue-shaped in-loop "
-                f"randomness; tree-size padding would change their draws -- "
-                f"group these points by raw k")
     tree_pad = next((p.tree for p in plans if p.tree.k == k_pad),
                     FatTree(k_pad))
     pads = [TreePad(p.tree, tree_pad) for p in plans]
@@ -656,7 +656,8 @@ _STATIC_KEYS = ("fsrc", "fdst", "fsize", "pkt_base", "fp1", "fe1", "fp2",
 _SEED_KEYS = ("a_stale", "c_stale", "a_conv", "c_conv", "rand_pool",
               "rr_starts_e", "rr_starts_a",
               "ofan_e_orders", "ofan_e_starts", "ofan_e_len",
-              "ofan_a_orders", "ofan_a_starts", "ofan_a_len", "seed")
+              "ofan_a_orders", "ofan_a_starts", "ofan_a_len",
+              "seed_lo", "seed_hi")
 _ARG_ORDER = _STATIC_KEYS + _SEED_KEYS
 
 
@@ -694,7 +695,7 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
             a_stale, c_stale, a_conv, c_conv, rand_pool,
             rr_starts_e, rr_starts_a,
             ofan_e_orders, ofan_e_starts, ofan_e_len,
-            ofan_a_orders, ofan_a_starts, ofan_a_len, seed):
+            ofan_a_orders, ofan_a_starts, ofan_a_len, seed_lo, seed_hi):
     cfg = s.cfg
     n, h, mid, F, P, Fh = s.n, s.h, s.mid, s.F, s.P, s.Fh
     CAP = cfg.buffer_pkts
@@ -705,6 +706,9 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
     ecn_thresh = jnp.int32(max(1, int(cfg.ecn_frac * CAP)))
     OFF = (0, mid, 2 * mid, 3 * mid, 4 * mid)
     PBASE = pkt_base[:F]
+    # JSQ guard for tree-size padding: +1e9 on port columns >= h_log (the
+    # all-zero no-op when this point runs unpadded).
+    pad_pen = port_pad_penalty(h, h_log)
 
     st0 = dict(
         t=jnp.int32(0),
@@ -751,15 +755,11 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
         max_q=jnp.int32(0),
         sum_q=jnp.float32(0.0),
         enq_events=jnp.int32(0),
-        key=jax.random.PRNGKey(seed.astype(jnp.uint32) if hasattr(seed, "astype")
-                               else 0),
     )
 
     def step(st_in):
         st = dict(st_in)
         t = st["t"]
-        key, k1, k2, k3 = jax.random.split(st["key"], 4)
-        st["key"] = key
         converged = t >= G
         ci = converged.astype(INT)
 
@@ -925,11 +925,16 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
             sw = (fp1[sfv] * h + fe1[sfv]).astype(INT)
             de = (fp2[sfv] * h + fe2[sfv]).astype(INT)
             gp = sw * s.n_edges + de
-            r = jax.random.randint(k1, (n,), 0, h * h)
-            a_naive = (r // h).astype(INT)
+            # Per-host spray draw over the LOGICAL (a, c) label space, from
+            # the counter stream keyed on (seed, host id, slot): identical
+            # for every real host at any padding (hosts are a dense prefix;
+            # padded hosts never send, so their draws are inert).
+            r = ent.draw_int(seed_lo, seed_hi, ent.SITE_EDGE_RAND,
+                             jnp.arange(n), t, h_log * h_log)
+            a_naive = (r // h_log).astype(INT)
             a_live = e_ports[gp, r % jnp.maximum(e_pcnt[gp], 1)].astype(INT)
             a_new = jnp.where(converged, a_live, a_naive)
-            c_new = (r % h).astype(INT)
+            c_new = (r % h_log).astype(INT)
         elif s.edge_mode in ("rr", "rr_reset", "ofan"):
             sw = (fp1[sfv] * h + fe1[sfv]).astype(INT)
             north = do_send & f_leaves[sfv]
@@ -961,13 +966,19 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
             de = (fp2[sfv] * h + fe2[sfv]).astype(INT)
             qbase = OFF[0] + sw * h
             lens = st["qcnt"][qbase[:, None] + jnp.arange(h)[None, :]]
-            nz = jax.random.uniform(k1, (n, h))
+            # Tie-break noise from the counter stream keyed on (seed, host
+            # id, slot, port lane): shape-independent, so the same host sees
+            # the same noise at any padding/batch position.
+            nz = ent.draw_uniform(seed_lo, seed_hi, ent.SITE_EDGE_JSQ,
+                                  jnp.arange(n)[:, None], t,
+                                  lane=jnp.arange(h)[None, :])
             if s.quanta is None:
                 score = lens.astype(jnp.float32) + nz * 1e-3
             else:
                 thr = jnp.asarray(s.quanta, jnp.float32) * CAP
                 bins = jnp.sum(lens[:, :, None] > thr[None, None, :], axis=2)
                 score = bins.astype(jnp.float32) + nz * 0.5
+            score = score + pad_pen[None, :]
             score = score + jnp.where(converged & e_dead[sw, de], 1e9, 0.0)
             a_new = jnp.argmin(score, axis=1).astype(INT)
             c_new = jnp.zeros((n,), INT)
@@ -1002,7 +1013,12 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
         if s.agg_mode in ("pre", "rand"):
             c_fin = st["p_c"][apkc]
             if s.agg_mode == "rand":
-                r = jax.random.randint(k2, apk.shape, 0, h)
+                # Per-packet draw over the LOGICAL core sub-links, keyed on
+                # (seed, packet id, slot): the packet's identity -- not its
+                # position in the (padding-sized) move list -- selects the
+                # stream value, so draws survive any tree/batch padding.
+                r = ent.draw_int(seed_lo, seed_hi, ent.SITE_AGG_RAND,
+                                 apkc, t, h_log)
                 c_live = a_ports[gpa, r % jnp.maximum(a_pcnt[gpa], 1)]
                 c_fin = jnp.where(converged, c_live, r).astype(INT)
         elif s.agg_mode in ("rr", "rr_reset", "ofan"):
@@ -1028,13 +1044,17 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
         else:  # jsq at agg
             qbase = OFF[1] + asw * h
             lens = st["qcnt"][qbase[:, None] + jnp.arange(h)[None, :]]
-            nz = jax.random.uniform(k2, lens.shape)
+            # Noise keyed on (seed, arriving packet id, slot, port lane).
+            nz = ent.draw_uniform(seed_lo, seed_hi, ent.SITE_AGG_JSQ,
+                                  apkc[:, None], t,
+                                  lane=jnp.arange(h)[None, :])
             if s.quanta is None:
                 score = lens.astype(jnp.float32) + nz * 1e-3
             else:
                 thr = jnp.asarray(s.quanta, jnp.float32) * CAP
                 bins = jnp.sum(lens[:, :, None] > thr[None, None, :], axis=2)
                 score = bins.astype(jnp.float32) + nz * 0.5
+            score = score + pad_pen[None, :]
             score = score + jnp.where(converged & a_dead[asw, fp2[af]],
                                       1e9, 0.0)
             c_fin = jnp.argmin(score, axis=1).astype(INT)

@@ -27,10 +27,11 @@ campaign pads its topology operands to the largest ``k`` of its bucket, so
 fused keys carry the k-bucket head instead of the raw ``k`` and a grid
 sweeping tree size costs ONE dispatch per compiled shape, not one per tree.
 Packet buckets are taken at the bucket-head tree (``n_packets(k_pad)``) so
-the packet axis can't silently re-split what the k axis fused.  The one
-exception: loop-engine schemes whose in-loop randomness is host/queue-shaped
-(rand/JSQ modes, ``LBScheme.loop_kfusable() == False``) key on raw ``k`` --
-padding would change their random draws and break bitwise parity.
+the packet axis can't silently re-split what the k axis fused.  This holds
+for EVERY scheme on BOTH engines: loop-engine rand/JSQ in-loop randomness
+comes from counter streams keyed on logical ids (``core.entropy``), so
+tree padding cannot perturb the draws and no fused key carries a raw ``k``
+anywhere.
 """
 from __future__ import annotations
 
@@ -80,13 +81,13 @@ class SeedBatch:
         key carries the campaign's k-bucket head, to which every member's
         topology operands pad (packet buckets are taken at the bucket-head
         tree for the same reason).  Loop-engine points additionally key on
-        the static LoopConfig fields and the bucketed slot budget; loop
-        schemes with host/queue-shaped in-loop randomness keep the raw k
-        (tree padding would change their draws)."""
+        the static LoopConfig fields and the bucketed slot budget; in-loop
+        randomness is counter-stream based (``core.entropy``), so rand/JSQ
+        loop schemes bucket like every other scheme -- no fused key carries
+        a raw k."""
         scheme = lbs.by_name(self.scheme)
         if campaign.engine == "loop" or scheme.needs_feedback:
-            kb = (_kmap(campaign.trees)[self.k] if scheme.loop_kfusable()
-                  else self.k)
+            kb = _kmap(campaign.trees)[self.k]
             return ("loop", kb, bucket_packets(self.load.n_packets(kb)),
                     scheme.loop_shape_key(),
                     loopsim.static_config(campaign.loop_config()),

@@ -273,9 +273,10 @@ def _fig12(trees: Tuple[int, ...] = (8,),
     """Fig. 12 SACK loss-recovery grid on the loop engine: the scheme x
     load x seed axes run as fused megabatch dispatches (host_pkt and
     host_dr share the 'pre/pre' slotted pipeline and fuse; adaptive and
-    switch schemes each compile their own shape).  Sweeping ``trees`` keeps
-    one dispatch per shape for every scheme except switch_pkt_ar, whose
-    in-loop JSQ randomness pins it to raw k (``LBScheme.loop_kfusable``)."""
+    switch schemes each compile their own shape).  Sweeping ``trees``
+    keeps one dispatch per shape for EVERY scheme -- switch_pkt_ar's
+    in-loop JSQ randomness rides counter streams keyed on logical ids
+    (``core.entropy``), so it k-buckets like the rest."""
     return Campaign(
         name="fig12",
         schemes=("host_pkt", "host_dr", "switch_pkt_ar", "host_pkt_ar",

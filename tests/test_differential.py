@@ -101,14 +101,17 @@ def test_random_fast_campaign_bitwise(scheme, msg, wl_seed, p_fail):
 
 
 @settings(max_examples=4, deadline=None)
-@given(st.sampled_from(("host_pkt", "host_dr", "ofan", "host_pkt_ar")),
+@given(st.sampled_from(("host_pkt", "host_dr", "ofan", "host_pkt_ar",
+                        "rsq")),
        st.integers(min_value=1, max_value=10_000),
        st.sampled_from((None, 0.05)),
        st.sampled_from((None, 0, 300)))
 def test_random_loop_campaign_bitwise(scheme, wl_seed, p_fail, g):
     """Random mixed-k loop-engine campaigns (failures, convergence times and
     rho_max riding the fused axis): the fused path must reproduce per-point
-    serial ``loopsim.simulate`` bitwise."""
+    serial ``loopsim.simulate`` bitwise.  The scheme pool includes ``rsq``:
+    in-loop rand draws now come from shape-independent counter streams, so
+    randomized switch schemes fuse across tree sizes like everything else."""
     failures = (None if p_fail is None
                 else sweep.FailureSpec(p_fail, rng_seed=wl_seed % 89))
     c = sweep.Campaign(
@@ -132,6 +135,64 @@ def test_random_loop_campaign_bitwise(scheme, wl_seed, p_fail, g):
                                c.loop_config(rho), seed=point.seed,
                                links=links, g_converge=point.g_converge)
         _assert_loop_equal(res, ref)
+
+
+def test_mixed_k_rand_jsq_loop_campaign_bitwise():
+    """Acceptance for counter-stream randomness: a mixed-k loop campaign of
+    ONLY rand/JSQ schemes -- the family the paper's host-vs-switch spraying
+    comparison stresses, and the last one excluded from cross-tree-size
+    fusion -- plans to one dispatch per compiled shape (no raw-k keys) and
+    reproduces per-point serial ``loopsim.simulate`` bitwise, with the
+    failure, g_converge and rho_max axes riding the fused batch.  Runs
+    through the runner, so with two visible devices the fused dispatches
+    are also shard_map-sharded."""
+    c = sweep.Campaign(
+        name="diff_rand_jsq", schemes=("rsq", "jsq", "switch_pkt_ar"),
+        loads=(sweep.WorkloadSpec("permutation", 4, inter_pod_only=True,
+                                  rng_seed=3),),
+        trees=_TREES, seeds=(0,),
+        failures=(None, sweep.FailureSpec(0.05, rng_seed=11)),
+        g_converge=(300,),
+        engine="loop", max_slots=4000,
+        loop_opts=(("rho", "auto"), ("rto_slots", 300)))
+    plan = sweep.plan(c)
+    # One fused dispatch per port-choice branch (rand / jsq / jsq_quant),
+    # each spanning every tree size of the campaign's k-bucket.
+    assert plan.n_dispatches == plan.n_shapes == 3
+    assert all({b.k for b in m.members} == set(_TREES)
+               for m in plan.megabatches)
+    _, full = sweep.run_campaign(c, keep_full=True)
+    assert len(full) == c.n_points
+    for point, res in full.items():
+        tree = FatTree(point.k)
+        wl = build_workload(tree, point.load)
+        links = build_links(tree, point.failure)
+        rho = (rho_max(tree, links, wl.flow_src, wl.flow_dst)
+               if links is not None else 1.0)
+        ref = loopsim.simulate(tree, wl, lbs.by_name(point.scheme),
+                               c.loop_config(rho), seed=point.seed,
+                               links=links, g_converge=point.g_converge)
+        _assert_loop_equal(res, ref)
+
+
+def test_mixed_k_mixed_shape_jsq_megabatch_bitwise():
+    """One fused JSQ dispatch whose two members differ in tree size AND
+    workload shape (permutation vs all-to-all: packet counts, flow counts,
+    host_flows columns and pkt_base all pad): in-loop JSQ noise is keyed on
+    logical packet/host ids, so every axis of padding must leave each
+    member's draws -- and hence results -- bitwise-unchanged."""
+    t4, t6 = FatTree(4), FatTree(6)
+    wl_a = workloads.all_to_all(t4, 1)
+    wl_p = workloads.permutation(t6, 4, np.random.default_rng(7))
+    cfg = loopsim.LoopConfig(max_slots=4000)
+    sch = lbs.by_name("jsq")
+    items = [(t4, wl_a, sch, cfg, [0, 1], None, None),
+             (t6, wl_p, sch, cfg, [0], None, None)]
+    out = loopsim.simulate_megabatch(items)
+    for (t, w, s_, c_, seeds, _, _), results in zip(items, out):
+        for s, res in zip(seeds, results):
+            assert res.delivered_slot.shape[0] == w.n_packets
+            _assert_loop_equal(res, loopsim.simulate(t, w, s_, c_, seed=s))
 
 
 # ---------------------------------------------------------------------------

@@ -374,6 +374,25 @@ def test_cross_k_grid_one_dispatch_per_engine():
         assert p.megabatches[0].k_pad == 8
 
 
+def test_cross_k_rand_jsq_loop_grid_one_dispatch_per_shape():
+    """Acceptance (counter-stream randomness): a mixed-k loop campaign made
+    ENTIRELY of rand/JSQ schemes -- the modes that used to key on raw k --
+    plans to one dispatch per compiled shape, each fused across all three
+    tree sizes at the bucket head."""
+    c = sweep.Campaign(name="kk_rand",
+                       schemes=("rsq", "jsq", "switch_pkt_ar"),
+                       loads=(sweep.WorkloadSpec("permutation", 4),),
+                       trees=(4, 6, 8), seeds=(0,),
+                       engine="loop", max_slots=4000)
+    p = sweep.plan(c)
+    # rsq and jsq compile distinct port-choice branches; switch_pkt_ar is
+    # jsq_quant.  Three shapes, three dispatches, each spanning all ks.
+    assert p.n_dispatches == p.n_shapes == 3
+    for m in p.megabatches:
+        assert m.k_pad == 8
+        assert {b.k for b in m.members} == {4, 6, 8}
+
+
 def _axes_reversed(c):
     return dataclasses.replace(
         c, schemes=tuple(reversed(c.schemes)), loads=tuple(reversed(c.loads)),
@@ -400,29 +419,37 @@ def test_preset_planner_invariants(name):
 @pytest.mark.parametrize("name", sorted(sweep.PRESETS))
 def test_preset_dispatches_independent_of_k_bucket_population(name):
     """How many k values share a bucket must not change the dispatch count:
-    k-fusable work keeps the *identical* fused keys whether the bucket holds
-    one tree or three, and only raw-k loop schemes (rand/JSQ in-loop
-    randomness) scale with the tree count."""
+    EVERY scheme (counter-stream randomness made rand/JSQ loop modes
+    k-fusable too) keeps the *identical* fused keys whether the bucket
+    holds one tree or three."""
     c = sweep.preset(name)
     base_k = max(c.trees)
     ks = tuple(k for k in (base_k, base_k - 2, base_k - 4)
                if k >= max(4, -(-base_k // 2)))
     p1 = sweep.plan(dataclasses.replace(c, trees=(base_k,)))
     pn = sweep.plan(dataclasses.replace(c, trees=ks))
+    assert ({m.key for m in pn.megabatches}
+            == {m.key for m in p1.megabatches})
+    assert pn.n_dispatches == p1.n_dispatches
 
-    def split(p):
-        fused, raw = [], []
-        for m in p.megabatches:
-            ok = (m.engine == "fast"
-                  or all(lbs.by_name(b.scheme).loop_kfusable()
-                         for b in m.members))
-            (fused if ok else raw).append(m.key)
-        return fused, raw
 
-    f1, r1 = split(p1)
-    fn, rn = split(pn)
-    assert set(fn) == set(f1) and len(fn) == len(f1)
-    assert len(rn) == len(r1) * len(ks)
+@pytest.mark.parametrize("name", sorted(sweep.PRESETS))
+def test_preset_no_raw_k_fused_keys(name):
+    """No fused key anywhere carries a raw tree size: every member's k maps
+    to its campaign k-bucket head, which is what the key records -- even
+    with rand/JSQ loop schemes spliced into the preset's grid."""
+    c = sweep.preset(name)
+    if c.engine == "loop":
+        c = dataclasses.replace(
+            c, schemes=tuple(c.schemes) + ("rsq", "jsq"))
+    kmap = sweep.planner._kmap(c.trees)
+    p = sweep.plan(c)
+    assert p.n_dispatches == p.n_shapes
+    for m in p.megabatches:
+        assert {kmap[b.k] for b in m.members} == {m.k_pad}
+    # The k recorded in a fused key is always a bucket head.
+    heads = set(kmap.values())
+    assert {m.k_pad for m in p.megabatches} <= heads
 
 
 def test_scheme_shape_key_groups_pre_modes():
