@@ -45,10 +45,20 @@ the family whose in-loop draws used to pin fused keys to raw ``k`` and now
 rides counter streams (``core.entropy``): a (scheme x tree x seed) grid as
 one fused dispatch per scheme vs one campaign per tree size.
 
+A **telemetry sample** (``"telemetry"`` key) measures the observability
+layer's own cost: the timed megabatch run carries a live
+``obs.TraceWriter`` (so ``megabatch_s`` *includes* tracing), and the
+recorded span count, cumulative emit seconds and emit-to-wall fraction are
+reported alongside the trace's padding-fill counters.  A probe subsection
+re-runs a small slice with ``Campaign.probes`` on and verifies the
+series-max-equals-``max_queue`` invariant before reporting the probed wall
+time.
+
 Per-point results are verified identical (exact CCT equality) between the
 megabatched and serial paths before any timing is reported.  Results are
-appended-by-overwrite to ``BENCH_sweep.json`` at the repo root so the perf
-trajectory is tracked across PRs.
+merged (not overwritten) into ``BENCH_sweep.json`` (``"schema": 2``) at the
+repo root so the perf trajectory -- and sections written by other tools --
+survive across PRs.
 
 Smoke mode (``SWEEP_BENCH_SMOKE=1``, used by CI with
 ``--xla_force_host_platform_device_count=2``) shrinks the grid so the
@@ -67,6 +77,7 @@ from repro.net.topology import FatTree
 from repro.net import fastsim, loopsim
 from repro.core import lb_schemes as lbs
 from repro import sweep
+from repro.obs import ProbeSpec, TraceWriter
 
 from . import common as C
 
@@ -232,6 +243,66 @@ def _kfuse_loop_sample():
     }
 
 
+def _probe_sample(campaign, records):
+    """Probes-on re-run of the first scheme's slice: verifies the probe
+    series' per-layer max reproduces the probe-free ``max_queue`` scalars,
+    and reports the probed wall time (the marginal cost of carrying the
+    series through the fused dispatch)."""
+    import dataclasses
+    probed_c = dataclasses.replace(
+        campaign, schemes=campaign.schemes[:1],
+        probes=ProbeSpec(stride=8, samples=128))
+    _clear_compile_caches()
+    t0 = time.perf_counter()
+    probed, _ = sweep.run_campaign(probed_c)
+    probed_s = time.perf_counter() - t0
+
+    base = {(r["scheme"], r["workload"], r["seed"]): r for r in records}
+    for r in probed:
+        series = np.asarray(r["probe_queue"])
+        ref = base[(r["scheme"], r["workload"], r["seed"])]
+        assert float(series.max()) == ref["max_queue"], (
+            f"probe series max {series.max()} != max_queue "
+            f"{ref['max_queue']} for {r['scheme']}/s{r['seed']}")
+    return {
+        "stride": 8, "samples": 128, "points": probed_c.n_points,
+        "probed_s": round(probed_s, 3),
+        "series_shape": list(np.asarray(probed[0]["probe_queue"]).shape),
+    }
+
+
+def _telemetry_section(trace, batch_s, campaign, records):
+    disp = [s for s in trace.spans if s.get("kind") == "dispatch"]
+    real = sum(s["pkt_rows_real"] for s in disp)
+    padded = sum(s["pkt_rows_padded"] for s in disp)
+    return {
+        "n_spans": len(trace.spans),
+        "trace_emit_s": round(trace.emit_s, 5),
+        "trace_overhead_frac": round(trace.emit_s / batch_s, 5),
+        "pkt_rows_real": real,
+        "pkt_rows_padded": padded,
+        "pkt_fill": round(real / max(padded, 1), 4),
+        "probe": _probe_sample(campaign, records),
+    }
+
+
+def _merge_bench_json(result):
+    """schema-2 persistence: merge this run's sections into BENCH_sweep.json
+    instead of clobbering the file, so sections owned by other producers
+    (and any keys a future schema adds) survive."""
+    existing = {}
+    if BENCH_JSON.exists():
+        try:
+            existing = json.loads(BENCH_JSON.read_text())
+        except (json.JSONDecodeError, OSError):
+            existing = {}
+    if not isinstance(existing, dict):
+        existing = {}
+    existing.update(result)
+    existing["schema"] = 2
+    BENCH_JSON.write_text(json.dumps(existing, indent=2) + "\n")
+
+
 def sweep_speedup(scale: C.Scale):
     """Grid-completion wall time: megabatched campaign vs per-scheme batched
     (PR1) vs serial loops."""
@@ -250,10 +321,12 @@ def sweep_speedup(scale: C.Scale):
     p = sweep.plan(campaign)
     n_points = campaign.n_points
 
-    # ---- megabatched campaign (cold caches, includes its own compiles) ----
+    # ---- megabatched campaign (cold caches, includes its own compiles AND
+    # a live dispatch trace, so batch_s prices telemetry honestly) ----------
     _clear_compile_caches()
+    trace = TraceWriter()
     t0 = time.perf_counter()
-    records, _ = sweep.run_campaign(campaign)
+    records, _ = sweep.run_campaign(campaign, trace=trace)
     batch_s = time.perf_counter() - t0
 
     # ---- PR1 pattern: one seed-vmapped dispatch per (scheme, load) --------
@@ -313,11 +386,12 @@ def sweep_speedup(scale: C.Scale):
         "speedup_vs_isolated": round(speedup, 2),
         "speedup_vs_warm": round(speedup_warm, 2),
         "speedup_vs_pr1": round(speedup_pr1, 2),
+        "telemetry": _telemetry_section(trace, batch_s, campaign, records),
         "loop": _loop_sample(k, tree),
         "kfuse": _kfuse_sample(),
         "kfuse_loop": _kfuse_loop_sample(),
     }
-    BENCH_JSON.write_text(json.dumps(result, indent=2) + "\n")
+    _merge_bench_json(result)
     C.emit("sweep_speedup", batch_s * 1e6 / n_points,
            batch_s=result["megabatch_s"], pr1_s=result["pr1_per_scheme_s"],
            serial_warm_s=result["serial_warm_s"],
@@ -333,5 +407,7 @@ def sweep_speedup(scale: C.Scale):
            kfuse_dispatches=result["kfuse"]["plan"]["n_dispatches"],
            kfuse_loop_speedup=result["kfuse_loop"]["speedup_vs_per_k"],
            kfuse_loop_dispatches=result["kfuse_loop"]["plan"]["n_dispatches"],
+           trace_overhead_frac=result["telemetry"]["trace_overhead_frac"],
+           probe_s=result["telemetry"]["probe"]["probed_s"],
            points=n_points, dispatches=p.n_dispatches, shapes=p.n_shapes)
     return result

@@ -58,6 +58,7 @@ from ._batching import (TreePad, pad_tail as _pad_tail, pad_to_group_max,
 from ..core.lb_schemes import LBScheme, precompute_host_choices
 from ..core import entropy as ent
 from ..core import ofan as ofan_mod
+from ..obs.probes import QueueProbe, probe_shape
 
 _NEG = -1.0e9
 
@@ -244,6 +245,10 @@ class FastSimResult:
     max_queue: float                # max over all layers (packets)
     a_used: np.ndarray
     c_used: np.ndarray
+    # Queue-occupancy time series, present only when the point ran with a
+    # probe spec (see repro.obs.probes); per-layer max over the series
+    # equals the corresponding LayerStats.max_queue exactly.
+    probe: Optional[QueueProbe] = None
 
     def max_queue_layer(self, layer: int) -> float:
         return self.layers[LAYER_NAMES[layer]].max_queue
@@ -312,16 +317,18 @@ class SimPlan:
         return self.scheme.edge_mode in ("jsq", "jsq_quant")
 
     def build_run(self, batch, *, pad_e=None, pad_a=None, n_shards=1,
-                  tree=None):
+                  tree=None, probes=None):
         """``batch``: False | "seed" | "mega" (see :func:`_build_run`).
         ``pad_e``/``pad_a`` override the plan's own JSQ grid padding when a
         megabatch pads members to a group-wide maximum; ``tree`` overrides
         the plan's own tree when a megabatch pads members onto a k-bucket's
-        largest fat tree."""
+        largest fat tree.  ``probes`` (a ProbeSpec / (stride, samples)
+        tuple) adds the per-layer queue-occupancy series output."""
         tree = self.tree if tree is None else tree
         scheme = self.scheme
         if batch is True:
             batch = "seed"
+        probe_stride, probe_samples = probe_shape(probes)
         return _build_run(h=tree.half, n_pods=tree.n_pods,
                           n_edges=tree.n_edge_switches,
                           n_aggs=tree.n_agg_switches, n_hosts=tree.n_hosts,
@@ -333,7 +340,8 @@ class SimPlan:
                           prop=float(self.prop_slots), backend=self.backend,
                           tables_e_keys=self.tables_e_keys,
                           tables_a_keys=self.tables_a_keys, batch=batch,
-                          n_shards=n_shards)
+                          n_shards=n_shards, probe_stride=probe_stride,
+                          probe_samples=probe_samples)
 
 
 def _prepare(tree: FatTree, wl: Workload, scheme: LBScheme, prop_slots: float,
@@ -459,7 +467,7 @@ def _draw_seed_inputs(plan: SimPlan, seed: int) -> dict:
                 ta=tuple(np.asarray(tables_a[k]) for k in plan.tables_a_keys))
 
 
-def _postprocess(out: dict, wl: Workload) -> FastSimResult:
+def _postprocess(out: dict, wl: Workload, probes=None) -> FastSimResult:
     """Assemble a FastSimResult from one (unbatched) pipeline output tree."""
     delivery = out["delivery"]
     flow_completion = np.full(wl.n_flows, -np.inf)
@@ -477,20 +485,23 @@ def _postprocess(out: dict, wl: Workload) -> FastSimResult:
         aw = float(occ.sum(dtype=np.float64)) / max(n_real, 1)
         layers[name] = LayerStats(counts=cnts, max_queue=mq, avg_wait=aw)
         max_q = max(max_q, mq)
+    probe = (QueueProbe(probe_shape(probes)[0], np.asarray(out["probe_q"]))
+             if "probe_q" in out else None)
     return FastSimResult(delivery=delivery, flow_completion=flow_completion,
                          cct=float(delivery.max()), layers=layers,
                          max_queue=max_q, a_used=out["a_used"],
-                         c_used=out["c_used"])
+                         c_used=out["c_used"], probe=probe)
 
 
 def simulate(tree: FatTree, wl: Workload, scheme: LBScheme, seed: int = 0,
              prop_slots: float = 12.0, collect_stats: bool = True,
              links: Optional[LinkState] = None,
-             backend: str = "auto", jsq_pad_factor: float = 4.0) -> FastSimResult:
+             backend: str = "auto", jsq_pad_factor: float = 4.0,
+             probes=None) -> FastSimResult:
     """Run one collective under ``scheme`` on the fast engine."""
     plan = _prepare(tree, wl, scheme, prop_slots, links, backend,
                     jsq_pad_factor)
-    run = plan.build_run(batch=False)
+    run = plan.build_run(batch=False, probes=probes)
     out = run({**plan.static_args, **_draw_seed_inputs(plan, seed)})
     out = jax.tree_util.tree_map(np.asarray, out)
     if bool(out["overflow"]):
@@ -498,15 +509,16 @@ def simulate(tree: FatTree, wl: Workload, scheme: LBScheme, seed: int = 0,
             raise RuntimeError("JSQ pad overflow even with huge padding")
         return simulate(tree, wl, scheme, seed=seed, prop_slots=prop_slots,
                         collect_stats=collect_stats, links=links,
-                        backend=backend, jsq_pad_factor=jsq_pad_factor * 2)
-    return _postprocess(out, wl)
+                        backend=backend, jsq_pad_factor=jsq_pad_factor * 2,
+                        probes=probes)
+    return _postprocess(out, wl, probes)
 
 
 def simulate_batch(tree: FatTree, wl: Workload, scheme: LBScheme,
                    seeds, prop_slots: float = 12.0,
                    collect_stats: bool = True,
                    links: Optional[LinkState] = None, backend: str = "auto",
-                   jsq_pad_factor: float = 4.0) -> list:
+                   jsq_pad_factor: float = 4.0, probes=None) -> list:
     """Run one simulation point for many seeds as a single vmapped dispatch.
 
     Per-seed randomness is drawn host-side exactly as :func:`simulate` draws
@@ -523,7 +535,7 @@ def simulate_batch(tree: FatTree, wl: Workload, scheme: LBScheme,
                     jsq_pad_factor)
     per_seed = [_draw_seed_inputs(plan, s) for s in seeds]
     stacked = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *per_seed)
-    run = plan.build_run(batch=True)
+    run = plan.build_run(batch=True, probes=probes)
     out = run({**plan.static_args, **stacked})
     out = jax.tree_util.tree_map(np.asarray, out)
 
@@ -534,7 +546,7 @@ def simulate_batch(tree: FatTree, wl: Workload, scheme: LBScheme,
             retry.append(s)
         else:
             out_i = jax.tree_util.tree_map(lambda x: x[i], out)
-            results[s] = _postprocess(out_i, wl)
+            results[s] = _postprocess(out_i, wl, probes)
     if retry:
         if jsq_pad_factor > 64:
             raise RuntimeError("JSQ pad overflow even with huge padding")
@@ -542,7 +554,8 @@ def simulate_batch(tree: FatTree, wl: Workload, scheme: LBScheme,
                                 prop_slots=prop_slots,
                                 collect_stats=collect_stats, links=links,
                                 backend=backend,
-                                jsq_pad_factor=jsq_pad_factor * 2)
+                                jsq_pad_factor=jsq_pad_factor * 2,
+                                probes=probes)
         results.update(dict(zip(retry, redone)))
     return [results[s] for s in seeds]
 
@@ -602,7 +615,7 @@ def _repad_elem(d: dict, plan: SimPlan, tp: TreePad) -> dict:
 def simulate_megabatch(items, *, prop_slots: float = 12.0,
                        backend: str = "auto", jsq_pad_factor: float = 4.0,
                        npk_pad: Optional[int] = None, n_shards=1,
-                       k_pad: Optional[int] = None) -> list:
+                       k_pad: Optional[int] = None, probes=None) -> list:
     """Run many simulation points as ONE fused, jitted dispatch.
 
     ``items`` is a sequence of ``(tree, wl, scheme, seeds, links)`` tuples
@@ -686,7 +699,7 @@ def simulate_megabatch(items, *, prop_slots: float = 12.0,
     stacked = shard_pad(stacked, n_batch, n_shards)
 
     run = plans[0].build_run("mega", pad_e=pad_e_m, pad_a=pad_a_m,
-                             n_shards=n_shards, tree=tree_pad)
+                             n_shards=n_shards, tree=tree_pad, probes=probes)
     out = run(stacked)
     out = jax.tree_util.tree_map(np.asarray, out)
 
@@ -706,7 +719,7 @@ def simulate_megabatch(items, *, prop_slots: float = 12.0,
             # ids (padded queues hold zero: no real packet ever lands there).
             out_b["counts"] = ([c[pads[i].mid] for c in out_b["counts"][:4]]
                                + [out_b["counts"][4][:plans[i].tree.n_hosts]])
-        results[i][s] = _postprocess(out_b, plans[i].wl)
+        results[i][s] = _postprocess(out_b, plans[i].wl, probes)
 
     # JSQ pad overflow: re-run exactly the (item, seed) cells a standalone
     # run would re-pad, through the seed-batched path (whose retry is itself
@@ -716,7 +729,8 @@ def simulate_megabatch(items, *, prop_slots: float = 12.0,
         redone = simulate_batch(tree, wl, scheme, retry_seeds,
                                 prop_slots=prop_slots, links=links,
                                 backend=backend,
-                                jsq_pad_factor=jsq_pad_factor * 2)
+                                jsq_pad_factor=jsq_pad_factor * 2,
+                                probes=probes)
         results[i].update(dict(zip(retry_seeds, redone)))
 
     return [[results[i][s] for s in seeds]
@@ -737,7 +751,8 @@ _N_STATIC = 10
 @functools.lru_cache(maxsize=64)
 def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
                quanta, buffer_pkts, reset_wraps, pad_e, pad_a, prop, backend,
-               tables_e_keys, tables_a_keys, batch, n_shards=1):
+               tables_e_keys, tables_a_keys, batch, n_shards=1,
+               probe_stride=0, probe_samples=0):
     """Compile the 5-layer pipeline for a given (scheme-shape, tree) config.
 
     ``batch`` selects the dispatch variant:
@@ -769,6 +784,10 @@ def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
             tbl_a["reset_wraps"] = reset_wraps
         overflow = jnp.asarray(False)
         counts, occs, n_real = [], [], []
+        # Probe inputs per layer: the arrival times that place each packet's
+        # observed occupancy into a stride window, and the active mask that
+        # keeps bypass/pad rows out of the series.
+        p_arr, p_act = [], []
 
         a_t = t_rel + prop                      # arrival at source edge switch
         edge_switch = p1 * h + e1
@@ -806,6 +825,7 @@ def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
             d, cnt, occ = _lindley_layer(qid, a_t, tie, mid, backend)
             counts.append(cnt); occs.append(occ)
             n_real.append(jnp.sum(leaves_edge))
+        p_arr.append(a_t); p_act.append(leaves_edge)
         a_t = jnp.where(leaves_edge, d + prop, a_t)
 
         # ---------- UP_A ----------
@@ -841,6 +861,7 @@ def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
             d, cnt, occ = _lindley_layer(qid, a_t, tie, mid, backend)
             counts.append(cnt); occs.append(occ)
             n_real.append(jnp.sum(inter_pod))
+        p_arr.append(a_t); p_act.append(inter_pod)
         a_t = jnp.where(inter_pod, d + prop, a_t)
 
         # ---------- DN_C (forced: core (a_used, c_used) -> agg a_used of p2) --
@@ -848,6 +869,7 @@ def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
         d, cnt, occ = _lindley_layer(qid, a_t, tie, mid, backend)
         counts.append(cnt); occs.append(occ)
         n_real.append(jnp.sum(inter_pod))
+        p_arr.append(a_t); p_act.append(inter_pod)
         a_t = jnp.where(inter_pod, d + prop, a_t)
 
         # ---------- DN_A (forced: agg a_used -> edge e2) ----------
@@ -855,6 +877,7 @@ def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
         d, cnt, occ = _lindley_layer(qid, a_t, tie, mid, backend)
         counts.append(cnt); occs.append(occ)
         n_real.append(jnp.sum(leaves_edge))
+        p_arr.append(a_t); p_act.append(leaves_edge)
         a_t = jnp.where(leaves_edge, d + prop, a_t)
 
         # ---------- DN_E (forced: edge -> host) ----------
@@ -863,14 +886,31 @@ def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
         # dst == -1 marks shape-bucketing pad packets (inert bypass rows);
         # without padding this equals dst.shape[0] exactly.
         n_real.append(jnp.sum(dst >= 0))
+        p_arr.append(a_t); p_act.append(dst >= 0)
         delivery = d + prop
 
-        return {"delivery": delivery,
-                "counts": counts,
-                "occ": jnp.stack(occs),
-                "n_real": jnp.stack([jnp.asarray(x, jnp.int32) for x in n_real]),
-                "a_used": a_used, "c_used": c_used,
-                "overflow": overflow}
+        out = {"delivery": delivery,
+               "counts": counts,
+               "occ": jnp.stack(occs),
+               "n_real": jnp.stack([jnp.asarray(x, jnp.int32) for x in n_real]),
+               "a_used": a_used, "c_used": c_used,
+               "overflow": overflow}
+        if probe_samples:
+            # Scatter-max each packet's observed occupancy into the stride
+            # window of its arrival time; inactive rows drop out entirely
+            # (mode="drop"), arrivals past the horizon clamp into the last
+            # window.  Per-layer max over the series therefore reduces the
+            # exact value set LayerStats.max_queue reduces.
+            stride = jnp.float32(probe_stride)
+            last = probe_samples - 1
+            qsr = jnp.zeros((N_LAYERS, probe_samples), jnp.float32)
+            for li in range(N_LAYERS):
+                si = jnp.clip((p_arr[li] // stride).astype(jnp.int32),
+                              0, last)
+                qsr = qsr.at[li, jnp.where(p_act[li], si, probe_samples)].max(
+                    jnp.where(p_act[li], occs[li], 0.0), mode="drop")
+            out["probe_q"] = qsr
+        return out
 
     n_args = len(_ARG_ORDER)
     if batch == "mega":

@@ -84,6 +84,7 @@ from ._batching import (TreePad, pad_tail, pad_to_group_max,
 from ..core.lb_schemes import LBScheme, precompute_host_choices
 from ..core import entropy as ent
 from ..core import ofan as ofan_mod
+from ..obs.probes import QueueProbe, probe_shape
 
 INT = jnp.int32
 
@@ -101,6 +102,10 @@ class LoopSimResult:
     avg_queue: float
     finished: bool
     mean_cwnd: float
+    # Queue-occupancy time series (5 layers x samples windows), present only
+    # when the point ran with a probe spec (repro.obs.probes); its max over
+    # layers and time equals ``max_queue`` exactly.
+    probe: Optional[QueueProbe] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,6 +153,10 @@ class _Static:
     adaptive_host: bool
     plb: bool
     cfg: LoopConfig                 # normalized via static_config()
+    # Probe grid (stride, samples); (0, 0) = probes off.  Static: the series
+    # buffer shape is baked into the compiled engine, so probed campaigns
+    # still fuse into one dispatch per pipeline shape.
+    probe: Tuple[int, int] = (0, 0)
 
 
 @dataclasses.dataclass
@@ -177,7 +186,7 @@ class LoopPlan:
 def _prepare(tree: FatTree, wl: Workload, scheme: LBScheme,
              cfg: LoopConfig = LoopConfig(),
              links: Optional[LinkState] = None,
-             g_converge: Optional[int] = None) -> LoopPlan:
+             g_converge: Optional[int] = None, probes=None) -> LoopPlan:
     """Host-side precomputation shared by every seed of a simulation point."""
     h = tree.half
     n = tree.n_hosts
@@ -291,7 +300,8 @@ def _prepare(tree: FatTree, wl: Workload, scheme: LBScheme,
                 else None),
         adaptive_host=scheme.adaptive_host,
         plb=scheme.name == "host_flowlet_ar",
-        cfg=static_config(cfg))
+        cfg=static_config(cfg),
+        probe=probe_shape(probes))
 
     tables = dict(
         fsrc=fsrc, fdst=fdst, fsize=fsize, pkt_base=pkt_base,
@@ -363,7 +373,7 @@ def _draw_seed_inputs(plan: LoopPlan, seed: int) -> dict:
 
 
 def _postprocess(out: dict, cfg: LoopConfig, n_packets: int,
-                 n_flows: int) -> LoopSimResult:
+                 n_flows: int, probes=None) -> LoopSimResult:
     """Assemble a LoopSimResult from one (unbatched) engine output tree,
     slicing off any shape-bucketing padding."""
     comp = out["flow_complete"][:n_flows]
@@ -383,28 +393,31 @@ def _postprocess(out: dict, cfg: LoopConfig, n_packets: int,
         avg_queue=float(out["sum_q"]) / max(float(out["enq_events"]), 1.0),
         finished=finished,
         mean_cwnd=float(f_cwnd.mean()) if n_flows else 0.0,
+        probe=(QueueProbe(probe_shape(probes)[0], np.asarray(out["q_probe"]))
+               if "q_probe" in out else None),
     )
 
 
 def simulate(tree: FatTree, wl: Workload, scheme: LBScheme,
              cfg: LoopConfig = LoopConfig(), seed: int = 0,
              links: Optional[LinkState] = None,
-             g_converge: Optional[int] = None) -> LoopSimResult:
+             g_converge: Optional[int] = None,
+             probes=None) -> LoopSimResult:
     """Run one collective on the slotted engine.
 
     ``links``: failed-link state (None = all up).  ``g_converge``: slot at
     which routing state converges; None => G = infinity (never converges).
     """
-    plan = _prepare(tree, wl, scheme, cfg, links, g_converge)
+    plan = _prepare(tree, wl, scheme, cfg, links, g_converge, probes=probes)
     tables = {**plan.tables, **_draw_seed_inputs(plan, seed)}
     out = jax.tree_util.tree_map(np.asarray, _run(plan.static, tables))
-    return _postprocess(out, cfg, wl.n_packets, wl.n_flows)
+    return _postprocess(out, cfg, wl.n_packets, wl.n_flows, probes)
 
 
 def simulate_batch(tree: FatTree, wl: Workload, scheme: LBScheme,
                    seeds, cfg: LoopConfig = LoopConfig(),
                    links: Optional[LinkState] = None,
-                   g_converge: Optional[int] = None) -> list:
+                   g_converge: Optional[int] = None, probes=None) -> list:
     """Run one simulation point for many seeds as a single vmapped dispatch.
 
     Per-seed randomness (host labels, spray entropy, RR starts, OFAN
@@ -417,14 +430,14 @@ def simulate_batch(tree: FatTree, wl: Workload, scheme: LBScheme,
     seeds = list(seeds)
     if not seeds:
         return []
-    plan = _prepare(tree, wl, scheme, cfg, links, g_converge)
+    plan = _prepare(tree, wl, scheme, cfg, links, g_converge, probes=probes)
     per_seed = [_draw_seed_inputs(plan, s) for s in seeds]
     stacked = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *per_seed)
     out = jax.tree_util.tree_map(
         np.asarray, _run(plan.static, {**plan.tables, **stacked},
                          batch="seed"))
     return [_postprocess(jax.tree_util.tree_map(lambda x: x[i], out),
-                         cfg, wl.n_packets, wl.n_flows)
+                         cfg, wl.n_packets, wl.n_flows, probes)
             for i in range(len(seeds))]
 
 
@@ -508,7 +521,8 @@ _F_PAD0 = ("fsrc", "fdst", "fsize", "fp1", "fe1", "fp2", "fe2")
 
 
 def simulate_megabatch(items, *, npk_pad: Optional[int] = None,
-                       n_shards=1, k_pad: Optional[int] = None) -> list:
+                       n_shards=1, k_pad: Optional[int] = None,
+                       probes=None) -> list:
     """Run many loop-engine simulation points as ONE fused, jitted dispatch.
 
     ``items`` is a sequence of ``(tree, wl, scheme, cfg, seeds, links,
@@ -546,7 +560,7 @@ def simulate_megabatch(items, *, npk_pad: Optional[int] = None,
     if not items or all(not it[4] for it in items):
         return [[] for _ in items]
 
-    plans = [_prepare(t, w, s, c, l, g)
+    plans = [_prepare(t, w, s, c, l, g, probes=probes)
              for (t, w, s, c, _, l, g) in items]
     idents = {_pipeline_identity(p) for p in plans}
     if len(idents) > 1:
@@ -622,7 +636,7 @@ def simulate_megabatch(items, *, npk_pad: Optional[int] = None,
         out_b = jax.tree_util.tree_map(lambda x: x[b], out)
         results[i][s] = _postprocess(out_b, items[i][3],
                                      plans[i].wl.n_packets,
-                                     plans[i].wl.n_flows)
+                                     plans[i].wl.n_flows, probes)
     return [[results[i][s] for s in seeds]
             for i, (_, _, _, _, seeds, _, _) in enumerate(items)]
 
@@ -756,6 +770,11 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
         sum_q=jnp.float32(0.0),
         enq_events=jnp.int32(0),
     )
+    if s.probe[1]:
+        # Per-layer windowed queue maxima (repro.obs.probes); padded queues
+        # are never enqueued to and read 0, so the series is
+        # padding-invariant like every other output.
+        st0["q_probe"] = jnp.zeros((5, s.probe[1]), INT)
 
     def step(st_in):
         st = dict(st_in)
@@ -1082,6 +1101,18 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
         st["qcnt"] = st["qcnt"].at[jnp.where(do_enq, aq, NQ)].add(
             1, mode="drop")
         st["max_q"] = jnp.maximum(st["max_q"], st["qcnt"].max())
+        if s.probe[1]:
+            # Same reduction point as max_q, split per fat-tree layer and
+            # scattered into the slot's stride window (slots past the probe
+            # horizon clamp into the last window), so the series max over
+            # layers and time equals max_q exactly.
+            p_stride, p_samples = s.probe
+            si = jnp.minimum(t // p_stride, p_samples - 1)
+            qc = st["qcnt"]
+            lay = jnp.stack([qc[OFF[0]:OFF[1]].max(), qc[OFF[1]:OFF[2]].max(),
+                             qc[OFF[2]:OFF[3]].max(), qc[OFF[3]:OFF[4]].max(),
+                             qc[OFF[4]:].max()])
+            st["q_probe"] = st["q_probe"].at[:, si].max(lay)
         st["sum_q"] = st["sum_q"] + jnp.where(do_enq, occ_after, 0).sum()
         st["enq_events"] = st["enq_events"] + do_enq.sum()
         st["dl_pkt"] = st["dl_pkt"].at[arr_slot].set(-1)
@@ -1186,7 +1217,7 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
         return (st["f_complete"] < 0).any() & (st["t"] < max_slots)
 
     final = jax.lax.while_loop(cond, step, st0)
-    return {
+    out = {
         "delivered_slot": final["p_deliv"],
         "flow_complete": final["f_complete"],
         "f_data_done": final["f_data_done"],
@@ -1197,3 +1228,6 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
         "enq_events": final["enq_events"],
         "f_cwnd": final["f_cwnd"],
     }
+    if s.probe[1]:
+        out["q_probe"] = final["q_probe"]
+    return out

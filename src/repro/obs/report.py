@@ -1,0 +1,118 @@
+"""Render a campaign trace into a human-readable cost summary.
+
+Backs ``python -m repro.sweep report``: given the dispatch spans of one
+campaign run (``trace.jsonl``) and optionally its ``results.jsonl``, emit
+
+* the dispatch timeline (engine, fused schemes, padding fill, wall split);
+* per-shape padding-waste accounting -- the measured costs the ROADMAP's
+  cost-modeled planner consumes;
+* loop-engine slot-budget utilization;
+* the top queue trajectories (sparkline per point) when the results carry
+  probe series (``Campaign.probes``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+_BLOCKS = " ▁▂▃▄▅▆▇█"
+
+
+def sparkline(vals, width: int = 60) -> str:
+    """Downsample ``vals`` to <= ``width`` chars (max per chunk, so peaks
+    survive) and render as unicode block heights."""
+    vals = [float(v) for v in vals]
+    if len(vals) > width:
+        n = len(vals)
+        vals = [max(vals[i * n // width:max((i + 1) * n // width,
+                                            i * n // width + 1)])
+                for i in range(width)]
+    peak = max(vals) if vals else 0.0
+    if peak <= 0:
+        return _BLOCKS[0] * len(vals)
+    return "".join(_BLOCKS[max(1, round(v / peak * 8))] if v > 0
+                   else _BLOCKS[0] for v in vals)
+
+
+def _fmt_s(x) -> str:
+    return f"{x:8.2f}s" if isinstance(x, (int, float)) else " " * 9
+
+
+def render_report(spans: List[Dict], records: Optional[List[Dict]] = None,
+                  top: int = 3) -> str:
+    """The ``python -m repro.sweep report`` text body."""
+    plan = next((s for s in spans if s.get("kind") == "plan"), None)
+    disp = [s for s in spans if s.get("kind") == "dispatch"]
+    end = next((s for s in spans if s.get("kind") == "campaign"), None)
+    lines: List[str] = []
+
+    name = (plan or end or {"campaign": "?"}).get("campaign", "?")
+    schema = (spans[0].get("schema", "?")) if spans else "?"
+    lines.append(f"campaign {name!r} -- trace schema {schema}, "
+                 f"{len(disp)} dispatches")
+    if plan:
+        lines.append(f"  {plan.get('n_points', '?')} grid points, "
+                     f"{plan.get('n_shapes', '?')} compiled shapes, "
+                     f"{plan.get('devices', '?')} device(s)")
+    if end and "wall_s" in end:
+        emit = end.get("emit_s", 0.0)
+        lines.append(f"  total wall {end['wall_s']:.2f}s "
+                     f"(trace overhead {emit:.4f}s)")
+
+    # ---- dispatch timeline -------------------------------------------------
+    if disp:
+        lines.append("")
+        lines.append("dispatch timeline:")
+        lines.append("   #  eng  rows  fill  pkt_fill      wall   "
+                     "compile  schemes")
+        for s in disp:
+            wall = _fmt_s(s.get("wall_s"))
+            comp = _fmt_s(s.get("compile_s"))
+            cached = "  [cached]" if s.get("cache") == "hit" else ""
+            lines.append(
+                f"  {s['dispatch']:>2d} {s['engine']:>4s} "
+                f"{s['n_points']:>5d}  {s.get('row_fill', 1.0):.2f}  "
+                f"{s.get('pkt_fill', 0.0):8.2f} {wall} {comp}  "
+                f"{','.join(s.get('schemes', []))}"
+                f" k_pad={s.get('k_pad', '?')}{cached}")
+
+    # ---- padding waste per shape ------------------------------------------
+    if disp:
+        real = sum(s.get("pkt_rows_real", 0) for s in disp)
+        padded = sum(s.get("pkt_rows_padded", 0) for s in disp)
+        lines.append("")
+        if padded:
+            worst = min(disp, key=lambda s: s.get("pkt_fill", 1.0))
+            lines.append(
+                f"padding: {real} real packet-rows in {padded} padded "
+                f"({real / padded:.1%} fill); worst dispatch "
+                f"#{worst['dispatch']} at {worst.get('pkt_fill', 0):.1%} "
+                f"({','.join(worst.get('schemes', []))})")
+        loop_disp = [s for s in disp if "slots_run" in s]
+        for s in loop_disp:
+            lines.append(
+                f"slot budget (dispatch #{s['dispatch']}): ran "
+                f"{s['slots_run']}/{s['slot_budget']} slots, per-row fill "
+                f"{s.get('slot_fill', 0):.1%}")
+
+    # ---- top queue trajectories (needs probe-carrying results) -------------
+    probed = [r for r in (records or []) if r.get("probe_queue")]
+    if probed:
+        probed.sort(key=lambda r: r.get("max_queue", 0), reverse=True)
+        lines.append("")
+        lines.append(f"top queue trajectories (of {len(probed)} probed "
+                     f"points; stride {probed[0].get('probe_stride')} "
+                     f"slots/char bucket):")
+        for r in probed[:max(top, 0)]:
+            series = r["probe_queue"]
+            peaks = [max(row) if row else 0 for row in series]
+            li = peaks.index(max(peaks))
+            label = (f"{r.get('scheme', '?')} k={r.get('k', '?')} "
+                     f"s{r.get('seed', '?')} layer{li}")
+            lines.append(f"  {label:<28s} {sparkline(series[li])} "
+                         f"(max {max(peaks):g})")
+    elif records is not None:
+        lines.append("")
+        lines.append("no probe series in results (run with Campaign.probes "
+                     "/ --probes to record queue trajectories)")
+
+    return "\n".join(lines)

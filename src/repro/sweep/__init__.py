@@ -16,7 +16,16 @@ than one is visible), instead of a Python loop of per-point
         print(row["scheme"], row["cct_mean"], row["cct_std"])
 
 CLI: ``python -m repro.sweep run --preset theory --out runs/theory``.
+
+Observability (``repro.obs``, re-exported here): ``run_campaign`` can emit a
+versioned JSONL dispatch trace (``trace=TraceWriter(...)``), log one line
+per fused dispatch (``log=SweepLogger(...)``), and -- with
+``Campaign.probes=ProbeSpec(...)`` -- carry per-layer queue-occupancy time
+series out of the engines.  ``python -m repro.sweep report`` renders a trace
+into a cost summary.
 """
+from ..obs import (ProbeSpec, QueueProbe, SweepLogger, TraceWriter,
+                   load_trace, render_report, strip_timing)
 from .spec import (Campaign, FailureSpec, GridPoint, PRESETS, WorkloadSpec,
                    preset)
 from .planner import MegaBatch, Plan, SeedBatch, bucket_packets, plan
@@ -31,4 +40,6 @@ __all__ = [
     "ResultStore", "encode_record", "loop_point_record", "point_record",
     "summarize", "write_summary", "build_links", "build_workload",
     "run_campaign", "compile_cache",
+    "ProbeSpec", "QueueProbe", "SweepLogger", "TraceWriter",
+    "load_trace", "render_report", "strip_timing",
 ]

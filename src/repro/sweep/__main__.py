@@ -2,12 +2,18 @@
 
     python -m repro.sweep run --preset theory --out runs/theory
     python -m repro.sweep run --spec campaign.json --seeds 0:8
+    python -m repro.sweep run --preset layer_balance --probes 64 --out runs/lb
     python -m repro.sweep presets
     python -m repro.sweep summarize --results runs/theory/results.jsonl
+    python -m repro.sweep report --trace runs/lb/trace.jsonl \
+        --results runs/lb/results.jsonl
 
-``run`` writes ``<out>/results.jsonl`` (one record per grid point) and
-``<out>/summary.jsonl`` (seed-aggregated rows), both byte-deterministic for
-a given spec.
+``run`` writes ``<out>/results.jsonl`` (one record per grid point),
+``<out>/summary.jsonl`` (seed-aggregated rows) and ``<out>/trace.jsonl``
+(one span per fused dispatch; see ``repro.obs``) -- all byte-deterministic
+for a given spec, the trace modulo its wall-clock/cache fields.  ``report``
+renders a trace (plus, optionally, probe-carrying results) into a
+human-readable cost summary.
 """
 from __future__ import annotations
 
@@ -18,6 +24,7 @@ import os
 import pathlib
 import sys
 
+from ..obs import ProbeSpec, SweepLogger, TraceWriter, load_trace, render_report
 from . import compile_cache
 from .spec import Campaign, PRESETS, preset
 from .planner import plan
@@ -31,6 +38,17 @@ def _parse_seeds(text: str):
         lo, hi = text.split(":")
         return tuple(range(int(lo), int(hi)))
     return tuple(int(s) for s in text.split(","))
+
+
+def _parse_probes(text: str) -> ProbeSpec:
+    """'64' -> ProbeSpec(stride=64); '64,128' -> ProbeSpec(64, 128)."""
+    parts = [int(p) for p in text.split(",")]
+    if len(parts) == 1:
+        return ProbeSpec(stride=parts[0])
+    if len(parts) == 2:
+        return ProbeSpec(stride=parts[0], samples=parts[1])
+    raise argparse.ArgumentTypeError(
+        f"--probes expects STRIDE or STRIDE,SAMPLES, got {text!r}")
 
 
 def _load_campaign(args) -> Campaign:
@@ -48,6 +66,8 @@ def _load_campaign(args) -> Campaign:
         override["backend"] = args.backend
     if getattr(args, "shard", None):
         override["shard"] = args.shard
+    if getattr(args, "probes", None):
+        override["probes"] = _parse_probes(args.probes)
     return dataclasses.replace(c, **override) if override else c
 
 
@@ -56,6 +76,8 @@ def cmd_run(args) -> int:
     out = pathlib.Path(args.out) if args.out else None
     store = ResultStore(out / "results.jsonl" if out else None)
     quiet = args.quiet
+    level = "quiet" if quiet else ("debug" if args.verbose else "info")
+    trace = TraceWriter(out / "trace.jsonl" if out else None)
     # Precedence: --no-compile-cache > --compile-cache > $REPRO_COMPILE_CACHE
     # (resolved inside compile_cache.enable) > <out>/jax-cache.
     if args.no_compile_cache:
@@ -67,9 +89,11 @@ def cmd_run(args) -> int:
     else:
         cache_dir = str(out / "jax-cache") if out else None
     records, _ = run_campaign(
-        c, store=store, progress=None if quiet else print,
-        compile_cache_dir=cache_dir)
+        c, store=store, compile_cache_dir=cache_dir,
+        trace=trace, log=SweepLogger(level),
+        timing_split=args.timing_split, profile_dir=args.profile)
     store.close()
+    trace.close()
     rows = (write_summary(out / "summary.jsonl", records) if out
             else summarize(records))
     if not quiet:
@@ -78,7 +102,8 @@ def cmd_run(args) -> int:
                   f"cct {row['cct_mean']:10.1f} +- {row['cct_std']:7.1f} "
                   f"(n={row['n_seeds']})  max_q {row['max_queue_max']:8.1f}")
         if out:
-            print(f"wrote {out / 'results.jsonl'} and {out / 'summary.jsonl'}")
+            print(f"wrote {out / 'results.jsonl'}, {out / 'summary.jsonl'} "
+                  f"and {out / 'trace.jsonl'}")
     return 0
 
 
@@ -112,6 +137,20 @@ def cmd_summarize(args) -> int:
     return 0
 
 
+def cmd_report(args) -> int:
+    spans = load_trace(args.trace)
+    records = (ResultStore.load(args.results).records
+               if args.results else None)
+    text = render_report(spans, records, top=args.top)
+    print(text)
+    if args.out:
+        p = pathlib.Path(args.out)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(text + "\n")
+        print(f"wrote {p}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.sweep")
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -128,13 +167,26 @@ def main(argv=None) -> int:
 
     p_run = sub.add_parser("run", help="execute a campaign")
     _spec_args(p_run)
-    p_run.add_argument("--out", help="output dir for results/summary JSONL")
+    p_run.add_argument("--out", help="output dir for results/summary/trace "
+                                     "JSONL")
     p_run.add_argument("--compile-cache", metavar="DIR",
                        help="persistent JAX compile cache directory "
                             "(default: <out>/jax-cache, or "
                             "$REPRO_COMPILE_CACHE)")
     p_run.add_argument("--no-compile-cache", action="store_true")
-    p_run.add_argument("--quiet", action="store_true")
+    p_run.add_argument("--quiet", action="store_true",
+                       help="no progress output")
+    p_run.add_argument("--verbose", "-v", action="store_true",
+                       help="per-member timings and cache diagnostics "
+                            "(default: one line per fused dispatch)")
+    p_run.add_argument("--probes", metavar="STRIDE[,SAMPLES]",
+                       help="record per-layer queue-occupancy time series "
+                            "(repro.obs.probes; default 256 samples)")
+    p_run.add_argument("--timing-split", action="store_true",
+                       help="dispatch twice to split compile vs execute "
+                            "wall time in the trace")
+    p_run.add_argument("--profile", metavar="DIR",
+                       help="write a jax.profiler trace to DIR")
     p_run.set_defaults(fn=cmd_run)
 
     p_plan = sub.add_parser("plan", help="show the batched execution plan")
@@ -147,6 +199,17 @@ def main(argv=None) -> int:
     p_sum = sub.add_parser("summarize", help="aggregate a results.jsonl")
     p_sum.add_argument("--results", required=True)
     p_sum.set_defaults(fn=cmd_summarize)
+
+    p_rep = sub.add_parser("report", help="render a dispatch trace into a "
+                                          "cost summary")
+    p_rep.add_argument("--trace", required=True, help="path to trace.jsonl")
+    p_rep.add_argument("--results", help="results.jsonl (enables queue-"
+                                         "trajectory sparklines when the "
+                                         "campaign ran with probes)")
+    p_rep.add_argument("--top", type=int, default=3,
+                       help="queue trajectories to show (default 3)")
+    p_rep.add_argument("--out", help="also write the report to this file")
+    p_rep.set_defaults(fn=cmd_report)
 
     args = ap.parse_args(argv)
     return args.fn(args)

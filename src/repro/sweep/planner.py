@@ -42,6 +42,7 @@ from typing import Dict, List, Optional, Tuple
 from ..core import lb_schemes as lbs
 from ..net._batching import k_buckets, pow2_bucket
 from ..net import loopsim
+from ..obs.probes import probe_shape
 from .spec import Campaign, FailureSpec, GridPoint, WorkloadSpec
 
 
@@ -91,11 +92,12 @@ class SeedBatch:
             return ("loop", kb, bucket_packets(self.load.n_packets(kb)),
                     scheme.loop_shape_key(),
                     loopsim.static_config(campaign.loop_config()),
-                    pow2_bucket(max(int(campaign.max_slots), 1)))
+                    pow2_bucket(max(int(campaign.max_slots), 1)),
+                    probe_shape(campaign.probes))
         kb = _kmap(campaign.trees)[self.k]
         return ("fast", kb, bucket_packets(self.load.n_packets(kb)),
                 scheme.shape_key(), campaign.backend,
-                float(campaign.prop_slots))
+                float(campaign.prop_slots), probe_shape(campaign.probes))
 
 
 @dataclasses.dataclass

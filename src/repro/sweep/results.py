@@ -56,12 +56,23 @@ def point_record(point: GridPoint, res) -> Dict:
             rec[f"overload_{tag}"] = float(used.max() / ideal - 1.0)
         else:
             rec[f"overload_{tag}"] = 0.0
+    _attach_probe(rec, res)
     return rec
+
+
+def _attach_probe(rec: Dict, res) -> None:
+    """Add the opt-in queue time series to a point record.  Probes off (the
+    default) adds no keys, keeping the record -- and the JSONL bytes --
+    identical to a probe-free build."""
+    probe = getattr(res, "probe", None)
+    if probe is not None:
+        rec["probe_stride"] = int(probe.stride)
+        rec["probe_queue"] = np.asarray(probe.series).tolist()
 
 
 def loop_point_record(point: GridPoint, res) -> Dict:
     """Flatten one ``loopsim.LoopSimResult`` into a JSON-safe record."""
-    return {
+    rec = {
         "campaign": point.campaign,
         "k": point.k,
         "workload": point.load.label(),
@@ -79,15 +90,24 @@ def loop_point_record(point: GridPoint, res) -> Dict:
         "finished": bool(res.finished),
         "mean_cwnd": float(res.mean_cwnd),
     }
+    _attach_probe(rec, res)
+    return rec
 
 
 def _canon(x):
-    """JSON-canonical scalars: floats through repr-stable float(), numpy
-    scalars unboxed."""
+    """JSON-canonical values: floats through repr-stable float(), numpy
+    scalars unboxed, arrays/containers recursed (probe series are nested
+    lists)."""
     if isinstance(x, (np.floating,)):
         return float(x)
     if isinstance(x, (np.integer,)):
         return int(x)
+    if isinstance(x, np.ndarray):
+        return [_canon(v) for v in x.tolist()]
+    if isinstance(x, (list, tuple)):
+        return [_canon(v) for v in x]
+    if isinstance(x, dict):
+        return {k: _canon(v) for k, v in x.items()}
     return x
 
 
@@ -141,10 +161,17 @@ def summarize(records: List[Dict]) -> List[Dict]:
 
     Reports mean and p99 CCT, the max-over-seeds queue maximum, and the seed
     spread (std / min / max of CCT) that the paper's error bars show.
+
+    Tolerant of schema growth: records missing the core metrics (e.g. rows
+    from a future producer, or non-point rows mixed into a shared file) are
+    skipped rather than KeyError'd, and extra keys -- probe series, trace
+    cross-references -- are ignored.
     """
     groups: Dict[tuple, List[Dict]] = {}
     order: List[tuple] = []
     for r in records:
+        if "cct" not in r:
+            continue
         key = tuple(r.get(k) for k in _KEY_FIELDS)
         if key not in groups:
             groups[key] = []
@@ -155,7 +182,8 @@ def summarize(records: List[Dict]) -> List[Dict]:
     for key in order:
         rs = groups[key]
         cct = np.array([r["cct"] for r in rs], dtype=np.float64)
-        mq = np.array([r["max_queue"] for r in rs], dtype=np.float64)
+        mq = np.array([r.get("max_queue", 0.0) for r in rs],
+                      dtype=np.float64)
         row = dict(zip(_KEY_FIELDS, key))
         row.update({
             "n_seeds": len(rs),

@@ -18,9 +18,18 @@ Each grid point yields one record in the :class:`~repro.sweep.results
 ``fastsim.simulate`` calls with the same seeds (tested in
 ``tests/test_sweep.py``).  Pass ``compile_cache=<dir>`` (or set
 ``REPRO_COMPILE_CACHE``) to persist compiled pipelines across invocations.
+
+Telemetry (``repro.obs``): every run can emit a versioned JSONL dispatch
+trace (``trace=TraceWriter(...)``) -- one span per fused dispatch carrying
+the member population, padding-fill ratios, device fill, wall seconds and
+compile-cache state -- and logs through a :class:`~repro.obs.log
+.SweepLogger` (default one line per dispatch).  Both are pure observers:
+with them off (the defaults) the runner's outputs are byte-identical to the
+pre-telemetry runner (tested in ``tests/test_obs.py``).
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -29,6 +38,9 @@ import numpy as np
 from ..net.topology import FatTree, LinkState, rho_max
 from ..net import workloads, fastsim, loopsim
 from ..core import lb_schemes as lbs
+from ..obs.log import SweepLogger, dispatch_line
+from ..obs.probes import probe_shape
+from ..obs.trace import TraceWriter
 from . import compile_cache
 from .planner import MegaBatch, SeedBatch, plan
 from .results import ResultStore, loop_point_record, point_record
@@ -108,7 +120,8 @@ def _run_fast_mega(mega: MegaBatch, campaign: Campaign, cache: _Cache):
     return fastsim.simulate_megabatch(items, prop_slots=campaign.prop_slots,
                                       backend=campaign.backend,
                                       npk_pad=mega.npk_pad,
-                                      n_shards=n_shards, k_pad=mega.k_pad)
+                                      n_shards=n_shards, k_pad=mega.k_pad,
+                                      probes=campaign.probes)
 
 
 def _run_loop_mega(mega: MegaBatch, campaign: Campaign, cache: _Cache):
@@ -126,13 +139,78 @@ def _run_loop_mega(mega: MegaBatch, campaign: Campaign, cache: _Cache):
                       b.g_converge))
     n_shards = "auto" if campaign.shard == "auto" else 1
     return loopsim.simulate_megabatch(items, npk_pad=mega.npk_pad,
-                                      n_shards=n_shards, k_pad=mega.k_pad)
+                                      n_shards=n_shards, k_pad=mega.k_pad,
+                                      probes=campaign.probes)
+
+
+def _probe_field(campaign: Campaign):
+    stride, samples = probe_shape(campaign.probes)
+    return [stride, samples] if samples else None
+
+
+def _compile_misses() -> int:
+    """Total in-process compile-cache misses across both engines; the delta
+    around a dispatch distinguishes a fresh compile from a cache hit."""
+    return (fastsim._build_run.cache_info().misses
+            + loopsim._compiled.cache_info().misses)
+
+
+def _cache_files(cache_dir) -> int:
+    if not cache_dir:
+        return 0
+    try:
+        import pathlib
+        return sum(1 for f in pathlib.Path(cache_dir).rglob("*")
+                   if f.is_file())
+    except OSError:
+        return 0
+
+
+def _dispatch_span(idx: int, mega: MegaBatch, campaign: Campaign,
+                   n_shards_pol, devices: int) -> Dict:
+    """The deterministic part of a dispatch span: member population and
+    padding accounting, computable before execution."""
+    rows = mega.n_points
+    n_shards = (max(1, min(devices, rows))
+                if n_shards_pol == "auto" else 1)
+    rows_padded = -(-rows // n_shards) * n_shards
+    pkt_rows_real = sum(b.load.n_packets(b.k) * len(b.seeds)
+                        for b in mega.members)
+    pkt_rows_padded = rows_padded * mega.npk_pad
+    span = {
+        "kind": "dispatch",
+        "campaign": campaign.name,
+        "dispatch": idx,
+        "engine": mega.engine,
+        "key": repr(mega.key),
+        "n_members": len(mega.members),
+        "n_points": rows,
+        "schemes": sorted({b.scheme for b in mega.members}),
+        "trees": sorted({b.k for b in mega.members}),
+        "k_pad": mega.k_pad,
+        "npk_pad": mega.npk_pad,
+        "pkt_rows_real": pkt_rows_real,
+        "pkt_rows_padded": pkt_rows_padded,
+        "pkt_fill": pkt_rows_real / max(pkt_rows_padded, 1),
+        "rows_padded": rows_padded,
+        "row_fill": rows / max(rows_padded, 1),
+        "n_shards": n_shards,
+        "devices": devices,
+        "probes": _probe_field(campaign),
+    }
+    if mega.engine == "loop":
+        span["slot_budget"] = int(campaign.max_slots)
+    return span
 
 
 def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,
                  keep_full: bool = False,
                  progress: Optional[Callable[[str], None]] = None,
-                 compile_cache_dir: Optional[str] = None):
+                 compile_cache_dir: Optional[str] = None,
+                 trace: Optional[TraceWriter] = None,
+                 log: Optional[SweepLogger] = None,
+                 timing_split: bool = False,
+                 profile_dir: Optional[str] = None):
     """Execute a campaign; returns (records, full_results).
 
     ``records`` is the flat list of per-point dicts (also appended to
@@ -143,45 +221,113 @@ def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,
     the persistent JAX compilation cache, so repeat invocations skip
     compiles entirely; pass ``False`` to keep it off even when the env var
     is set.
+
+    Observability (all optional, all pure observers):
+
+    * ``trace`` -- a :class:`~repro.obs.trace.TraceWriter`; the runner emits
+      one plan span, one span per fused dispatch and one campaign bookend.
+    * ``log`` -- a :class:`~repro.obs.log.SweepLogger`; defaults to quiet
+      when neither ``log`` nor ``progress`` is given.  The legacy
+      ``progress`` callable maps to a debug-level logger with ``progress``
+      as its sink, reproducing the old per-member output verbatim.
+    * ``timing_split`` -- dispatch twice (second call hits the in-process
+      compile caches and returns identical results) and report
+      ``compile_s`` / ``execute_s`` separately in the trace.
+    * ``profile_dir`` -- wrap execution in ``jax.profiler.trace`` for
+      TensorBoard-grade timelines (skipped with a log line if the profiler
+      is unavailable on this backend).
     """
+    if log is None:
+        log = (SweepLogger("debug", sink=progress) if progress is not None
+               else SweepLogger("quiet"))
     cache_dir = (None if compile_cache_dir is False
                  else compile_cache.enable(compile_cache_dir))
+    import jax
+    devices = len(jax.devices())
     p = plan(campaign)
-    if progress:
-        progress(p.describe())
-        if cache_dir:
-            progress(f"persistent compile cache: {cache_dir}")
+    log.info(p.describe())
+    if cache_dir:
+        log.info(f"persistent compile cache: {cache_dir}")
+    if trace:
+        trace.emit({
+            "kind": "plan", "campaign": campaign.name,
+            "n_points": p.n_points, "n_dispatches": p.n_dispatches,
+            "n_shapes": p.n_shapes, "devices": devices,
+            "engine": campaign.engine, "shard": campaign.shard,
+            "probes": _probe_field(campaign),
+            "cache_dir": str(cache_dir) if cache_dir else None,
+        })
     cache = _Cache()
     store = store if store is not None else ResultStore(None)
     n_before = len(store.records)   # store may be shared across campaigns
     full: Dict = {}
+
+    prof = contextlib.nullcontext()
+    if profile_dir:
+        try:
+            prof = jax.profiler.trace(str(profile_dir))
+        except Exception as e:          # profiler missing on this backend
+            log.info(f"jax.profiler unavailable ({e}); profiling skipped")
+
+    cache_files0 = _cache_files(cache_dir)
     t0 = time.perf_counter()
-    for mega in p.megabatches:
-        tb = time.perf_counter()
-        if mega.engine == "loop":
-            per_member = _run_loop_mega(mega, campaign, cache)
-            to_record = loop_point_record
-        else:
-            per_member = _run_fast_mega(mega, campaign, cache)
-            to_record = point_record
-        secs = time.perf_counter() - tb
-        for batch, results in zip(mega.members, per_member):
-            for point, res in zip(batch.points(), results):
-                store.append(to_record(point, res))
-                if keep_full:
-                    full[point] = res
-            # Apportion the fused dispatch's wall time over members by their
-            # share of fused points, so per-scheme timing summaries stay
-            # meaningful.
-            store.timings.append((batch, secs * len(batch.seeds)
-                                  / max(mega.n_points, 1)))
-            if progress:
-                progress(f"  {batch.scheme:>16s} k={batch.k} "
-                         f"{batch.load.label():<22s} x{len(batch.seeds)} "
-                         f"seeds: {store.timings[-1][1]:.2f}s")
-    if progress:
-        progress(f"campaign {campaign.name!r} done in "
-                 f"{time.perf_counter() - t0:.2f}s "
-                 f"({p.n_points} points, {p.n_dispatches} dispatches, "
-                 f"{p.n_shapes} shapes)")
+    with prof:
+        for idx, mega in enumerate(p.megabatches):
+            span = _dispatch_span(idx, mega, campaign, campaign.shard,
+                                  devices)
+            run = (_run_loop_mega if mega.engine == "loop"
+                   else _run_fast_mega)
+            to_record = (loop_point_record if mega.engine == "loop"
+                         else point_record)
+            misses0 = _compile_misses()
+            tb = time.perf_counter()
+            per_member = run(mega, campaign, cache)
+            t1 = time.perf_counter()
+            span["wall_s"] = secs = t1 - tb
+            span["cache"] = ("hit" if _compile_misses() == misses0
+                             else "miss")
+            if timing_split:
+                # Second dispatch hits the in-process compile caches, so its
+                # wall time is pure execute; the first call's excess is the
+                # compile (+trace) cost.  Results are identical by the
+                # megabatch determinism contract.
+                per_member = run(mega, campaign, cache)
+                t2 = time.perf_counter()
+                span["execute_s"] = t2 - t1
+                span["compile_s"] = max(0.0, (t1 - tb) - (t2 - t1))
+            if mega.engine == "loop":
+                slots = [float(r.cct_acked_slots)
+                         for results in per_member for r in results]
+                span["slots_run"] = int(max(slots)) if slots else 0
+                span["slot_fill"] = (span["slots_run"]
+                                     / max(span["slot_budget"], 1))
+            if trace:
+                trace.emit(span)
+            log.info(dispatch_line(span, p.n_dispatches))
+            for batch, results in zip(mega.members, per_member):
+                for point, res in zip(batch.points(), results):
+                    store.append(to_record(point, res))
+                    if keep_full:
+                        full[point] = res
+                # Apportion the fused dispatch's wall time over members by
+                # their share of fused points, so per-scheme timing summaries
+                # stay meaningful.
+                store.timings.append((batch, secs * len(batch.seeds)
+                                      / max(mega.n_points, 1)))
+                log.debug(f"  {batch.scheme:>16s} k={batch.k} "
+                          f"{batch.load.label():<22s} x{len(batch.seeds)} "
+                          f"seeds: {store.timings[-1][1]:.2f}s")
+    wall = time.perf_counter() - t0
+    if trace:
+        trace.emit({
+            "kind": "campaign", "campaign": campaign.name,
+            "n_points": p.n_points, "n_dispatches": p.n_dispatches,
+            "wall_s": wall,
+            "cache_entries_added": (_cache_files(cache_dir) - cache_files0
+                                    if cache_dir else 0),
+            "emit_s": trace.emit_s,
+        })
+    log.info(f"campaign {campaign.name!r} done in {wall:.2f}s "
+             f"({p.n_points} points, {p.n_dispatches} dispatches, "
+             f"{p.n_shapes} shapes)")
     return store.records[n_before:], full

@@ -19,6 +19,7 @@ import itertools
 from typing import Dict, Optional, Tuple
 
 from ..core import lb_schemes as lbs
+from ..obs.probes import ProbeSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +104,10 @@ class Campaign:
     ``shard`` controls device sharding of fused megabatch dispatches:
     ``'auto'`` splits the fused axis over all visible devices via
     ``shard_map``, ``'off'`` keeps single-device vmap.
+    ``probes`` opts points into carrying a downsampled per-layer
+    queue-occupancy time series out of the engines (``repro.obs.probes``);
+    ``None`` (the default) leaves every output bitwise-identical to a
+    probe-free build.
     """
     name: str
     schemes: Tuple[str, ...]
@@ -117,6 +122,7 @@ class Campaign:
     shard: str = "auto"
     max_slots: int = 200_000           # loop-engine slot budget
     loop_opts: Tuple[Tuple[str, object], ...] = ()
+    probes: Optional[ProbeSpec] = None  # opt-in queue time-series capture
 
     def __post_init__(self):
         for s in self.schemes:
@@ -182,6 +188,8 @@ class Campaign:
         d["failures"] = [dataclasses.asdict(f) if f else None
                          for f in self.failures]
         d["loop_opts"] = dict(self.loop_opts)
+        if self.probes is not None:
+            d["probes"] = dataclasses.asdict(self.probes)
         return d
 
     @classmethod
@@ -196,6 +204,8 @@ class Campaign:
         d["g_converge"] = tuple(d.get("g_converge", [None]))
         d["shard"] = d.get("shard", "auto")
         d["loop_opts"] = tuple(sorted(d.get("loop_opts", {}).items()))
+        pr = d.get("probes")
+        d["probes"] = ProbeSpec(**pr) if isinstance(pr, dict) else pr
         return cls(**d)
 
 

@@ -1,0 +1,277 @@
+"""Observability layer: probe invariants, bitwise probes-off safety, trace
+determinism, logger/report rendering, and schema tolerance."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.net.topology import FatTree, LAYER_NAMES
+from repro.net import workloads, fastsim, loopsim
+from repro.core import lb_schemes as lbs
+from repro import sweep
+from repro.obs import (ProbeSpec, QueueProbe, SweepLogger, TIMING_KEYS,
+                       TraceWriter, dispatch_line, load_trace, probe_shape,
+                       render_report, strip_timing)
+
+SEEDS = (0, 1)
+PROBES = ProbeSpec(stride=8, samples=64)
+
+
+def _fast_campaign(**kw):
+    base = dict(name="obs", schemes=("host_pkt", "simple_rr"),
+                loads=(sweep.WorkloadSpec("permutation", 32,
+                                          inter_pod_only=True),),
+                trees=(4,), seeds=SEEDS)
+    base.update(kw)
+    return sweep.Campaign(**base)
+
+
+def _loop_campaign(**kw):
+    base = dict(name="obs_loop", schemes=("host_pkt",),
+                loads=(sweep.WorkloadSpec("permutation", 16,
+                                          inter_pod_only=True),),
+                trees=(4,), seeds=SEEDS, engine="loop", max_slots=8000)
+    base.update(kw)
+    return sweep.Campaign(**base)
+
+
+@pytest.fixture(scope="module")
+def fast_off():
+    return sweep.run_campaign(_fast_campaign(), keep_full=True)
+
+
+@pytest.fixture(scope="module")
+def fast_on():
+    return sweep.run_campaign(_fast_campaign(probes=PROBES), keep_full=True)
+
+
+@pytest.fixture(scope="module")
+def loop_off():
+    return sweep.run_campaign(_loop_campaign(), keep_full=True)
+
+
+@pytest.fixture(scope="module")
+def loop_on():
+    return sweep.run_campaign(_loop_campaign(probes=PROBES), keep_full=True)
+
+
+# ---------------------------------------------------------------------------
+# Probe spec plumbing
+# ---------------------------------------------------------------------------
+
+def test_probe_spec_validation():
+    with pytest.raises(ValueError):
+        ProbeSpec(stride=0)
+    with pytest.raises(ValueError):
+        ProbeSpec(stride=4, samples=0)
+    assert ProbeSpec(stride=4, samples=16).horizon_slots == 64
+    assert probe_shape(None) == (0, 0)
+    assert probe_shape(PROBES) == (8, 64)
+    assert probe_shape((8, 64)) == (8, 64)
+
+
+def test_campaign_probes_json_roundtrip():
+    c = _fast_campaign(probes=PROBES)
+    c2 = sweep.Campaign.from_dict(json.loads(json.dumps(c.to_dict())))
+    assert c2 == c
+    assert c2.probes == PROBES
+    # probes-off specs round-trip too (and old spec files lack the key)
+    d = _fast_campaign().to_dict()
+    del d["probes"]
+    assert sweep.Campaign.from_dict(d).probes is None
+
+
+def test_probe_shape_in_fused_key():
+    """Probes are part of the compiled identity: a probed campaign plans to
+    the same dispatch count but different fused keys."""
+    k_off = {m.key for m in sweep.plan(_fast_campaign()).megabatches}
+    k_on = {m.key for m in sweep.plan(
+        _fast_campaign(probes=PROBES)).megabatches}
+    assert len(k_off) == len(k_on)
+    assert k_off.isdisjoint(k_on)
+
+
+# ---------------------------------------------------------------------------
+# Bitwise invariance: probes off == pre-telemetry behavior
+# ---------------------------------------------------------------------------
+
+def test_probes_off_records_byte_identical_with_observers(fast_off, tmp_path):
+    """Telemetry observers (trace + debug logger) must not perturb a single
+    output byte of a probes-off run."""
+    base_records, _ = fast_off
+    lines = []
+    tw = TraceWriter(tmp_path / "trace.jsonl")
+    records, _ = sweep.run_campaign(
+        _fast_campaign(), trace=tw, log=SweepLogger("debug",
+                                                    sink=lines.append),
+        keep_full=False)
+    tw.close()
+    assert [sweep.encode_record(r) for r in records] \
+        == [sweep.encode_record(r) for r in base_records]
+    assert not any(k.startswith("probe_") for r in records for k in r)
+    assert lines  # the logger did observe the run
+    assert (tmp_path / "trace.jsonl").exists()
+
+
+def test_probes_on_non_probe_fields_identical(fast_off, fast_on):
+    off_records, _ = fast_off
+    on_records, _ = fast_on
+    for a, b in zip(off_records, on_records):
+        assert a == {k: v for k, v in b.items()
+                     if not k.startswith("probe_")}
+        assert b["probe_stride"] == PROBES.stride
+
+
+def test_loop_probes_on_non_probe_fields_identical(loop_off, loop_on):
+    off_records, _ = loop_off
+    on_records, _ = loop_on
+    for a, b in zip(off_records, on_records):
+        assert a == {k: v for k, v in b.items()
+                     if not k.startswith("probe_")}
+
+
+# ---------------------------------------------------------------------------
+# Probe series semantics: window maxima reduce to the engine scalars
+# ---------------------------------------------------------------------------
+
+def test_fast_probe_layer_max_equals_max_queue(fast_on):
+    _, full = fast_on
+    assert full
+    for point, res in full.items():
+        assert isinstance(res.probe, QueueProbe)
+        assert res.probe.series.shape == (len(LAYER_NAMES), PROBES.samples)
+        lm = res.probe.layer_max()
+        for i, name in enumerate(LAYER_NAMES):
+            assert lm[i] == res.layers[name].max_queue, (point, name)
+        assert res.probe.overall_max() == res.max_queue
+
+
+def test_loop_probe_overall_max_equals_max_queue(loop_on):
+    _, full = loop_on
+    assert full
+    for point, res in full.items():
+        assert res.probe.series.shape == (5, PROBES.samples)
+        assert res.probe.overall_max() == res.max_queue, point
+
+
+def test_fast_probe_series_matches_serial(fast_on):
+    """The fused megabatch carries the same series a standalone probed
+    simulate produces."""
+    _, full = fast_on
+    tree = FatTree(4)
+    wl = workloads.permutation(tree, 32, np.random.default_rng(1),
+                               inter_pod_only=True)
+    for point, res in full.items():
+        serial = fastsim.simulate(tree, wl, lbs.by_name(point.scheme),
+                                  seed=point.seed, probes=PROBES)
+        np.testing.assert_array_equal(res.probe.series, serial.probe.series)
+
+
+def test_loop_probe_series_matches_serial(loop_on):
+    _, full = loop_on
+    tree = FatTree(4)
+    wl = workloads.permutation(tree, 16, np.random.default_rng(1),
+                               inter_pod_only=True)
+    cfg = _loop_campaign().loop_config()
+    for point, res in full.items():
+        serial = loopsim.simulate(tree, wl, lbs.by_name(point.scheme), cfg,
+                                  seed=point.seed, probes=PROBES)
+        np.testing.assert_array_equal(res.probe.series, serial.probe.series)
+
+
+# ---------------------------------------------------------------------------
+# Trace determinism and rendering
+# ---------------------------------------------------------------------------
+
+def test_trace_deterministic_modulo_timing(tmp_path):
+    traces = []
+    for i in range(2):
+        tw = TraceWriter(tmp_path / f"t{i}.jsonl")
+        sweep.run_campaign(_fast_campaign(), trace=tw)
+        tw.close()
+        traces.append([strip_timing(s)
+                       for s in load_trace(tmp_path / f"t{i}.jsonl")])
+    assert traces[0] == traces[1]
+    kinds = [s["kind"] for s in traces[0]]
+    assert kinds[0] == "plan" and kinds[-1] == "campaign"
+    assert kinds.count("dispatch") == sweep.plan(_fast_campaign()).n_dispatches
+    for s in traces[0]:
+        assert s["schema"] == 1
+        assert not TIMING_KEYS & set(s)
+
+
+def test_dispatch_spans_carry_cost_fields(tmp_path):
+    tw = TraceWriter()
+    sweep.run_campaign(_fast_campaign(), trace=tw, timing_split=True)
+    disp = [s for s in tw.spans if s["kind"] == "dispatch"]
+    assert disp
+    for s in disp:
+        assert 0 < s["pkt_fill"] <= 1.0
+        assert s["pkt_rows_real"] <= s["pkt_rows_padded"]
+        assert s["cache"] in ("hit", "miss")
+        assert s["wall_s"] > 0
+        assert s["execute_s"] > 0 and s["compile_s"] >= 0
+    end = tw.spans[-1]
+    assert end["kind"] == "campaign" and end["emit_s"] >= 0
+
+
+def test_loop_dispatch_span_slot_budget(tmp_path):
+    tw = TraceWriter()
+    records, _ = sweep.run_campaign(_loop_campaign(), trace=tw)
+    disp = [s for s in tw.spans if s["kind"] == "dispatch"]
+    assert all(s["slot_budget"] == 8000 for s in disp)
+    slots_run = max(s["slots_run"] for s in disp)
+    assert slots_run == int(max(r["cct_acked"] for r in records))
+    assert 0 < disp[0]["slot_fill"] <= 1.0
+
+
+def test_report_renders_trace_and_probes(fast_on, tmp_path):
+    records, _ = fast_on
+    tw = TraceWriter()
+    sweep.run_campaign(_fast_campaign(probes=PROBES), trace=tw)
+    text = render_report(tw.spans, records, top=2)
+    assert "dispatch timeline" in text
+    assert "top queue trajectories" in text
+    assert "padding:" in text
+    no_probe = render_report(tw.spans, [
+        {k: v for k, v in r.items() if not k.startswith("probe_")}
+        for r in records])
+    assert "no probe series" in no_probe
+
+
+def test_dispatch_line_format():
+    span = {"dispatch": 0, "engine": "fast", "schemes": ["host_pkt"],
+            "trees": [4, 8], "n_points": 6, "pkt_fill": 0.75,
+            "wall_s": 1.5, "cache": "hit"}
+    line = dispatch_line(span, 3)
+    assert "[1/3]" in line and "k={4,8}" in line
+    assert "x6" in line and "fill=0.75" in line and "[cached]" in line
+
+
+# ---------------------------------------------------------------------------
+# Schema tolerance
+# ---------------------------------------------------------------------------
+
+def test_summarize_tolerates_extra_and_foreign_records(fast_off):
+    records, _ = fast_off
+    base = sweep.summarize(records)
+    extra = [dict(r, probe_queue=[[1, 2]], future_key="x") for r in records]
+    mixed = extra + [{"kind": "note"}, {"campaign": "obs"}]
+    rows = sweep.summarize(mixed)
+    assert [{k: v for k, v in r.items()} for r in rows] == base
+
+
+def test_bench_json_merge(tmp_path, monkeypatch):
+    sweep_bench = pytest.importorskip(
+        "benchmarks.sweep_bench",
+        reason="benchmarks/ needs the repo root on sys.path")
+    path = tmp_path / "BENCH_sweep.json"
+    path.write_text(json.dumps({"schema": 1, "other_tool": {"keep": True},
+                                "megabatch_s": 99.0}))
+    monkeypatch.setattr(sweep_bench, "BENCH_JSON", path)
+    sweep_bench._merge_bench_json({"megabatch_s": 1.5, "plan": {"n": 2}})
+    merged = json.loads(path.read_text())
+    assert merged["schema"] == 2
+    assert merged["other_tool"] == {"keep": True}   # foreign section survives
+    assert merged["megabatch_s"] == 1.5             # ours overwrites
