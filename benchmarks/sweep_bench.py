@@ -45,6 +45,12 @@ the family whose in-loop draws used to pin fused keys to raw ``k`` and now
 rides counter streams (``core.entropy``): a (scheme x tree x seed) grid as
 one fused dispatch per scheme vs one campaign per tree size.
 
+A **faults sample** (``"faults"`` key) prices dynamic fault injection: a
+mixed campaign (no-failure, static random failures, a 3-epoch link flap
+schedule) fused onto one dispatch per compiled shape vs the serial
+per-point ``fastsim.simulate(..., fault=...)`` loop, CCTs verified
+identical first.
+
 A **telemetry sample** (``"telemetry"`` key) measures the observability
 layer's own cost: the timed megabatch run carries a live
 ``obs.TraceWriter`` (so ``megabatch_s`` *includes* tracing), and the
@@ -243,6 +249,66 @@ def _kfuse_loop_sample():
     }
 
 
+def _faults_sample():
+    """Dynamic-fault sample: a mixed campaign (no-failure, static random
+    failures, and a 3-epoch link flap schedule) fused onto the campaign axis
+    -- schedules ride the ``failure`` grid dimension, so the planner still
+    emits one dispatch per compiled shape -- vs the serial per-point
+    ``fastsim.simulate(..., fault=...)`` loop.  CCTs verified identical
+    before timing is reported."""
+    from repro.faults import FaultSchedule
+    seeds = tuple(range(2 if SMOKE else 4))
+    schemes = ("host_pkt", "host_dr")
+    load = sweep.WorkloadSpec("permutation", 8 if SMOKE else 32, rng_seed=1)
+    k = 4
+    tree = FatTree(k)
+    flap = FaultSchedule.flap(layer="ea", pod=0, i=0, j=1, t0=4, period=12,
+                              cycles=1, host_react=0, switch_react=0)
+    failures = (None, sweep.FailureSpec(0.08, 42), flap)
+
+    campaign = sweep.Campaign(name="sweep_bench_faults", schemes=schemes,
+                              loads=(load,), trees=(k,), seeds=seeds,
+                              failures=failures)
+    p = sweep.plan(campaign)
+    assert p.n_dispatches == p.n_shapes, p.describe()
+
+    _clear_compile_caches()
+    t0 = time.perf_counter()
+    records, _ = sweep.run_campaign(campaign)
+    fused_s = time.perf_counter() - t0
+
+    _clear_compile_caches()
+    wl = sweep.build_workload(tree, load)
+    cache = {}
+    t0 = time.perf_counter()
+    serial = {}
+    for nm in schemes:
+        for f in failures:
+            links = (sweep.build_links(tree, f)
+                     if isinstance(f, sweep.FailureSpec) else None)
+            fz = f if isinstance(f, FaultSchedule) else None
+            for s in seeds:
+                res = fastsim.simulate(tree, wl, lbs.by_name(nm), seed=s,
+                                       links=links, fault=fz)
+                serial[(nm, f.label() if f else None, s)] = res.cct
+    serial_s = time.perf_counter() - t0
+
+    fused = {(r["scheme"], r["failure"], r["seed"]): r["cct"]
+             for r in records}
+    assert fused == serial, "fused fault campaign CCTs diverge from serial"
+
+    return {
+        "grid": {"k": k, "msg_packets": load.msg_packets,
+                 "schemes": list(schemes), "n_seeds": len(seeds),
+                 "failures": [f.label() if f else None for f in failures],
+                 "flap_epochs": flap.n_epochs, "points": campaign.n_points},
+        "plan": {"n_dispatches": p.n_dispatches, "n_shapes": p.n_shapes},
+        "fused_s": round(fused_s, 3),
+        "serial_s": round(serial_s, 3),
+        "speedup_vs_serial": round(serial_s / fused_s, 2),
+    }
+
+
 def _probe_sample(campaign, records):
     """Probes-on re-run of the first scheme's slice: verifies the probe
     series' per-layer max reproduces the probe-free ``max_queue`` scalars,
@@ -390,6 +456,7 @@ def sweep_speedup(scale: C.Scale):
         "loop": _loop_sample(k, tree),
         "kfuse": _kfuse_sample(),
         "kfuse_loop": _kfuse_loop_sample(),
+        "faults": _faults_sample(),
     }
     _merge_bench_json(result)
     C.emit("sweep_speedup", batch_s * 1e6 / n_points,
@@ -407,6 +474,8 @@ def sweep_speedup(scale: C.Scale):
            kfuse_dispatches=result["kfuse"]["plan"]["n_dispatches"],
            kfuse_loop_speedup=result["kfuse_loop"]["speedup_vs_per_k"],
            kfuse_loop_dispatches=result["kfuse_loop"]["plan"]["n_dispatches"],
+           faults_speedup=result["faults"]["speedup_vs_serial"],
+           faults_dispatches=result["faults"]["plan"]["n_dispatches"],
            trace_overhead_frac=result["telemetry"]["trace_overhead_frac"],
            probe_s=result["telemetry"]["probe"]["probed_s"],
            points=n_points, dispatches=p.n_dispatches, shapes=p.n_shapes)

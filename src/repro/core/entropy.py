@@ -55,6 +55,7 @@ SITE_EDGE_JSQ = 3       # loopsim: per-(host, port) JSQ tie-break noise
 SITE_AGG_JSQ = 4        # loopsim: per-(packet, port) JSQ tie-break noise
 SITE_FAST_EDGE_JSQ = 5  # fastsim: per-(edge switch, rank, port) JSQ noise
 SITE_FAST_AGG_JSQ = 6   # fastsim: per-(agg switch, rank, port) JSQ noise
+SITE_LINK_FAIL = 7      # topology: per-(tree, layer, link) random failures
 
 _MASK32 = 0xFFFFFFFF
 _PARITY = 0x1BD11BDA                       # Threefry key-schedule parity

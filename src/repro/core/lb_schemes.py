@@ -57,6 +57,18 @@ class LBScheme:
     def needs_feedback(self) -> bool:
         return self.adaptive_host
 
+    def reaction_class(self) -> str:
+        """How fast this scheme observes path-state changes under a dynamic
+        fault schedule (``repro.faults``): ``'host'`` for schemes whose path
+        choices live at the host (host-labelled ``pre`` schemes and
+        ACK-adaptive REPS/PLB see failures end-to-end -- black-holed labels
+        stop returning ACKs), ``'switch'`` for switch-local state (RR, JSQ,
+        OFAN wait on local port status / W-ECMP convergence).  Selects
+        between a schedule's ``host_react`` and ``switch_react`` delays."""
+        if self.adaptive_host or self.edge_mode == "pre":
+            return "host"
+        return "switch"
+
     def table_keys(self) -> Tuple[str, ...]:
         """Names of the per-seed switch-table operands this scheme's
         fast-engine pipeline consumes, in pipeline argument order.  These are

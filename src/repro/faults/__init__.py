@@ -1,0 +1,6 @@
+"""Dynamic fault injection: declarative link down/up schedules that compile
+to epoch-indexed ``LinkState`` stacks both engines consume as time-varying
+operands (see :mod:`repro.faults.schedule`)."""
+from .schedule import CompiledFaults, FaultSchedule, LinkEvent
+
+__all__ = ["CompiledFaults", "FaultSchedule", "LinkEvent"]

@@ -34,6 +34,21 @@ host packet spraying, HOST DR, SIMPLE RR, SWITCH PKT (periodic re-permute),
 RSQ, JSQ, SWITCH PKT AR (quantized JSQ), OFAN.  Feedback schemes (REPS, PLB,
 MSwift) run on ``net.loopsim``.
 
+Dynamic fault schedules (``repro.faults.FaultSchedule``, the ``fault=``
+argument) time-slice the fabric into link-state epochs.  On this engine
+failures act purely through *routing* (the max-plus pipeline has no drops):
+each packet binds to the epoch whose reaction slot its integer release time
+``wl.t_release`` has passed -- ``host_react`` delayed for host-visible
+"pre" label choices (gathered host-side from per-epoch draws, so the
+pipeline is unchanged) and ``switch_react`` delayed for switch-local OFAN
+tables (an epoch axis on the pointer tables plus a per-packet seed-
+independent ``ep_sw`` operand).  Binding at the seed-independent release
+slot -- not the phase-adjusted arrival -- keeps the epoch map a static
+operand shared by every seed.  rand/RR/JSQ port choices ignore link state
+(exactly as they do under static failures here), so schedules are inert for
+them by construction.  A single-epoch schedule is bitwise-identical to the
+static ``links=`` path (tested in ``tests/test_faults.py``).
+
 Dispatch granularities: :func:`simulate` (one point),
 :func:`simulate_batch` (one point, seeds vmapped), and
 :func:`simulate_megabatch` (many points sharing a pipeline shape fused onto
@@ -135,14 +150,16 @@ def _lindley_layer(qid, a, tie, n_queues: int, backend: str):
 # Rank-based switch port selection (SIMPLE RR / SWITCH PKT / OFAN).
 # ---------------------------------------------------------------------------
 
-def _ranked_ports(gkey, a, tie, active, select_fn, backend):
+def _ranked_ports(gkey, a, tie, active, select_fn, backend, extra=None):
     """Sort active packets by (group pointer key, arrival), compute the rank of
     each packet within its group, and map rank -> port via ``select_fn(gid,
     rank)``.  Inactive packets get port 0 (unused): masking them -- rather
     than letting them keep the pseudo-rank of the discard group -- keeps the
     reported per-packet ports deterministic under shape-bucketing padding
     (pad rows join the discard group and would otherwise shift the ranks,
-    and hence the garbage ports, of real bypass packets)."""
+    and hence the garbage ports, of real bypass packets).  ``extra`` (an
+    optional per-packet operand, e.g. the fault-epoch index) is carried
+    through the sort and handed to ``select_fn(gid, rank, extra)``."""
     npk = gkey.shape[0]
     g = jnp.where(active, gkey, jnp.int32(2**30))
     order = jnp.lexsort((tie, a, g))
@@ -150,7 +167,10 @@ def _ranked_ports(gkey, a, tie, active, select_fn, backend):
     gs = g[order]
     rank, _ = _ranks_and_starts(gs, backend)
     gid = jnp.where(gs < 2**30, gs, 0)
-    port_sorted = select_fn(gid, rank)
+    if extra is None:
+        port_sorted = select_fn(gid, rank)
+    else:
+        port_sorted = select_fn(gid, rank, extra[order])
     return jnp.where(active, port_sorted[inv], 0).astype(jnp.int32)
 
 
@@ -276,12 +296,12 @@ def _select_fn_for(mode: str, h, tables: dict):
             return perms[gid, epoch, (starts[gid] + rank) % h]
         return f
     if mode == "ofan":
-        orders = tables["orders"]             # (n_ptrs, W)
-        starts = tables["starts"]
-        lens = tables["lens"]                 # (n_ptrs,)
-        def f(gid, rank):
-            L = jnp.maximum(lens[gid], 1)
-            return orders[gid, (starts[gid] + rank) % L]
+        orders = tables["orders"]             # (n_epochs, n_ptrs, W)
+        starts = tables["starts"]             # (n_epochs, n_ptrs)
+        lens = tables["lens"]                 # (n_epochs, n_ptrs)
+        def f(gid, rank, ep):
+            L = jnp.maximum(lens[ep, gid], 1)
+            return orders[ep, gid, (starts[ep, gid] + rank) % L]
         return f
     raise ValueError(mode)
 
@@ -304,7 +324,12 @@ class SimPlan:
     backend: str
     jsq_pad_factor: float
     static_args: dict = dataclasses.field(default_factory=dict)
-    path_valid: Optional[np.ndarray] = None
+    # Fault-epoch state: one LinkState per epoch ([links] for static points),
+    # per-epoch flow path matrices (None entries for failure-free epochs) and
+    # the host-reaction epoch index of each packet (see _prepare).
+    ep_links: list = dataclasses.field(default_factory=list)
+    pv: Optional[list] = None
+    ep_host: Optional[np.ndarray] = None
     n_reset_epochs: int = 1
     pad_e: int = 0
     pad_a: int = 0
@@ -346,12 +371,24 @@ class SimPlan:
 
 def _prepare(tree: FatTree, wl: Workload, scheme: LBScheme, prop_slots: float,
              links: Optional[LinkState], backend: str,
-             jsq_pad_factor: float) -> SimPlan:
+             jsq_pad_factor: float, fault=None) -> SimPlan:
     """Host-side precomputation shared by every seed of a simulation point."""
     if scheme.needs_feedback:
         raise ValueError(f"{scheme.name} needs ACK feedback; use net.loopsim")
+    if fault is not None:
+        if links is not None:
+            raise ValueError("pass either links= or fault=, not both")
+        comp = fault.compile(tree)
+        ep_links = list(comp.links)
+        links = ep_links[0]             # epoch-0 state for host-side consumers
+        host_starts = comp.react_starts("host")
+        switch_starts = comp.react_starts("switch")
+    else:
+        ep_links = [links]
+        host_starts = switch_starts = np.zeros(1, np.int32)
     plan = SimPlan(tree=tree, wl=wl, scheme=scheme, prop_slots=prop_slots,
                    links=links, backend=backend, jsq_pad_factor=jsq_pad_factor)
+    plan.ep_links = ep_links
     src, dst = wl.src, wl.dst
     p1 = tree.host_pod(src).astype(np.int32)
     e1 = tree.host_edge(src).astype(np.int32)
@@ -359,18 +396,34 @@ def _prepare(tree: FatTree, wl: Workload, scheme: LBScheme, prop_slots: float,
     e2 = tree.host_edge(dst).astype(np.int32)
     inter_pod = (p1 != p2)
     leaves_edge = inter_pod | (e1 != e2)
+    # Per-packet fault-epoch binding at the seed-independent integer release
+    # slot: react starts are nondecreasing, so the epoch visible to packet p
+    # is the last one whose reaction slot its release has passed (floored at
+    # 0 -- pre-reaction routing sees the base epoch).  Static points get the
+    # all-zeros map.
+    ep_host = np.maximum(
+        np.searchsorted(host_starts, wl.t_release, side="right") - 1,
+        0).astype(np.int32)
+    ep_sw = np.maximum(
+        np.searchsorted(switch_starts, wl.t_release, side="right") - 1,
+        0).astype(np.int32)
+    plan.ep_host = ep_host
     plan.static_args = dict(p1=p1, e1=e1, p2=p2, e2=e2,
                             dst=dst.astype(np.int32), inter_pod=inter_pod,
-                            leaves_edge=leaves_edge,
+                            leaves_edge=leaves_edge, ep_sw=ep_sw,
                             # Logical port count: an operand, so a point
                             # padded onto a larger tree's pipeline still
                             # rotates/sprays over its own k/2 ports.
                             h_log=np.int32(tree.half))
 
     # ---- path validity under failures (host visibility: converged state) --
-    if links is not None and links.any_failure() and scheme.edge_mode == "pre":
-        plan.path_valid = np.stack([links.path_matrix(int(s), int(d))
-                                    for s, d in zip(wl.flow_src, wl.flow_dst)])
+    if scheme.edge_mode == "pre":
+        pv = [np.stack([l.path_matrix(int(s), int(d))
+                        for s, d in zip(wl.flow_src, wl.flow_dst)])
+              if (l is not None and l.any_failure()) else None
+              for l in ep_links]
+        if any(x is not None for x in pv):
+            plan.pv = pv
 
     h = tree.half
     plan.tables_e_keys = plan.tables_a_keys = scheme.table_keys()
@@ -416,9 +469,19 @@ def _draw_seed_inputs(plan: SimPlan, seed: int) -> dict:
 
     a_pre = c_pre = None
     if scheme.edge_mode == "pre":
-        a_pre, c_pre = precompute_host_choices(
-            scheme, tree, wl.flow, wl.seq, wl.flow_src, wl.flow_dst, rng,
-            path_valid=plan.path_valid)
+        if plan.pv is None:
+            a_pre, c_pre = precompute_host_choices(
+                scheme, tree, wl.flow, wl.seq, wl.flow_src, wl.flow_dst, rng)
+        else:
+            # One sequential draw per epoch (epoch order extends the static
+            # stream: a single-epoch schedule consumes exactly the static
+            # path's draws), then gather each packet's host-reaction epoch.
+            per_ep = [precompute_host_choices(
+                scheme, tree, wl.flow, wl.seq, wl.flow_src, wl.flow_dst, rng,
+                path_valid=pv_e) for pv_e in plan.pv]
+            pk = np.arange(npk)
+            a_pre = np.stack([a for a, _ in per_ep])[plan.ep_host, pk]
+            c_pre = np.stack([c for _, c in per_ep])[plan.ep_host, pk]
         a_pre = a_pre.astype(np.int32)
         c_pre = c_pre.astype(np.int32)
     rand_a = rng.integers(0, h, npk).astype(np.int32)
@@ -439,11 +502,20 @@ def _draw_seed_inputs(plan: SimPlan, seed: int) -> dict:
             tables_a["rr_perms"] = np.argsort(
                 rng.random((n_aggs, n_ep, h)), axis=-1).astype(np.int32)
     elif scheme.edge_mode == "ofan":
-        ot = ofan_mod.build_tables(tree, rng, links=plan.links)
-        tables_e = {"orders": ot.edge_orders, "starts": ot.edge_starts,
-                    "lens": ot.edge_len}
-        tables_a = {"orders": ot.agg_orders, "starts": ot.agg_starts,
-                    "lens": ot.agg_len}
+        # One table build per fault epoch (epoch order; [links] for static
+        # points, so E=1 consumes the static stream).  Pointer tables carry
+        # an epoch axis -- width-padded to the widest epoch, pad columns
+        # sit beyond every epoch's ``lens`` modulo and are never selected.
+        ots = [ofan_mod.build_tables(tree, rng, links=l)
+               for l in plan.ep_links]
+        def _eps(arrs):
+            return np.stack(pad_to_group_max([np.asarray(a) for a in arrs]))
+        tables_e = {"orders": _eps([ot.edge_orders for ot in ots]),
+                    "starts": _eps([ot.edge_starts for ot in ots]),
+                    "lens": _eps([ot.edge_len for ot in ots])}
+        tables_a = {"orders": _eps([ot.agg_orders for ot in ots]),
+                    "starts": _eps([ot.agg_starts for ot in ots]),
+                    "lens": _eps([ot.agg_len for ot in ots])}
 
     # JSQ tie-break noise comes from the counter streams (core.entropy),
     # keyed on (seed, site, logical switch id, arrival rank, port): the
@@ -497,10 +569,15 @@ def simulate(tree: FatTree, wl: Workload, scheme: LBScheme, seed: int = 0,
              prop_slots: float = 12.0, collect_stats: bool = True,
              links: Optional[LinkState] = None,
              backend: str = "auto", jsq_pad_factor: float = 4.0,
-             probes=None) -> FastSimResult:
-    """Run one collective under ``scheme`` on the fast engine."""
+             probes=None, fault=None) -> FastSimResult:
+    """Run one collective under ``scheme`` on the fast engine.
+
+    ``fault`` (a ``repro.faults.FaultSchedule``) is the dynamic alternative
+    to a static ``links`` pattern -- see the module docstring for the
+    epoch-binding semantics on this engine.
+    """
     plan = _prepare(tree, wl, scheme, prop_slots, links, backend,
-                    jsq_pad_factor)
+                    jsq_pad_factor, fault=fault)
     run = plan.build_run(batch=False, probes=probes)
     out = run({**plan.static_args, **_draw_seed_inputs(plan, seed)})
     out = jax.tree_util.tree_map(np.asarray, out)
@@ -510,7 +587,7 @@ def simulate(tree: FatTree, wl: Workload, scheme: LBScheme, seed: int = 0,
         return simulate(tree, wl, scheme, seed=seed, prop_slots=prop_slots,
                         collect_stats=collect_stats, links=links,
                         backend=backend, jsq_pad_factor=jsq_pad_factor * 2,
-                        probes=probes)
+                        probes=probes, fault=fault)
     return _postprocess(out, wl, probes)
 
 
@@ -518,7 +595,8 @@ def simulate_batch(tree: FatTree, wl: Workload, scheme: LBScheme,
                    seeds, prop_slots: float = 12.0,
                    collect_stats: bool = True,
                    links: Optional[LinkState] = None, backend: str = "auto",
-                   jsq_pad_factor: float = 4.0, probes=None) -> list:
+                   jsq_pad_factor: float = 4.0, probes=None,
+                   fault=None) -> list:
     """Run one simulation point for many seeds as a single vmapped dispatch.
 
     Per-seed randomness is drawn host-side exactly as :func:`simulate` draws
@@ -532,7 +610,7 @@ def simulate_batch(tree: FatTree, wl: Workload, scheme: LBScheme,
     if not seeds:
         return []
     plan = _prepare(tree, wl, scheme, prop_slots, links, backend,
-                    jsq_pad_factor)
+                    jsq_pad_factor, fault=fault)
     per_seed = [_draw_seed_inputs(plan, s) for s in seeds]
     stacked = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *per_seed)
     run = plan.build_run(batch=True, probes=probes)
@@ -555,7 +633,7 @@ def simulate_batch(tree: FatTree, wl: Workload, scheme: LBScheme,
                                 collect_stats=collect_stats, links=links,
                                 backend=backend,
                                 jsq_pad_factor=jsq_pad_factor * 2,
-                                probes=probes)
+                                probes=probes, fault=fault)
         results.update(dict(zip(retry, redone)))
     return [results[s] for s in seeds]
 
@@ -566,7 +644,7 @@ def simulate_batch(tree: FatTree, wl: Workload, scheme: LBScheme,
 
 # Per-packet pipeline arguments (padded to the bucketed packet count).
 _PKT_KEYS = ("p1", "e1", "p2", "e2", "dst", "inter_pod", "leaves_edge",
-             "t_rel", "tie", "a_pre", "c_pre", "rand_a", "rand_c")
+             "ep_sw", "t_rel", "tie", "a_pre", "c_pre", "rand_a", "rand_c")
 
 
 def _pipeline_identity(plan: SimPlan) -> Tuple:
@@ -601,10 +679,10 @@ def _repad_elem(d: dict, plan: SimPlan, tp: TreePad) -> dict:
             tbl["rr_starts"] = _sw(tbl["rr_starts"])
         if "rr_perms" in tbl:
             tbl["rr_perms"] = _sw(_pad_tail(tbl["rr_perms"], 2, pt.half))
-        if "orders" in tbl:                       # OFAN pointer tables
-            tbl["orders"] = tp.scatter(tbl["orders"], ptr_idx, n_ptr)
-            tbl["starts"] = tp.scatter(tbl["starts"], ptr_idx, n_ptr)
-            tbl["lens"] = tp.scatter(tbl["lens"], ptr_idx, n_ptr)
+        if "orders" in tbl:      # OFAN pointer tables, (n_epochs, n_ptr, W)
+            tbl["orders"] = tp.scatter(tbl["orders"], ptr_idx, n_ptr, axis=1)
+            tbl["starts"] = tp.scatter(tbl["starts"], ptr_idx, n_ptr, axis=1)
+            tbl["lens"] = tp.scatter(tbl["lens"], ptr_idx, n_ptr, axis=1)
         d[key] = tuple(tbl[k] for k in keys)
     if plan.jsq:
         for k in ("noise_e", "noise_a"):
@@ -619,10 +697,15 @@ def simulate_megabatch(items, *, prop_slots: float = 12.0,
     """Run many simulation points as ONE fused, jitted dispatch.
 
     ``items`` is a sequence of ``(tree, wl, scheme, seeds, links)`` tuples
-    whose points lower to the same compiled pipeline (equal
-    ``LBScheme.shape_key()``, same backend) -- e.g. flow_ecmp,
-    subflow_mptcp, host_pkt and host_dr grids on any mix of workloads,
-    failure patterns and tree sizes.  Per-seed inputs are drawn host-side
+    -- optionally ``(tree, wl, scheme, seeds, links, fault)`` with a
+    ``repro.faults.FaultSchedule`` sixth element (mixed freely with
+    5-tuples; ``links`` must then be None) -- whose points lower to the
+    same compiled pipeline (equal ``LBScheme.shape_key()``, same backend)
+    -- e.g. flow_ecmp, subflow_mptcp, host_pkt and host_dr grids on any
+    mix of workloads, failure patterns, fault schedules and tree sizes.
+    Fault epochs are per-packet gather indices bounded by each member's
+    own epoch count, so epoch axes simply zero-pad to the group maximum
+    alongside the other table axes and static/flapping members fuse.  Per-seed inputs are drawn host-side
     exactly as :func:`simulate` draws them, padded to shared shapes (packet
     arrays up to ``npk_pad``, JSQ noise grids and scheme tables up to
     group-wide maxima, switch-indexed tables scattered into the padded
@@ -641,13 +724,14 @@ def simulate_megabatch(items, *, prop_slots: float = 12.0,
     pad-overflow retry decision (tested in ``tests/test_sweep.py`` and
     ``tests/test_differential.py``).
     """
-    items = [(t, w, s, list(seeds), l) for (t, w, s, seeds, l) in items]
+    items = [(it[0], it[1], it[2], list(it[3]), it[4],
+              it[5] if len(it) > 5 else None) for it in items]
     if not items or all(not it[3] for it in items):
         return [[] for _ in items]
 
     plans = [_prepare(tree, wl, scheme, prop_slots, links, backend,
-                      jsq_pad_factor)
-             for (tree, wl, scheme, _, links) in items]
+                      jsq_pad_factor, fault=fz)
+             for (tree, wl, scheme, _, links, fz) in items]
     idents = {_pipeline_identity(p) for p in plans}
     if len(idents) > 1:
         raise ValueError(f"megabatch items span {len(idents)} pipeline "
@@ -667,7 +751,7 @@ def simulate_megabatch(items, *, prop_slots: float = 12.0,
 
     elems: list = []          # merged (static + per-seed) dicts, padded
     spans: list = []          # (item index, seed) per fused-axis element
-    for i, ((tree, wl, scheme, seeds, links), plan) in enumerate(
+    for i, ((tree, wl, scheme, seeds, links, fz), plan) in enumerate(
             zip(items, plans)):
         for s in seeds:
             d = _repad_elem({**plan.static_args,
@@ -725,16 +809,16 @@ def simulate_megabatch(items, *, prop_slots: float = 12.0,
     # run would re-pad, through the seed-batched path (whose retry is itself
     # bitwise-identical to serial simulate).
     for i, retry_seeds in retries.items():
-        tree, wl, scheme, _, links = items[i]
+        tree, wl, scheme, _, links, fz = items[i]
         redone = simulate_batch(tree, wl, scheme, retry_seeds,
                                 prop_slots=prop_slots, links=links,
                                 backend=backend,
                                 jsq_pad_factor=jsq_pad_factor * 2,
-                                probes=probes)
+                                probes=probes, fault=fz)
         results[i].update(dict(zip(retry_seeds, redone)))
 
     return [[results[i][s] for s in seeds]
-            for i, (_, _, _, seeds, _) in enumerate(items)]
+            for i, (_, _, _, seeds, _, _) in enumerate(items)]
 
 
 # Positional order of the pipeline arguments; the first _N_STATIC are
@@ -742,10 +826,10 @@ def simulate_megabatch(items, *, prop_slots: float = 12.0,
 # carry the seed batch axis.  In the megabatched variant ("mega") *every*
 # argument carries the fused (scheme x load x failure x seed) axis.
 _ARG_ORDER = ("p1", "e1", "p2", "e2", "dst", "inter_pod", "leaves_edge",
-              "pad_lim_e", "pad_lim_a", "h_log",
+              "ep_sw", "pad_lim_e", "pad_lim_a", "h_log",
               "t_rel", "tie", "a_pre", "c_pre", "rand_a", "rand_c",
               "noise_e", "noise_a", "te", "ta")
-_N_STATIC = 10
+_N_STATIC = 11
 
 
 @functools.lru_cache(maxsize=64)
@@ -774,7 +858,7 @@ def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
 
     mid = n_pods * h * h   # queues per middle layer
 
-    def pipeline(p1, e1, p2, e2, dst, inter_pod, leaves_edge,
+    def pipeline(p1, e1, p2, e2, dst, inter_pod, leaves_edge, ep_sw,
                  pad_lim_e, pad_lim_a, h_log, t_rel, tie,
                  a_pre, c_pre, rand_a, rand_c, noise_e, noise_a, te, ta):
         tbl_e = dict(zip(tables_e_keys, te))
@@ -808,7 +892,7 @@ def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
             gkey = edge_switch * n_edges + dst_edge
             a_used = _ranked_ports(gkey, a_t, tie, leaves_edge,
                                    _select_fn_for("ofan", h_log, tbl_e),
-                                   backend)
+                                   backend, extra=ep_sw)
         if edge_mode in ("jsq", "jsq_quant"):
             a_used, d, occ, max_rank = _jsq_layer(
                 edge_switch, a_t, tie, leaves_edge, n_switches=n_edges,
@@ -844,7 +928,7 @@ def _build_run(*, h, n_pods, n_edges, n_aggs, n_hosts, edge_mode, agg_mode,
             gkey = agg_switch * n_pods + p2
             c_used = _ranked_ports(gkey, a_t, tie, inter_pod,
                                    _select_fn_for("ofan", h_log, tbl_a),
-                                   backend)
+                                   backend, extra=ep_sw)
         if agg_mode in ("jsq", "jsq_quant"):
             c_used, d, occ, max_rank = _jsq_layer(
                 agg_switch, a_t, tie, inter_pod, n_switches=n_aggs,

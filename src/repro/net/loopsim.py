@@ -27,6 +27,13 @@ weights, RR/JSQ over locally-alive ports) and hosts re-draw labels among
 valid paths.  Host-adaptive REPS additionally avoids dead paths *before*
 convergence because labels that black-hole never return ACKs and hence are
 never recycled into the pool -- the paper's key failure-resilience mechanism.
+Dynamic fault schedules (``repro.faults.FaultSchedule``) generalize this to
+E link-state *epochs*: every link-derived operand carries a leading epoch
+axis the loop gathers by current slot, the physical state switching exactly
+at each epoch start and the routing state a per-scheme reaction delay later
+(host-visible schemes react with ``host_react``, switch-local ones with
+``switch_react``); the static (links, g_converge) pair is the one-epoch
+special case and stays bitwise-identical.
 
 Dispatch granularities (mirroring ``fastsim``):
 
@@ -162,32 +169,51 @@ class _Static:
 @dataclasses.dataclass
 class LoopPlan:
     """Seed-independent preparation of one (tree, workload, scheme, cfg,
-    links, g_converge) simulation point.
+    links, g_converge | fault) simulation point.
 
     Splitting this out of :func:`simulate` is what makes seed replication
     and point fusion batchable: everything here is identical across seeds,
     while :func:`_draw_seed_inputs` produces the per-seed operands that
     become the leading ``vmap`` axis in :func:`simulate_batch` /
     :func:`simulate_megabatch`.
+
+    ``ep_links`` is the fault-epoch timeline (one entry, the static link
+    state, when no schedule was given); every link-derived table carries a
+    leading epoch axis the engine gathers by current slot.  ``pv`` mirrors
+    it: one per-flow path-validity stack per epoch (or None).
     """
     tree: FatTree
     wl: Workload
     scheme: LBScheme
     cfg: LoopConfig
-    links: LinkState
+    links: LinkState                 # epoch-0 link state
+    ep_links: list
     any_fail: bool
-    pv: Optional[np.ndarray]
+    pv: Optional[list]
     fsrc: np.ndarray
     fdst: np.ndarray
     static: _Static
     tables: dict
 
+    @property
+    def n_epochs(self) -> int:
+        return len(self.ep_links)
+
 
 def _prepare(tree: FatTree, wl: Workload, scheme: LBScheme,
              cfg: LoopConfig = LoopConfig(),
              links: Optional[LinkState] = None,
-             g_converge: Optional[int] = None, probes=None) -> LoopPlan:
-    """Host-side precomputation shared by every seed of a simulation point."""
+             g_converge: Optional[int] = None, probes=None,
+             fault=None) -> LoopPlan:
+    """Host-side precomputation shared by every seed of a simulation point.
+
+    ``fault`` (a ``repro.faults.FaultSchedule``) is the dynamic alternative
+    to the static ``links``/``g_converge`` pair: it compiles to an epoch
+    timeline whose link states become stacked, slot-gathered operands, with
+    per-scheme reaction delays replacing the single convergence slot.  The
+    static pair lowers to the identical machinery with one epoch starting
+    at slot 0 and reacting at ``g_converge``.
+    """
     h = tree.half
     n = tree.n_hosts
     P = wl.n_packets
@@ -216,16 +242,34 @@ def _prepare(tree: FatTree, wl: Workload, scheme: LBScheme,
         host_flows[sh, cnt[sh]] = f
         cnt[sh] += 1
 
-    any_fail = links is not None and links.any_failure()
-    if links is None:
-        links = LinkState.all_up(tree)
-    alive = np.concatenate([
-        links.ea.reshape(-1),                         # UP_E (pod,edge,agg)
-        links.ac.reshape(-1),                         # UP_A (pod,agg,sub)
-        links.ac.reshape(-1),                         # DN_C (pod,agg,sub)
-        np.transpose(links.ea, (0, 2, 1)).reshape(-1),  # DN_A (pod,agg,edge)
-        np.ones(n, bool)])
-    G = np.int32(g_converge if g_converge is not None else 2**30)
+    # ---- fault-epoch timeline ---------------------------------------------
+    # Static (links, g_converge) lowers to a single epoch starting at slot 0
+    # whose routing reacts at g_converge; a FaultSchedule compiles to E
+    # epochs with per-scheme reaction delays.  Every link-derived table
+    # below carries a leading epoch axis the engine gathers by slot.
+    if fault is not None:
+        if links is not None or g_converge is not None:
+            raise ValueError("pass either fault= or links=/g_converge=, "
+                             "not both")
+        comp = fault.compile(tree)
+        ep_links = list(comp.links)
+        ep_start = np.asarray(comp.ep_start, np.int32)
+        r_start = comp.react_starts(scheme.reaction_class())
+    else:
+        ep_links = [links if links is not None else LinkState.all_up(tree)]
+        ep_start = np.zeros(1, np.int32)
+        r_start = np.asarray(
+            [g_converge if g_converge is not None else 2**30], np.int32)
+    E = len(ep_links)
+    links = ep_links[0]
+    any_fail = any(l.any_failure() for l in ep_links)
+
+    alive = np.stack([np.concatenate([
+        l.ea.reshape(-1),                           # UP_E (pod,edge,agg)
+        l.ac.reshape(-1),                           # UP_A (pod,agg,sub)
+        l.ac.reshape(-1),                           # DN_C (pod,agg,sub)
+        np.transpose(l.ea, (0, 2, 1)).reshape(-1),  # DN_A (pod,agg,edge)
+        np.ones(n, bool)]) for l in ep_links])
 
     # Per-(switch, destination-group) valid port sets (W-ECMP reachability):
     # used by switch schemes after routing convergence.  Edge switches group
@@ -248,49 +292,62 @@ def _prepare(tree: FatTree, wl: Workload, scheme: LBScheme,
             cnts[i] = len(alive_p)
         return ports, cnts
 
-    # edge: valid uplink a for (src edge (p1,e1), dst edge (p2,e2))
-    valid_e = np.zeros((n_edges, n_edges, h), bool)
-    for se in range(n_edges):
-        sp, sei = divmod(se, h)
-        for de in range(n_edges):
-            dp, dei = divmod(de, h)
-            if se == de:
-                valid_e[se, de] = links.ea[sp, sei, :]
-                continue
-            valid_e[se, de] = links.wecmp_edge_weights(sp, sei, dp, dei) > 0
-    # agg: valid core sub-link c for (agg (p,a), dst pod)
-    valid_a = np.zeros((n_aggs, tree.n_pods, h), bool)
-    for ga in range(n_aggs):
-        sp, ai = divmod(ga, h)
-        for dp in range(tree.n_pods):
-            if dp == sp:
-                valid_a[ga, dp] = links.ac[sp, ai, :]  # unused southbound
-            else:
-                valid_a[ga, dp] = links.ac[sp, ai, :] & links.ac[dp, ai, :]
-    e_ports, e_pcnt = _port_lists(valid_e)
-    a_ports, a_pcnt = _port_lists(valid_a)
-    e_dead = ~valid_e
-    a_dead = ~valid_a
+    def _wecmp_valid(l):
+        # edge: valid uplink a for (src edge (p1,e1), dst edge (p2,e2))
+        valid_e = np.zeros((n_edges, n_edges, h), bool)
+        for se in range(n_edges):
+            sp, sei = divmod(se, h)
+            for de in range(n_edges):
+                dp, dei = divmod(de, h)
+                if se == de:
+                    valid_e[se, de] = l.ea[sp, sei, :]
+                    continue
+                valid_e[se, de] = l.wecmp_edge_weights(sp, sei, dp, dei) > 0
+        # agg: valid core sub-link c for (agg (p,a), dst pod)
+        valid_a = np.zeros((n_aggs, tree.n_pods, h), bool)
+        for ga in range(n_aggs):
+            sp, ai = divmod(ga, h)
+            for dp in range(tree.n_pods):
+                if dp == sp:
+                    valid_a[ga, dp] = l.ac[sp, ai, :]  # unused southbound
+                else:
+                    valid_a[ga, dp] = l.ac[sp, ai, :] & l.ac[dp, ai, :]
+        return valid_e, valid_a
+
+    e_ports = np.zeros((E, n_edges * n_edges, h), np.int32)
+    e_pcnt = np.zeros((E, n_edges * n_edges), np.int32)
+    a_ports = np.zeros((E, n_aggs * tree.n_pods, h), np.int32)
+    a_pcnt = np.zeros((E, n_aggs * tree.n_pods), np.int32)
+    e_dead = np.zeros((E, n_edges, n_edges, h), bool)
+    a_dead = np.zeros((E, n_aggs, tree.n_pods, h), bool)
+    for e_i, l in enumerate(ep_links):
+        valid_e, valid_a = _wecmp_valid(l)
+        e_ports[e_i], e_pcnt[e_i] = _port_lists(valid_e)
+        a_ports[e_i], a_pcnt[e_i] = _port_lists(valid_a)
+        e_dead[e_i] = ~valid_e
+        a_dead[e_i] = ~valid_a
 
     # Path-validity matrices (seed-independent, rng-free): consumed by the
     # per-seed host-choice precompute and the REPS/PLB valid-label lists.
+    # One (F, h, h) stack per epoch.
     pv = None
     if any_fail and (scheme.edge_mode == "pre" or scheme.adaptive_host):
-        pv = np.stack([links.path_matrix(int(s_), int(d_))
-                       for s_, d_ in zip(fsrc, fdst)])
+        pv = [np.stack([l.path_matrix(int(s_), int(d_))
+                        for s_, d_ in zip(fsrc, fdst)]) for l in ep_links]
 
-    # Valid-path list per flow: post-convergence the W-ECMP rehash maps any
-    # flow label onto an alive path (paper §5.2).  Used by REPS/PLB labels.
-    f_vpaths = np.tile(np.arange(h * h, dtype=np.int32), (F, 1))
-    f_vcnt = np.full(F, h * h, dtype=np.int32)
+    # Valid-path list per flow and epoch: post-convergence the W-ECMP rehash
+    # maps any flow label onto an alive path (paper §5.2).  REPS/PLB labels.
+    f_vpaths = np.tile(np.arange(h * h, dtype=np.int32), (E, F, 1))
+    f_vcnt = np.full((E, F), h * h, dtype=np.int32)
     if any_fail and scheme.adaptive_host:
-        for fi in range(F):
-            cand = np.flatnonzero(pv[fi].reshape(-1))
-            if len(cand) == 0:
-                cand = np.arange(h * h)
-            reps = int(np.ceil(h * h / len(cand)))
-            f_vpaths[fi] = np.tile(cand, reps)[:h * h]
-            f_vcnt[fi] = len(cand)
+        for e_i in range(E):
+            for fi in range(F):
+                cand = np.flatnonzero(pv[e_i][fi].reshape(-1))
+                if len(cand) == 0:
+                    cand = np.arange(h * h)
+                reps = int(np.ceil(h * h / len(cand)))
+                f_vpaths[e_i, fi] = np.tile(cand, reps)[:h * h]
+                f_vcnt[e_i, fi] = len(cand)
 
     static = _Static(
         n=n, h=h, mid=mid, F=F, P=P, Fh=Fh,
@@ -307,7 +364,7 @@ def _prepare(tree: FatTree, wl: Workload, scheme: LBScheme,
         fsrc=fsrc, fdst=fdst, fsize=fsize, pkt_base=pkt_base,
         fp1=fp1, fe1=fe1, fp2=fp2, fe2=fe2,
         f_inter=f_inter, f_leaves=f_leaves, host_flows=host_flows,
-        alive=alive, G=G,
+        alive=alive, ep_start=ep_start, r_start=r_start,
         e_ports=e_ports, e_pcnt=e_pcnt, a_ports=a_ports, a_pcnt=a_pcnt,
         e_dead=e_dead, a_dead=a_dead,
         f_vpaths=f_vpaths, f_vcnt=f_vcnt,
@@ -318,16 +375,27 @@ def _prepare(tree: FatTree, wl: Workload, scheme: LBScheme,
         h_log=np.int32(h),
     )
     return LoopPlan(tree=tree, wl=wl, scheme=scheme, cfg=cfg, links=links,
-                    any_fail=any_fail, pv=pv, fsrc=fsrc, fdst=fdst,
-                    static=static, tables=tables)
+                    ep_links=ep_links, any_fail=any_fail, pv=pv,
+                    fsrc=fsrc, fdst=fdst, static=static, tables=tables)
 
 
 def _draw_seed_inputs(plan: LoopPlan, seed: int) -> dict:
     """Per-seed randomness, drawn in the exact order the pre-batching engine
-    used so results stay bit-identical run-to-run and serial-to-batched."""
+    used so results stay bit-identical run-to-run and serial-to-batched.
+
+    Fault epochs extend the sequential ``np.random`` stream *in epoch
+    order* at the exact positions the static path draws its converged
+    state: stale host choices first, then one converged draw per epoch,
+    then the label pool / RR starts, then the stale OFAN tables, then one
+    converged OFAN build per epoch.  A one-epoch plan therefore consumes
+    the identical stream as the pre-schedule engine (bitwise goldens), and
+    a failure-free plan aliases its converged state to the stale draw
+    without consuming anything, as before.
+    """
     tree, wl, scheme = plan.tree, plan.wl, plan.scheme
     h = tree.half
     P = wl.n_packets
+    E = plan.n_epochs
     rng = np.random.default_rng(seed)
     key_lo, key_hi = ent.key_words(seed)
 
@@ -338,33 +406,37 @@ def _draw_seed_inputs(plan: LoopPlan, seed: int) -> dict:
         a_stale, c_stale = precompute_host_choices(scheme, path_valid=None,
                                                    **pre_kw)
         if plan.any_fail:
-            a_conv, c_conv = precompute_host_choices(scheme,
-                                                     path_valid=plan.pv,
-                                                     **pre_kw)
+            per_ep = [precompute_host_choices(scheme, path_valid=pv_e,
+                                              **pre_kw) for pv_e in plan.pv]
+            a_conv = np.stack([a for a, _ in per_ep])
+            c_conv = np.stack([c for _, c in per_ep])
         else:
-            a_conv, c_conv = a_stale, c_stale
+            a_conv = np.stack([a_stale] * E)
+            c_conv = np.stack([c_stale] * E)
 
     rand_pool = rng.integers(0, h * h, size=65536).astype(np.int32)
 
-    ofan_stale = ofan_conv = None
+    ofan_stale = None
+    ofan_eps: list = []
     rr_starts_e = rng.integers(0, h, tree.n_edge_switches).astype(np.int32)
     rr_starts_a = rng.integers(0, h, tree.n_agg_switches).astype(np.int32)
     if scheme.edge_mode == "ofan":
         ofan_stale = ofan_mod.build_tables(tree, rng, links=None)
-        ofan_conv = (ofan_mod.build_tables(tree, rng, links=plan.links)
-                     if plan.any_fail else ofan_stale)
+        ofan_eps = ([ofan_mod.build_tables(tree, rng, links=l)
+                     for l in plan.ep_links]
+                    if plan.any_fail else [ofan_stale] * E)
 
     return dict(
         a_stale=_z(a_stale, P), c_stale=_z(c_stale, P),
-        a_conv=_z(a_conv, P), c_conv=_z(c_conv, P),
+        a_conv=_ze(a_conv, E, P), c_conv=_ze(c_conv, E, P),
         rand_pool=rand_pool,
         rr_starts_e=rr_starts_e, rr_starts_a=rr_starts_a,
-        ofan_e_orders=_tbl(ofan_stale, ofan_conv, "edge_orders"),
-        ofan_e_starts=_tbl(ofan_stale, ofan_conv, "edge_starts"),
-        ofan_e_len=_tbl(ofan_stale, ofan_conv, "edge_len"),
-        ofan_a_orders=_tbl(ofan_stale, ofan_conv, "agg_orders"),
-        ofan_a_starts=_tbl(ofan_stale, ofan_conv, "agg_starts"),
-        ofan_a_len=_tbl(ofan_stale, ofan_conv, "agg_len"),
+        ofan_e_orders=_tbl(ofan_stale, ofan_eps, "edge_orders", E),
+        ofan_e_starts=_tbl(ofan_stale, ofan_eps, "edge_starts", E),
+        ofan_e_len=_tbl(ofan_stale, ofan_eps, "edge_len", E),
+        ofan_a_orders=_tbl(ofan_stale, ofan_eps, "agg_orders", E),
+        ofan_a_starts=_tbl(ofan_stale, ofan_eps, "agg_starts", E),
+        ofan_a_len=_tbl(ofan_stale, ofan_eps, "agg_len", E),
         # Counter-stream key words: the in-loop randomness operands.  Draws
         # are pure functions of (seed, site, logical id, slot), so they ride
         # any padding/batching unchanged (core.entropy).
@@ -402,13 +474,16 @@ def simulate(tree: FatTree, wl: Workload, scheme: LBScheme,
              cfg: LoopConfig = LoopConfig(), seed: int = 0,
              links: Optional[LinkState] = None,
              g_converge: Optional[int] = None,
-             probes=None) -> LoopSimResult:
+             probes=None, fault=None) -> LoopSimResult:
     """Run one collective on the slotted engine.
 
     ``links``: failed-link state (None = all up).  ``g_converge``: slot at
     which routing state converges; None => G = infinity (never converges).
+    ``fault``: a ``repro.faults.FaultSchedule`` -- the dynamic alternative
+    to the (links, g_converge) pair (mutually exclusive with it).
     """
-    plan = _prepare(tree, wl, scheme, cfg, links, g_converge, probes=probes)
+    plan = _prepare(tree, wl, scheme, cfg, links, g_converge, probes=probes,
+                    fault=fault)
     tables = {**plan.tables, **_draw_seed_inputs(plan, seed)}
     out = jax.tree_util.tree_map(np.asarray, _run(plan.static, tables))
     return _postprocess(out, cfg, wl.n_packets, wl.n_flows, probes)
@@ -417,7 +492,8 @@ def simulate(tree: FatTree, wl: Workload, scheme: LBScheme,
 def simulate_batch(tree: FatTree, wl: Workload, scheme: LBScheme,
                    seeds, cfg: LoopConfig = LoopConfig(),
                    links: Optional[LinkState] = None,
-                   g_converge: Optional[int] = None, probes=None) -> list:
+                   g_converge: Optional[int] = None, probes=None,
+                   fault=None) -> list:
     """Run one simulation point for many seeds as a single vmapped dispatch.
 
     Per-seed randomness (host labels, spray entropy, RR starts, OFAN
@@ -430,7 +506,8 @@ def simulate_batch(tree: FatTree, wl: Workload, scheme: LBScheme,
     seeds = list(seeds)
     if not seeds:
         return []
-    plan = _prepare(tree, wl, scheme, cfg, links, g_converge, probes=probes)
+    plan = _prepare(tree, wl, scheme, cfg, links, g_converge, probes=probes,
+                    fault=fault)
     per_seed = [_draw_seed_inputs(plan, s) for s in seeds]
     stacked = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *per_seed)
     out = jax.tree_util.tree_map(
@@ -466,34 +543,40 @@ def _repad_tables(st: dict, plan: LoopPlan, tp: TreePad) -> dict:
     n_sw = pt.n_edge_switches            # == n_agg_switches
     mid_r = plan.tree.queues_per_mid_layer
     mid_p = pt.queues_per_mid_layer
+    E = st["alive"].shape[0]
 
-    # Per-queue aliveness: 4 mid layers scatter through the queue-id map;
-    # padded queues read True, which is inert (nothing is enqueued there).
-    alive = np.ones(4 * mid_p + pt.n_hosts, dtype=bool)
+    # Per-queue aliveness (epoch-stacked): 4 mid layers scatter through the
+    # queue-id map; padded queues read True, which is inert (nothing is
+    # enqueued there).
+    alive = np.ones((E, 4 * mid_p + pt.n_hosts), dtype=bool)
     for L in range(4):
-        alive[L * mid_p + tp.mid] = st["alive"][L * mid_r:(L + 1) * mid_r]
+        alive[:, L * mid_p + tp.mid] = st["alive"][:, L * mid_r:
+                                                   (L + 1) * mid_r]
     st["alive"] = alive
 
     st["host_flows"] = pad_tail(st["host_flows"], 0, pt.n_hosts, fill=-1)
     # Valid-label lists keep their raw h_log-encoded entries; only the pool
     # axis widens (entries past a flow's own f_vcnt are never indexed).
-    st["f_vpaths"] = pad_tail(st["f_vpaths"], 1, pt.half * pt.half)
+    st["f_vpaths"] = pad_tail(st["f_vpaths"], 2, pt.half * pt.half)
     # W-ECMP valid-port lists: (switch, dst-group) rows scatter; the port
     # axis pads with zeros that sit beyond every row's count operand.
+    # All carry a leading epoch axis, so table axes shift by one.
     st["e_ports"] = pad_tail(
-        tp.scatter(st["e_ports"], tp.edge_pair, n_sw * n_sw), 1, pt.half)
+        tp.scatter(st["e_ports"], tp.edge_pair, n_sw * n_sw, axis=1),
+        2, pt.half)
     st["e_pcnt"] = tp.scatter(st["e_pcnt"], tp.edge_pair, n_sw * n_sw,
-                              fill=1)
+                              axis=1, fill=1)
     st["a_ports"] = pad_tail(
-        tp.scatter(st["a_ports"], tp.agg_pod, n_sw * pt.n_pods), 1, pt.half)
+        tp.scatter(st["a_ports"], tp.agg_pod, n_sw * pt.n_pods, axis=1),
+        2, pt.half)
     st["a_pcnt"] = tp.scatter(st["a_pcnt"], tp.agg_pod, n_sw * pt.n_pods,
-                              fill=1)
+                              axis=1, fill=1)
     st["e_dead"] = pad_tail(tp.scatter(
-        tp.scatter(st["e_dead"], tp.switch, n_sw, axis=0, fill=True),
-        tp.switch, n_sw, axis=1, fill=True), 2, pt.half, fill=True)
+        tp.scatter(st["e_dead"], tp.switch, n_sw, axis=1, fill=True),
+        tp.switch, n_sw, axis=2, fill=True), 3, pt.half, fill=True)
     st["a_dead"] = pad_tail(pad_tail(
-        tp.scatter(st["a_dead"], tp.switch, n_sw, axis=0, fill=True),
-        1, pt.n_pods, fill=True), 2, pt.half, fill=True)
+        tp.scatter(st["a_dead"], tp.switch, n_sw, axis=1, fill=True),
+        2, pt.n_pods, fill=True), 3, pt.half, fill=True)
     return st
 
 
@@ -550,18 +633,25 @@ def simulate_megabatch(items, *, npk_pad: Optional[int] = None,
     without perturbing any real entity's draws, and padded JSQ port columns
     are masked out of the argmin (``_batching.port_pad_penalty``).
 
+    Items may also carry a trailing ``fault`` entry (a
+    ``repro.faults.FaultSchedule``; 8-tuples) mixed freely with 7-tuple
+    static items: fault-epoch axes pad to the group maximum (pad epochs
+    repeat the last real epoch and start at an unreachable sentinel slot,
+    so they are bitwise-inert), which is how static and flapping campaign
+    rows fuse into one dispatch.
+
     Returns one list of :class:`LoopSimResult` per item (aligned with its
     ``seeds``); every result is bitwise-identical to the standalone
     :func:`simulate` call with the same arguments (tested in
     ``tests/test_loopsim.py`` and ``tests/test_differential.py``).
     """
-    items = [(t, w, s, c, list(seeds), l, g)
-             for (t, w, s, c, seeds, l, g) in items]
+    items = [(it[0], it[1], it[2], it[3], list(it[4]), it[5], it[6],
+              it[7] if len(it) > 7 else None) for it in items]
     if not items or all(not it[4] for it in items):
         return [[] for _ in items]
 
-    plans = [_prepare(t, w, s, c, l, g, probes=probes)
-             for (t, w, s, c, _, l, g) in items]
+    plans = [_prepare(t, w, s, c, l, g, probes=probes, fault=fz)
+             for (t, w, s, c, _, l, g, fz) in items]
     idents = {_pipeline_identity(p) for p in plans}
     if len(idents) > 1:
         raise ValueError(f"megabatch items span {len(idents)} pipeline "
@@ -578,12 +668,22 @@ def simulate_megabatch(items, *, npk_pad: Optional[int] = None,
     npk_pad = P_max if npk_pad is None else max(int(npk_pad), P_max)
     F_pad = max(p.wl.n_flows for p in plans)
     Fh_pad = max(p.static.Fh for p in plans)
+    E_pad = max(p.n_epochs for p in plans)
 
     elems: list = []          # merged (static + per-seed) dicts, padded
     spans: list = []          # (item index, seed) per fused-axis element
-    for i, ((tree, wl, scheme, cfg, seeds, links, g), plan) in enumerate(
+    for i, ((tree, wl, scheme, cfg, seeds, links, g, fz), plan) in enumerate(
             zip(items, plans)):
         st = _repad_tables(plan.tables, plan, pads[i])
+        # Fault-epoch padding: tables repeat their last real epoch; the
+        # start operands pad with an unreachable sentinel slot, so the
+        # epoch/reaction counters never index a pad epoch -- padded rows
+        # are bitwise-inert, letting static and flapping points fuse.
+        for k in ("alive", "e_ports", "e_pcnt", "a_ports", "a_pcnt",
+                  "e_dead", "a_dead", "f_vpaths", "f_vcnt"):
+            st[k] = _pad_epochs(st[k], E_pad)
+        for k in ("ep_start", "r_start"):
+            st[k] = pad_tail(st[k], 0, E_pad, fill=2**30)
         # Flow-axis padding: pad flows have fsize 0, so they complete at the
         # first slot, never send, and never reference a packet; pkt_base is
         # edge-padded so searchsorted still lands real packets on real flows.
@@ -593,8 +693,8 @@ def simulate_megabatch(items, *, npk_pad: Optional[int] = None,
             st[k] = pad_tail(st[k], 0, F_pad)
         st["f_inter"] = pad_tail(st["f_inter"], 0, F_pad, fill=False)
         st["f_leaves"] = pad_tail(st["f_leaves"], 0, F_pad, fill=False)
-        st["f_vpaths"] = pad_tail(st["f_vpaths"], 0, F_pad)
-        st["f_vcnt"] = pad_tail(st["f_vcnt"], 0, F_pad, fill=1)
+        st["f_vpaths"] = pad_tail(st["f_vpaths"], 1, F_pad)
+        st["f_vcnt"] = pad_tail(st["f_vcnt"], 1, F_pad, fill=1)
         # Padded host_flows columns hold -1 and rank below every real flow
         # in the host round-robin, so picks (and hence all sends) match the
         # unpadded point exactly.
@@ -602,8 +702,14 @@ def simulate_megabatch(items, *, npk_pad: Optional[int] = None,
         for s in seeds:
             d = {**st, **_repad_seed(_draw_seed_inputs(plan, s), plan,
                                      pads[i])}
-            for k in ("a_stale", "c_stale", "a_conv", "c_conv"):
+            for k in ("a_stale", "c_stale"):
                 d[k] = pad_tail(d[k], 0, npk_pad)
+            for k in ("a_conv", "c_conv"):
+                d[k] = pad_tail(_pad_epochs(d[k], E_pad), 1, npk_pad)
+            # OFAN stacks lead with the [stale, epoch...] axis: 1 + E.
+            for k in ("ofan_e_orders", "ofan_e_starts", "ofan_e_len",
+                      "ofan_a_orders", "ofan_a_starts", "ofan_a_len"):
+                d[k] = _pad_epochs(d[k], 1 + E_pad)
             elems.append(d)
             spans.append((i, s))
 
@@ -638,25 +744,45 @@ def simulate_megabatch(items, *, npk_pad: Optional[int] = None,
                                      plans[i].wl.n_packets,
                                      plans[i].wl.n_flows, probes)
     return [[results[i][s] for s in seeds]
-            for i, (_, _, _, _, seeds, _, _) in enumerate(items)]
+            for i, (_, _, _, _, seeds, _, _, _) in enumerate(items)]
+
+
+def _pad_epochs(x, e_pad, axis=0):
+    """Pad an epoch-stacked table to ``e_pad`` epochs by repeating its last
+    real epoch (inert: the sentinel-padded start operands guarantee the
+    epoch counters never index past the real epochs)."""
+    E = x.shape[axis]
+    if E >= e_pad:
+        return x
+    last = np.take(x, [E - 1], axis=axis)
+    return np.concatenate([x, np.repeat(last, e_pad - E, axis=axis)],
+                          axis=axis)
 
 
 def _z(x, P):
     return np.zeros(P, np.int32) if x is None else x.astype(np.int32)
 
 
-def _tbl(stale, conv, attr):
+def _ze(x, E, P):
+    return np.zeros((E, P), np.int32) if x is None else x.astype(np.int32)
+
+
+def _tbl(stale, eps, attr, n_ep):
+    """Stack OFAN tables as [stale, epoch_0, ..., epoch_{E-1}] (the engine
+    indexes this axis with the reaction-epoch counter directly: 0 = stale,
+    1+e = converged on epoch e's links), width-padding ragged IWRR orders
+    by tiling (entries past a group's ``len`` are never indexed)."""
     if stale is None:
-        return np.zeros((2, 1, 1) if attr.endswith("orders") else (2, 1),
-                        np.int32)
-    sarr, carr = getattr(stale, attr), getattr(conv, attr)
-    if sarr.ndim == 2 and sarr.shape[1] != carr.shape[1]:
-        w = max(sarr.shape[1], carr.shape[1])
+        return np.zeros((1 + n_ep, 1, 1) if attr.endswith("orders")
+                        else (1 + n_ep, 1), np.int32)
+    arrs = [getattr(stale, attr)] + [getattr(e, attr) for e in eps]
+    if arrs[0].ndim == 2 and len({a.shape[1] for a in arrs}) > 1:
+        w = max(a.shape[1] for a in arrs)
         def padw(x):
             reps = int(np.ceil(w / x.shape[1]))
             return np.tile(x, (1, reps))[:, :w]
-        sarr, carr = padw(sarr), padw(carr)
-    return np.stack([sarr, carr])
+        arrs = [padw(a) for a in arrs]
+    return np.stack(arrs)
 
 
 # Positional order of the engine arguments; the first block is
@@ -664,7 +790,8 @@ def _tbl(stale, conv, attr):
 # rest carry the seed batch axis.  In the megabatched variant *every*
 # argument carries the fused (scheme x load x failure x seed) axis.
 _STATIC_KEYS = ("fsrc", "fdst", "fsize", "pkt_base", "fp1", "fe1", "fp2",
-                "fe2", "f_inter", "f_leaves", "host_flows", "alive", "G",
+                "fe2", "f_inter", "f_leaves", "host_flows", "alive",
+                "ep_start", "r_start",
                 "e_ports", "e_pcnt", "a_ports", "a_pcnt", "e_dead", "a_dead",
                 "f_vpaths", "f_vcnt", "rho", "max_slots", "h_log")
 _SEED_KEYS = ("a_stale", "c_stale", "a_conv", "c_conv", "rand_pool",
@@ -703,7 +830,7 @@ def _run(static: _Static, tables: dict, batch=False, n_shards: int = 1):
 
 
 def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
-            f_inter, f_leaves, host_flows, alive, G,
+            f_inter, f_leaves, host_flows, alive, ep_start, r_start,
             e_ports, e_pcnt, a_ports, a_pcnt, e_dead, a_dead,
             f_vpaths, f_vcnt, rho, max_slots, h_log,
             a_stale, c_stale, a_conv, c_conv, rand_pool,
@@ -779,8 +906,18 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
     def step(st_in):
         st = dict(st_in)
         t = st["t"]
-        converged = t >= G
-        ci = converged.astype(INT)
+        # Fault-epoch counters.  ``pe``: the *physical* epoch (whose links
+        # black-hole packets) -- the number of epoch starts reached, minus
+        # one.  ``cvg_i``: how many epochs the *routing* has reacted to
+        # (r_start[e] = ep_start[e] + reaction delay, saturated host-side);
+        # 0 means stale/failure-unaware, 1+e means converged on epoch e.
+        # Pad epochs start at a 2**30 sentinel and never count.  The static
+        # single-epoch path reduces to the old ``t >= G`` gate bitwise.
+        pe = jnp.maximum(jnp.sum((t >= ep_start).astype(INT)) - 1, 0)
+        cvg_i = jnp.sum((t >= r_start).astype(INT))
+        converged = cvg_i > 0
+        ci = cvg_i                       # OFAN [stale, epoch...] table index
+        ric = jnp.maximum(cvg_i - 1, 0)  # index into converged epoch stacks
 
         # ---- 1. serve all queues -------------------------------------------
         qcnt = st["qcnt"]
@@ -934,12 +1071,13 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
                 # the draw/recycle stream matches the standalone run even
                 # when the point rides a larger padded tree's engine.
                 eff = jnp.where(converged,
-                                f_vpaths[sfv, lab % f_vcnt[sfv]], lab)
+                                f_vpaths[ric, sfv, lab % f_vcnt[ric, sfv]],
+                                lab)
                 a_new = ((eff // h_log) % h_log).astype(INT)
                 c_new = (eff % h_log).astype(INT)
             else:
-                a_new = jnp.where(converged, a_conv[pid], a_stale[pid])
-                c_new = jnp.where(converged, c_conv[pid], c_stale[pid])
+                a_new = jnp.where(converged, a_conv[ric, pid], a_stale[pid])
+                c_new = jnp.where(converged, c_conv[ric, pid], c_stale[pid])
         elif s.edge_mode == "rand":
             sw = (fp1[sfv] * h + fe1[sfv]).astype(INT)
             de = (fp2[sfv] * h + fe2[sfv]).astype(INT)
@@ -951,7 +1089,8 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
             r = ent.draw_int(seed_lo, seed_hi, ent.SITE_EDGE_RAND,
                              jnp.arange(n), t, h_log * h_log)
             a_naive = (r // h_log).astype(INT)
-            a_live = e_ports[gp, r % jnp.maximum(e_pcnt[gp], 1)].astype(INT)
+            a_live = e_ports[ric, gp,
+                             r % jnp.maximum(e_pcnt[ric, gp], 1)].astype(INT)
             a_new = jnp.where(converged, a_live, a_naive)
             c_new = (r % h_log).astype(INT)
         elif s.edge_mode in ("rr", "rr_reset", "ofan"):
@@ -974,8 +1113,9 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
                 ctr = st["ptr_e"][sw] + rk
                 # pre-convergence: all ports; post: W-ECMP-valid for dest
                 naive = ((rr_starts_e[sw] + ctr) % h_log).astype(INT)
-                pcn = jnp.maximum(e_pcnt[gp], 1)
-                live = e_ports[gp, (rr_starts_e[sw] + ctr) % pcn].astype(INT)
+                pcn = jnp.maximum(e_pcnt[ric, gp], 1)
+                live = e_ports[ric, gp,
+                               (rr_starts_e[sw] + ctr) % pcn].astype(INT)
                 a_new = jnp.where(converged, live, naive)
                 st["ptr_e"] = st["ptr_e"].at[
                     jnp.where(north, sw, s.n_edges)].add(1, mode="drop")
@@ -998,7 +1138,8 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
                 bins = jnp.sum(lens[:, :, None] > thr[None, None, :], axis=2)
                 score = bins.astype(jnp.float32) + nz * 0.5
             score = score + pad_pen[None, :]
-            score = score + jnp.where(converged & e_dead[sw, de], 1e9, 0.0)
+            score = score + jnp.where(converged & e_dead[ric, sw, de],
+                                      1e9, 0.0)
             a_new = jnp.argmin(score, axis=1).astype(INT)
             c_new = jnp.zeros((n,), INT)
 
@@ -1038,7 +1179,8 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
                 # stream value, so draws survive any tree/batch padding.
                 r = ent.draw_int(seed_lo, seed_hi, ent.SITE_AGG_RAND,
                                  apkc, t, h_log)
-                c_live = a_ports[gpa, r % jnp.maximum(a_pcnt[gpa], 1)]
+                c_live = a_ports[ric, gpa,
+                                 r % jnp.maximum(a_pcnt[ric, gpa], 1)]
                 c_fin = jnp.where(converged, c_live, r).astype(INT)
         elif s.agg_mode in ("rr", "rr_reset", "ofan"):
             if s.agg_mode == "ofan":
@@ -1055,8 +1197,9 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
                 rk = rank_by(asw, to_agg)
                 ctr = st["ptr_a"][asw] + rk
                 naive = ((rr_starts_a[asw] + ctr) % h_log).astype(INT)
-                pcn = jnp.maximum(a_pcnt[gpa], 1)
-                live = a_ports[gpa, (rr_starts_a[asw] + ctr) % pcn].astype(INT)
+                pcn = jnp.maximum(a_pcnt[ric, gpa], 1)
+                live = a_ports[ric, gpa,
+                               (rr_starts_a[asw] + ctr) % pcn].astype(INT)
                 c_fin = jnp.where(converged, live, naive)
                 st["ptr_a"] = st["ptr_a"].at[
                     jnp.where(to_agg, asw, s.n_aggs)].add(1, mode="drop")
@@ -1074,7 +1217,7 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
                 bins = jnp.sum(lens[:, :, None] > thr[None, None, :], axis=2)
                 score = bins.astype(jnp.float32) + nz * 0.5
             score = score + pad_pen[None, :]
-            score = score + jnp.where(converged & a_dead[asw, fp2[af]],
+            score = score + jnp.where(converged & a_dead[ric, asw, fp2[af]],
                                       1e9, 0.0)
             c_fin = jnp.argmin(score, axis=1).astype(INT)
         st["p_c"] = st["p_c"].at[jnp.where(to_agg, apk, P)].set(
@@ -1083,7 +1226,7 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
 
         # ---- 8. enqueue (drops, ECN, failure black-holing) -------------------
         aqc = jnp.clip(aq, 0, NQ - 1)
-        dead = ~alive[aqc]
+        dead = ~alive[pe, aqc]
         enq_try = avalid & ~dead
         st["drops"] = st["drops"] + (avalid & dead).sum()
         rkq = rank_by(aq, enq_try)

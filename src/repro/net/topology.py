@@ -215,11 +215,37 @@ class LinkState:
 
     @classmethod
     def random_failures(cls, tree: FatTree, p_fail: float,
-                        rng: np.random.Generator) -> "LinkState":
+                        rng: Optional[np.random.Generator] = None,
+                        *, seed: Optional[int] = None) -> "LinkState":
+        """Random i.i.d. link failures with probability ``p_fail``.
+
+        Counter-keyed path (pass ``seed``): each link's fate is the Threefry
+        stream of :mod:`repro.core.entropy` evaluated at (seed,
+        SITE_LINK_FAIL, lane=tree.k, layer, flat link id) -- a pure function
+        of the link's identity, stable across numpy versions and independent
+        of draw order.  Legacy path (pass ``rng``): sequential ``Generator``
+        draws, ``ea`` then ``ac``, kept so goldens recorded before the rekey
+        stay reproducible.
+        """
         h = tree.half
-        ea = rng.random((tree.k, h, h)) >= p_fail
-        ac = rng.random((tree.k, h, h)) >= p_fail
-        return cls(tree, ea, ac)
+        if rng is not None:
+            if seed is not None:
+                raise ValueError("pass either rng (legacy) or seed, not both")
+            ea = rng.random((tree.k, h, h)) >= p_fail
+            ac = rng.random((tree.k, h, h)) >= p_fail
+            return cls(tree, ea, ac)
+        if seed is None:
+            raise ValueError("random_failures needs rng (legacy) or seed=")
+        from ..core import entropy as ent
+        lo, hi = ent.key_words(seed)
+        ids = np.arange(tree.k * h * h, dtype=np.uint32)
+        u_ea = ent.draw_uniform(lo, hi, ent.SITE_LINK_FAIL, ids, slot=0,
+                                lane=tree.k)
+        u_ac = ent.draw_uniform(lo, hi, ent.SITE_LINK_FAIL, ids, slot=1,
+                                lane=tree.k)
+        return cls(tree,
+                   (u_ea >= p_fail).reshape(tree.k, h, h),
+                   (u_ac >= p_fail).reshape(tree.k, h, h))
 
     # ---- reachability / path validity -------------------------------------
     def inter_pod_path_alive(self, p1, e1, p2, e2, a, c):

@@ -7,6 +7,11 @@ campaign run (``trace.jsonl``) and optionally its ``results.jsonl``, emit
 * per-shape padding-waste accounting -- the measured costs the ROADMAP's
   cost-modeled planner consumes;
 * loop-engine slot-budget utilization;
+* a robustness section (retries, terminal dispatch errors, degradation-
+  ladder splits, resume checkpoints) whenever the trace carries any of the
+  runner's retry/error/degrade/resume spans -- the view that makes a
+  *partial* campaign legible: which points are missing from results.jsonl
+  and why;
 * the top queue trajectories (sparkline per point) when the results carry
   probe series (``Campaign.probes``).
 """
@@ -93,6 +98,44 @@ def render_report(spans: List[Dict], records: Optional[List[Dict]] = None,
                 f"slot budget (dispatch #{s['dispatch']}): ran "
                 f"{s['slots_run']}/{s['slot_budget']} slots, per-row fill "
                 f"{s.get('slot_fill', 0):.1%}")
+
+    # ---- dispatch errors / retries / degraded -----------------------------
+    retries = [s for s in spans if s.get("kind") == "retry"]
+    errors = [s for s in spans if s.get("kind") == "error"]
+    degrades = [s for s in spans if s.get("kind") == "degrade"]
+    resumes = [s for s in spans if s.get("kind") == "resume"]
+    if retries or errors or degrades or resumes:
+        lines.append("")
+        lines.append("robustness (dispatch errors / retries / degraded):")
+        for s in resumes:
+            lines.append(f"  resume: kept {s.get('dispatches_kept', '?')} "
+                         f"complete dispatches "
+                         f"({s.get('records_kept', '?')} records)")
+        if retries:
+            lines.append(f"  {len(retries)} retried attempt(s) across "
+                         f"dispatches "
+                         f"{sorted({s.get('dispatch') for s in retries})}")
+        for s in degrades:
+            extra = (f", {s['failed']} point(s) lost"
+                     if s.get("failed") else "")
+            lines.append(f"  dispatch #{s.get('dispatch', '?')} degraded to "
+                         f"{s.get('stage', '?')}"
+                         f" ({s.get('scheme', '?')}){extra}")
+        terminal = [s for s in errors if s.get("stage") == "point"]
+        whole = [s for s in errors if s.get("stage") != "point"]
+        if whole:
+            lines.append(f"  {len(whole)} exhausted-budget error(s) at "
+                         f"stage(s) "
+                         f"{sorted({s.get('stage') for s in whole})}")
+        for s in terminal:
+            lines.append(f"  LOST point: dispatch "
+                         f"#{s.get('dispatch', '?')} "
+                         f"{s.get('scheme', '?')} seed "
+                         f"{s.get('seed', '?')} -- "
+                         f"{s.get('error', '?')}")
+        if terminal:
+            lines.append("  (lost points have no rows in results.jsonl; "
+                         "re-run with --resume after fixing the cause)")
 
     # ---- top queue trajectories (needs probe-carrying results) -------------
     probed = [r for r in (records or []) if r.get("probe_queue")]

@@ -19,6 +19,20 @@ Span kinds (the ``kind`` field):
   the trace's own cumulative emit overhead (``emit_s``), which is how the
   benchmark measures telemetry cost.
 
+Robustness spans (the runner's retry / degradation ladder / resume,
+``sweep.runner``):
+
+* ``"retry"``    -- a dispatch attempt failed with retry budget left:
+  attempt index, error repr, backoff seconds.
+* ``"error"``    -- a failure that exhausted its budget, at ``stage``
+  ``"megabatch"`` (whole fused dispatch), ``"member"`` (one seed batch
+  during degradation) or ``"point"`` (one seed during serial fallback);
+  points under a terminal error span produce no result records.
+* ``"degrade"``  -- a dispatch that completed only after splitting, at
+  ``stage`` ``"member"`` or ``"serial"``.
+* ``"resume"``   -- a ``--resume`` run skipping already-complete
+  dispatches: how many were kept, how many records were trusted.
+
 Every span carries ``"schema": TRACE_SCHEMA``; readers should skip spans
 with a schema they don't know.
 """
@@ -40,6 +54,9 @@ TRACE_SCHEMA = 1
 TIMING_KEYS = frozenset({
     "wall_s", "compile_s", "execute_s", "emit_s",
     "cache", "cache_dir", "cache_entries_added",
+    # Robustness fields: which attempt failed, with what error, after what
+    # backoff is environment-dependent (a transient OOM needn't recur).
+    "error", "backoff_s",
 })
 
 
@@ -73,6 +90,12 @@ class TraceWriter:
     ``emit_s`` accumulates the wall time spent inside :meth:`emit` --
     the telemetry layer's own overhead, reported in the final campaign
     span and in ``BENCH_sweep.json``'s telemetry section.
+
+    ``overwrite=False`` appends to an existing file instead of replacing
+    it -- the ``--resume`` mode: a resumed campaign's trace keeps the
+    crashed run's spans followed by a ``"resume"`` span and the replayed
+    tail (traces are an execution log, so unlike ``results.jsonl`` they
+    are *not* expected to be byte-identical to an uninterrupted run's).
     """
 
     def __init__(self, path: Optional[str] = None, overwrite: bool = True):

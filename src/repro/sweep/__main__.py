@@ -74,10 +74,17 @@ def _load_campaign(args) -> Campaign:
 def cmd_run(args) -> int:
     c = _load_campaign(args)
     out = pathlib.Path(args.out) if args.out else None
-    store = ResultStore(out / "results.jsonl" if out else None)
+    resume = args.resume
+    if resume and not out:
+        print("--resume requires --out (the checkpoint is the results "
+              "JSONL)", file=sys.stderr)
+        return 2
+    store = ResultStore(out / "results.jsonl" if out else None,
+                        overwrite=not resume)
     quiet = args.quiet
     level = "quiet" if quiet else ("debug" if args.verbose else "info")
-    trace = TraceWriter(out / "trace.jsonl" if out else None)
+    trace = TraceWriter(out / "trace.jsonl" if out else None,
+                        overwrite=not resume)
     # Precedence: --no-compile-cache > --compile-cache > $REPRO_COMPILE_CACHE
     # (resolved inside compile_cache.enable) > <out>/jax-cache.
     if args.no_compile_cache:
@@ -88,14 +95,17 @@ def cmd_run(args) -> int:
         cache_dir = None
     else:
         cache_dir = str(out / "jax-cache") if out else None
-    records, _ = run_campaign(
+    run_campaign(
         c, store=store, compile_cache_dir=cache_dir,
         trace=trace, log=SweepLogger(level),
-        timing_split=args.timing_split, profile_dir=args.profile)
+        timing_split=args.timing_split, profile_dir=args.profile,
+        retry=args.retry, backoff_s=args.backoff, resume=resume)
     store.close()
     trace.close()
-    rows = (write_summary(out / "summary.jsonl", records) if out
-            else summarize(records))
+    # Summarize the *store*, not just this invocation's new records: on
+    # --resume the checkpointed prefix is part of the campaign too.
+    rows = (write_summary(out / "summary.jsonl", store.records) if out
+            else summarize(store.records))
     if not quiet:
         for row in rows:
             print(f"{row['scheme']:>16s} k={row['k']} {row['workload']:<22s} "
@@ -187,6 +197,18 @@ def main(argv=None) -> int:
                             "wall time in the trace")
     p_run.add_argument("--profile", metavar="DIR",
                        help="write a jax.profiler trace to DIR")
+    p_run.add_argument("--retry", type=int, default=0, metavar="N",
+                       help="extra attempts per dispatch before the "
+                            "degradation ladder (megabatch -> per-member "
+                            "-> serial) kicks in")
+    p_run.add_argument("--backoff", type=float, default=0.5, metavar="S",
+                       help="base retry backoff seconds, doubled per "
+                            "attempt (default 0.5)")
+    p_run.add_argument("--resume", action="store_true",
+                       help="treat an existing <out>/results.jsonl as a "
+                            "checkpoint: skip complete dispatches, re-run "
+                            "the partial tail; the finished file is byte-"
+                            "identical to an uninterrupted run")
     p_run.set_defaults(fn=cmd_run)
 
     p_plan = sub.add_parser("plan", help="show the batched execution plan")

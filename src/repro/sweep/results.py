@@ -120,6 +120,14 @@ class ResultStore:
 
     ``path=None`` keeps records in memory only (used by benchmarks/tests
     that aggregate without persisting).
+
+    ``overwrite=False`` turns an existing file into a resume checkpoint:
+    complete lines load back into ``records`` (a torn final line -- the
+    half-written tail of a SIGKILLed run; append flushes per record, so at
+    most one line can be torn -- is discarded and truncated off the file)
+    and subsequent appends extend the file.  Because encoding is
+    canonical, a campaign finished via resume produces a byte-identical
+    file to one that never crashed (``tests/test_faults.py``).
     """
 
     def __init__(self, path: Optional[str] = None, overwrite: bool = True):
@@ -132,8 +140,44 @@ class ResultStore:
         self._fh = None
         if self.path:
             self.path.parent.mkdir(parents=True, exist_ok=True)
-            if overwrite and self.path.exists():
-                self.path.unlink()
+            if self.path.exists():
+                if overwrite:
+                    self.path.unlink()
+                else:
+                    self._load_checkpoint()
+
+    def _load_checkpoint(self) -> None:
+        """Read back every complete line; drop (and truncate off disk) a
+        torn tail line lacking its newline or failing to decode."""
+        raw = self.path.read_text(errors="replace")
+        lines = raw.split("\n")
+        kept: List[Dict] = []
+        for i, line in enumerate(lines):
+            if not line.strip():
+                continue
+            if i == len(lines) - 1:      # no trailing newline: torn write
+                break
+            try:
+                kept.append(json.loads(line))
+            except json.JSONDecodeError:
+                break
+        self.records = kept
+        self._rewrite()
+
+    def _rewrite(self) -> None:
+        self.close()
+        with self.path.open("w") as f:
+            for rec in self.records:
+                f.write(encode_record(rec) + "\n")
+
+    def truncate(self, n: int) -> None:
+        """Keep only the first ``n`` records (resume: drop the records of a
+        partially-recorded dispatch so it re-runs whole)."""
+        if n >= len(self.records):
+            return
+        del self.records[n:]
+        if self.path:
+            self._rewrite()
 
     def append(self, rec: Dict) -> None:
         self.records.append(rec)

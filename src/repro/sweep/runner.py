@@ -30,6 +30,7 @@ pre-telemetry runner (tested in ``tests/test_obs.py``).
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -38,13 +39,15 @@ import numpy as np
 from ..net.topology import FatTree, LinkState, rho_max
 from ..net import workloads, fastsim, loopsim
 from ..core import lb_schemes as lbs
+from ..core.retry import retry_call
+from ..faults import FaultSchedule
 from ..obs.log import SweepLogger, dispatch_line
 from ..obs.probes import probe_shape
 from ..obs.trace import TraceWriter
 from . import compile_cache
 from .planner import MegaBatch, SeedBatch, plan
 from .results import ResultStore, loop_point_record, point_record
-from .spec import Campaign, FailureSpec, WorkloadSpec
+from .spec import Campaign, FailureSpec, GridPoint, WorkloadSpec
 
 
 def build_workload(tree: FatTree, load: WorkloadSpec):
@@ -63,11 +66,16 @@ def build_workload(tree: FatTree, load: WorkloadSpec):
 
 def build_links(tree: FatTree,
                 failure: Optional[FailureSpec]) -> Optional[LinkState]:
-    """The campaign interpretation of a FailureSpec (None = all links up)."""
+    """The campaign interpretation of a FailureSpec (None = all links up):
+    counter-keyed draws by default, the old sequential ``np.random`` stream
+    when the spec pins ``legacy_rng``."""
     if failure is None:
         return None
+    if failure.legacy_rng:
+        return LinkState.random_failures(
+            tree, failure.p_fail, np.random.default_rng(failure.rng_seed))
     return LinkState.random_failures(tree, failure.p_fail,
-                                     np.random.default_rng(failure.rng_seed))
+                                     seed=failure.rng_seed)
 
 
 class _Cache:
@@ -92,18 +100,32 @@ class _Cache:
 
     def link_state(self, k: int,
                    failure: Optional[FailureSpec]) -> Optional[LinkState]:
-        if failure is None:
+        """Static link state for FailureSpec rows.  FaultSchedule rows get
+        None: the engines compile the schedule's epoch stack themselves."""
+        if failure is None or isinstance(failure, FaultSchedule):
             return None
         key = (k, failure)
         if key not in self.links:
             self.links[key] = build_links(self.tree(k), failure)
         return self.links[key]
 
-    def rho_auto(self, k: int, load: WorkloadSpec,
-                 failure: Optional[FailureSpec]) -> float:
+    def rho_links(self, k: int, failure) -> Optional[LinkState]:
+        """The link state ``rho='auto'`` resolves against.  For dynamic
+        schedules this is deterministically the *epoch-0* pattern: the
+        sending rate is fixed before the collective starts, when only the
+        base failure state is observable."""
+        if isinstance(failure, FaultSchedule):
+            key = (k, failure, "ep0")
+            if key not in self.links:
+                self.links[key] = failure.compile(self.tree(k)).links[0]
+            links = self.links[key]
+            return links if links.any_failure() else None
+        return self.link_state(k, failure)
+
+    def rho_auto(self, k: int, load: WorkloadSpec, failure) -> float:
         key = (k, load, failure)
         if key not in self.rhos:
-            links = self.link_state(k, failure)
+            links = self.rho_links(k, failure)
             wl = self.workload(k, load)
             self.rhos[key] = (rho_max(self.tree(k), links, wl.flow_src,
                                       wl.flow_dst)
@@ -111,11 +133,18 @@ class _Cache:
         return self.rhos[key]
 
 
+def _fault_of(b: SeedBatch):
+    """The dynamic-schedule item field: the failure itself for FaultSchedule
+    rows (the engines compile the epoch stack), None for static rows."""
+    return b.failure if isinstance(b.failure, FaultSchedule) else None
+
+
 def _run_fast_mega(mega: MegaBatch, campaign: Campaign, cache: _Cache):
     """One fused dispatch for all member batches; returns results per member."""
     items = [(cache.tree(b.k), cache.workload(b.k, b.load),
               lbs.by_name(b.scheme), b.seeds,
-              cache.link_state(b.k, b.failure)) for b in mega.members]
+              cache.link_state(b.k, b.failure), _fault_of(b))
+             for b in mega.members]
     n_shards = "auto" if campaign.shard == "auto" else 1
     return fastsim.simulate_megabatch(items, prop_slots=campaign.prop_slots,
                                       backend=campaign.backend,
@@ -127,7 +156,9 @@ def _run_fast_mega(mega: MegaBatch, campaign: Campaign, cache: _Cache):
 def _run_loop_mega(mega: MegaBatch, campaign: Campaign, cache: _Cache):
     """One fused loop-engine dispatch for all member batches; rho (possibly
     rho_max under each member's failure pattern) and g_converge are per-row
-    operands, so the whole grid slice shares one compiled engine."""
+    operands, so the whole grid slice shares one compiled engine.  Schedule
+    rows carry ``g_converge=None`` from the grid (``Campaign.points``):
+    their reaction delays come from the schedule itself."""
     rho_opt = campaign.loop_options().get("rho", 1.0)
     items = []
     for b in mega.members:
@@ -136,7 +167,7 @@ def _run_loop_mega(mega: MegaBatch, campaign: Campaign, cache: _Cache):
         items.append((cache.tree(b.k), cache.workload(b.k, b.load),
                       lbs.by_name(b.scheme), campaign.loop_config(rho),
                       b.seeds, cache.link_state(b.k, b.failure),
-                      b.g_converge))
+                      b.g_converge, _fault_of(b)))
     n_shards = "auto" if campaign.shard == "auto" else 1
     return loopsim.simulate_megabatch(items, npk_pad=mega.npk_pad,
                                       n_shards=n_shards, k_pad=mega.k_pad,
@@ -203,6 +234,87 @@ def _dispatch_span(idx: int, mega: MegaBatch, campaign: Campaign,
     return span
 
 
+def _point_key(point: GridPoint) -> Tuple:
+    """Record-identity tuple of a grid point, matching :func:`_record_key`
+    on the record the runner would write for it."""
+    return (point.campaign, point.k, point.load.label(),
+            point.failure.label() if point.failure else None,
+            point.scheme, point.seed, point.g_converge)
+
+
+def _record_key(rec: Dict) -> Tuple:
+    # Fast-engine records carry no g_converge field; .get(None) matches the
+    # fast-campaign grid's g_converge=None axis value.
+    return (rec.get("campaign"), rec.get("k"), rec.get("workload"),
+            rec.get("failure"), rec.get("scheme"), rec.get("seed"),
+            rec.get("g_converge"))
+
+
+def _run_with_recovery(idx: int, mega: MegaBatch, campaign: Campaign,
+                       cache: _Cache, run: Callable, *, retry: int,
+                       backoff_s: float, sleep: Callable,
+                       log: SweepLogger) -> Tuple[list, List[Dict]]:
+    """Execute one fused dispatch with bounded retry and the degradation
+    ladder: whole megabatch -> per-member dispatches -> serial per-point.
+
+    Returns (per_member, spans): ``per_member`` aligns with
+    ``mega.members``, each entry a per-seed result list in which points
+    that failed terminally are None (they yield no records -- the error
+    spans are their trace).  ``spans`` are the retry/error/degrade spans
+    to emit, in event order.
+    """
+    spans: List[Dict] = []
+
+    def _base(**kw) -> Dict:
+        return {"campaign": campaign.name, "dispatch": idx, **kw}
+
+    def _attempt(fn, stage, **ctx):
+        """retry_call around one ladder rung; returns (value, ok)."""
+        def on_retry(attempt, e, delay):
+            spans.append(_base(kind="retry", stage=stage, attempt=attempt,
+                               error=repr(e), backoff_s=delay, **ctx))
+            log.info(f"dispatch {idx} [{stage}] attempt {attempt} failed: "
+                     f"{e!r}; backing off {delay:.2f}s")
+        try:
+            return retry_call(fn, max_retries=retry, backoff_s=backoff_s,
+                              sleep=sleep, on_retry=on_retry), True
+        except Exception as e:  # noqa: BLE001 -- degrade, don't die
+            spans.append(_base(kind="error", stage=stage, error=repr(e),
+                               **ctx))
+            log.info(f"dispatch {idx} [{stage}] failed terminally: {e!r}")
+            return None, False
+
+    out, ok = _attempt(lambda: run(mega, campaign, cache), "megabatch")
+    if ok:
+        return out, spans
+
+    # Rung 2: one dispatch per member batch (halves the blast radius of a
+    # compile/OOM failure: a poisoned member no longer sinks its siblings).
+    per_member: list = []
+    for m, b in enumerate(mega.members):
+        sub = MegaBatch(key=mega.key, members=[b])
+        out, ok = _attempt(lambda sub=sub: run(sub, campaign, cache)[0],
+                           "member", member=m, scheme=b.scheme)
+        if ok:
+            spans.append(_base(kind="degrade", stage="member", member=m,
+                               scheme=b.scheme))
+            per_member.append(out)
+            continue
+        # Rung 3: serial per-point; surviving seeds still record.
+        results = []
+        for s in b.seeds:
+            one = MegaBatch(key=mega.key,
+                            members=[dataclasses.replace(b, seeds=(s,))])
+            res, ok = _attempt(lambda one=one: run(one, campaign, cache)[0][0],
+                               "point", member=m, scheme=b.scheme, seed=s)
+            results.append(res if ok else None)
+        spans.append(_base(kind="degrade", stage="serial", member=m,
+                           scheme=b.scheme,
+                           failed=sum(r is None for r in results)))
+        per_member.append(results)
+    return per_member, spans
+
+
 def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,
                  keep_full: bool = False,
                  progress: Optional[Callable[[str], None]] = None,
@@ -210,7 +322,10 @@ def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,
                  trace: Optional[TraceWriter] = None,
                  log: Optional[SweepLogger] = None,
                  timing_split: bool = False,
-                 profile_dir: Optional[str] = None):
+                 profile_dir: Optional[str] = None,
+                 retry: int = 0, backoff_s: float = 0.5,
+                 sleep: Callable[[float], None] = time.sleep,
+                 resume: bool = False):
     """Execute a campaign; returns (records, full_results).
 
     ``records`` is the flat list of per-point dicts (also appended to
@@ -236,6 +351,20 @@ def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,
     * ``profile_dir`` -- wrap execution in ``jax.profiler.trace`` for
       TensorBoard-grade timelines (skipped with a log line if the profiler
       is unavailable on this backend).
+
+    Robustness:
+
+    * ``retry`` / ``backoff_s`` -- each dispatch (and each rung of the
+      degradation ladder below it) gets ``retry`` extra attempts with
+      exponential backoff ``backoff_s * 2**attempt`` before degrading:
+      whole megabatch -> per-member dispatches -> serial per-point.  Points
+      that fail terminally yield error spans instead of records; the
+      campaign keeps going.  ``sleep`` is injectable for tests.
+    * ``resume`` -- treat ``store``'s existing records as a checkpoint:
+      dispatches whose full record block is already present are skipped,
+      a partially-recorded dispatch is truncated off and re-run whole.
+      With a canonical JSONL store the finished file is byte-identical to
+      an uninterrupted run's (``tests/test_faults.py``).
     """
     if log is None:
         log = (SweepLogger("debug", sink=progress) if progress is not None
@@ -262,6 +391,39 @@ def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,
     n_before = len(store.records)   # store may be shared across campaigns
     full: Dict = {}
 
+    done = 0                        # dispatches already complete on resume
+    if resume:
+        # The checkpoint region is this campaign's block of pre-existing
+        # records (records of other campaigns sharing the store never match
+        # _point_key, which carries the campaign name).  Walk dispatches in
+        # plan order; a dispatch counts as complete only if the store holds
+        # its *entire* record block, in order, at the expected offset.
+        # Everything after the last complete dispatch is truncated off (a
+        # partially-recorded dispatch re-runs whole), so the finished file
+        # is byte-identical to an uninterrupted run's.
+        pos = next((i for i, r in enumerate(store.records)
+                    if r.get("campaign") == campaign.name),
+                   len(store.records))
+        for mega in p.megabatches:
+            keys = [_point_key(pt) for b in mega.members
+                    for pt in b.points()]
+            nxt = pos + len(keys)
+            if (nxt <= len(store.records)
+                    and all(_record_key(store.records[pos + i]) == kk
+                            for i, kk in enumerate(keys))):
+                pos, done = nxt, done + 1
+            else:
+                break
+        store.truncate(pos)
+        n_before = len(store.records)   # kept prefix is not "new" records
+        kept = sum(len(b.seeds) for m in p.megabatches[:done]
+                   for b in m.members)
+        if trace:
+            trace.emit({"kind": "resume", "campaign": campaign.name,
+                        "dispatches_kept": done, "records_kept": kept})
+        log.info(f"resume: {done}/{p.n_dispatches} dispatches already "
+                 f"complete ({len(store.records)} records kept)")
+
     prof = contextlib.nullcontext()
     if profile_dir:
         try:
@@ -273,6 +435,8 @@ def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,
     t0 = time.perf_counter()
     with prof:
         for idx, mega in enumerate(p.megabatches):
+            if idx < done:          # resume: records already on disk
+                continue
             span = _dispatch_span(idx, mega, campaign, campaign.shard,
                                   devices)
             run = (_run_loop_mega if mega.engine == "loop"
@@ -281,12 +445,14 @@ def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,
                          else point_record)
             misses0 = _compile_misses()
             tb = time.perf_counter()
-            per_member = run(mega, campaign, cache)
+            per_member, rspans = _run_with_recovery(
+                idx, mega, campaign, cache, run, retry=retry,
+                backoff_s=backoff_s, sleep=sleep, log=log)
             t1 = time.perf_counter()
             span["wall_s"] = secs = t1 - tb
             span["cache"] = ("hit" if _compile_misses() == misses0
                              else "miss")
-            if timing_split:
+            if timing_split and not rspans:
                 # Second dispatch hits the in-process compile caches, so its
                 # wall time is pure execute; the first call's excess is the
                 # compile (+trace) cost.  Results are identical by the
@@ -297,15 +463,20 @@ def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,
                 span["compile_s"] = max(0.0, (t1 - tb) - (t2 - t1))
             if mega.engine == "loop":
                 slots = [float(r.cct_acked_slots)
-                         for results in per_member for r in results]
+                         for results in per_member for r in results
+                         if r is not None]
                 span["slots_run"] = int(max(slots)) if slots else 0
                 span["slot_fill"] = (span["slots_run"]
                                      / max(span["slot_budget"], 1))
             if trace:
+                for s in rspans:    # retry/error/degrade, in event order
+                    trace.emit(s)
                 trace.emit(span)
             log.info(dispatch_line(span, p.n_dispatches))
             for batch, results in zip(mega.members, per_member):
                 for point, res in zip(batch.points(), results):
+                    if res is None:     # terminal failure: error span only
+                        continue
                     store.append(to_record(point, res))
                     if keep_full:
                         full[point] = res

@@ -16,9 +16,10 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple, Union
 
 from ..core import lb_schemes as lbs
+from ..faults import FaultSchedule
 from ..obs.probes import ProbeSpec
 
 
@@ -57,12 +58,29 @@ class WorkloadSpec:
 
 @dataclasses.dataclass(frozen=True)
 class FailureSpec:
-    """Random bidirectional link failures (paper §5.2 model)."""
+    """Random bidirectional link failures (paper §5.2 model).
+
+    Patterns are drawn from the counter-keyed entropy streams
+    (``core.entropy``, site ``SITE_LINK_FAIL``) by default -- pure functions
+    of (rng_seed, link id), so the same spec yields the same pattern
+    regardless of tree-construction order.  ``legacy_rng=True`` keeps the
+    old sequential ``np.random`` draws for comparing against result files
+    produced before the rekey.
+    """
     p_fail: float
     rng_seed: int = 42
+    legacy_rng: bool = False
 
     def label(self) -> str:
-        return f"fail{self.p_fail:g}-r{self.rng_seed}"
+        legacy = "-np" if self.legacy_rng else ""
+        return f"fail{self.p_fail:g}-r{self.rng_seed}{legacy}"
+
+
+# The failure axis accepts both models: a static FailureSpec or a dynamic
+# repro.faults.FaultSchedule (mid-run link flaps; rides the fused campaign
+# axis exactly like the static patterns -- the planner keys seed batches on
+# the frozen value and fused dispatches never split on it).
+FailureLike = Union[FailureSpec, FaultSchedule]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,7 +89,7 @@ class GridPoint:
     campaign: str
     k: int
     load: WorkloadSpec
-    failure: Optional[FailureSpec]
+    failure: Optional[FailureLike]
     scheme: str
     seed: int
     g_converge: Optional[int] = None   # loop engine routing-convergence slot
@@ -92,7 +110,10 @@ class Campaign:
     shape) or ``'loop'`` (the slotted feedback engine, serial -- required for
     ACK/ECN schemes like REPS and PLB).  ``g_converge`` is a grid axis of
     routing-convergence slots for loop-engine points (None = never converge;
-    fast-engine campaigns leave it at the default ``(None,)``).
+    fast-engine campaigns leave it at the default ``(None,)``).  Rows whose
+    ``failures`` entry is a dynamic ``FaultSchedule`` ignore ``g_converge``
+    entirely -- the schedule's own ``host_react``/``switch_react`` delays
+    play its role, per epoch.
     ``max_slots`` is the loop-engine slot budget -- a first-class field: the
     compiled engine takes it as a per-row *operand* (so differing budgets
     share one executable; the planner's fused keys carry only its
@@ -114,7 +135,7 @@ class Campaign:
     loads: Tuple[WorkloadSpec, ...]
     trees: Tuple[int, ...] = (8,)
     seeds: Tuple[int, ...] = (0,)
-    failures: Tuple[Optional[FailureSpec], ...] = (None,)
+    failures: Tuple[Optional[FailureLike], ...] = (None,)
     g_converge: Tuple[Optional[int], ...] = (None,)
     prop_slots: float = 12.0
     backend: str = "auto"
@@ -152,8 +173,11 @@ class Campaign:
 
     @property
     def n_points(self) -> int:
-        return (len(self.trees) * len(self.loads) * len(self.failures)
-                * len(self.g_converge) * len(self.schemes) * len(self.seeds))
+        n_sched = sum(isinstance(f, FaultSchedule) for f in self.failures)
+        fail_rows = ((len(self.failures) - n_sched) * len(self.g_converge)
+                     + n_sched)
+        return (len(self.trees) * len(self.loads) * fail_rows
+                * len(self.schemes) * len(self.seeds))
 
     def loop_options(self) -> Dict:
         return dict(self.loop_opts)
@@ -177,6 +201,13 @@ class Campaign:
         for k, load, failure, g, scheme, seed in itertools.product(
                 self.trees, self.loads, self.failures, self.g_converge,
                 self.schemes, self.seeds):
+            if isinstance(failure, FaultSchedule):
+                # Schedule rows ignore the g_converge axis (their reaction
+                # delays live in the schedule): emit once, at g=None,
+                # instead of duplicating the point per axis value.
+                if g != self.g_converge[0]:
+                    continue
+                g = None
             yield GridPoint(campaign=self.name, k=k, load=load,
                             failure=failure, scheme=scheme, seed=seed,
                             g_converge=g)
@@ -185,7 +216,10 @@ class Campaign:
     def to_dict(self) -> Dict:
         d = dataclasses.asdict(self)
         d["loads"] = [dataclasses.asdict(l) for l in self.loads]
-        d["failures"] = [dataclasses.asdict(f) if f else None
+        # FaultSchedule dicts carry a "kind": "schedule" discriminator so
+        # from_dict can tell the two failure models apart.
+        d["failures"] = [f.to_dict() if isinstance(f, FaultSchedule)
+                         else (dataclasses.asdict(f) if f else None)
                          for f in self.failures]
         d["loop_opts"] = dict(self.loop_opts)
         if self.probes is not None:
@@ -199,8 +233,10 @@ class Campaign:
         d["loads"] = tuple(WorkloadSpec(**l) for l in d["loads"])
         d["trees"] = tuple(d.get("trees", (8,)))
         d["seeds"] = tuple(d.get("seeds", (0,)))
-        d["failures"] = tuple(FailureSpec(**f) if f else None
-                              for f in d.get("failures", [None]))
+        d["failures"] = tuple(
+            (FaultSchedule.from_dict(f) if f.get("kind") == "schedule"
+             else FailureSpec(**f)) if f else None
+            for f in d.get("failures", [None]))
         d["g_converge"] = tuple(d.get("g_converge", [None]))
         d["shard"] = d.get("shard", "auto")
         d["loop_opts"] = tuple(sorted(d.get("loop_opts", {}).items()))
@@ -278,6 +314,31 @@ def _failures(trees: Tuple[int, ...] = (4,),
         loop_opts=(("rho", "auto"), ("rto_slots", 250)))
 
 
+def _flap(trees: Tuple[int, ...] = (4,),
+          seeds: Tuple[int, ...] = (0, 1)) -> Campaign:
+    """Robustness study: clean rows, a static random-failure pattern and a
+    3-epoch mid-run link flap (down at slot 256, back up at 768) share the
+    failure axis -- all three fuse onto one dispatch per compiled shape, so
+    ``n_dispatches == n_shapes`` exactly as for purely static campaigns.
+    Schedule rows take their convergence semantics from the reaction
+    delays (host schemes re-draw labels at +64, switch-local state
+    converges at +192); the ``g_converge`` axis applies to the static
+    FailureSpec row only."""
+    return Campaign(
+        name="flap",
+        schemes=("host_pkt_ar", "switch_pkt_ar", "ofan"),
+        loads=(WorkloadSpec("permutation", 48, inter_pod_only=True),),
+        trees=trees, seeds=seeds,
+        failures=(None,
+                  FailureSpec(p_fail=0.08, rng_seed=42),
+                  FaultSchedule.flap(layer="ea", pod=0, i=0, j=1, t0=256,
+                                     period=512, cycles=1, host_react=64,
+                                     switch_react=192)),
+        g_converge=(64,),
+        engine="loop", max_slots=20000,
+        loop_opts=(("rho", "auto"), ("rto_slots", 250)))
+
+
 def _fig12(trees: Tuple[int, ...] = (8,),
            seeds: Tuple[int, ...] = (0, 1)) -> Campaign:
     """Fig. 12 SACK loss-recovery grid on the loop engine: the scheme x
@@ -303,6 +364,7 @@ PRESETS = {
     "theory": _theory,
     "layer_balance": _layer_balance,
     "failures": _failures,
+    "flap": _flap,
     "fig12": _fig12,
 }
 

@@ -33,6 +33,7 @@ import numpy as np
 import jax
 
 from . import checkpoint as ckpt_mod
+from ..core.retry import retry_call
 from ..models import sharding as sh
 
 
@@ -94,19 +95,19 @@ class ResilientLoop:
         while step < n_steps:
             batch = batches(step)
             t0 = time.monotonic()
-            for attempt in range(self.ft.max_retries + 1):
-                try:
-                    self.state, metrics = self.step_fn(self.state, batch)
-                    jax.block_until_ready(metrics["loss"])
-                    break
-                except Exception as e:  # noqa: BLE001 -- transient fabric
-                    if attempt >= self.ft.max_retries:
-                        self.ckpt.wait()
-                        raise
-                    self.health_cb(
-                        f"step {step} attempt {attempt} failed: {e!r}; "
-                        f"backing off")
-                    time.sleep(self.ft.backoff_s * (2 ** attempt))
+
+            def one_step(batch=batch):
+                state, metrics = self.step_fn(self.state, batch)
+                jax.block_until_ready(metrics["loss"])
+                return state, metrics
+
+            self.state, metrics = retry_call(
+                one_step, max_retries=self.ft.max_retries,
+                backoff_s=self.ft.backoff_s,
+                on_retry=lambda attempt, e, _d, step=step: self.health_cb(
+                    f"step {step} attempt {attempt} failed: {e!r}; "
+                    f"backing off"),
+                on_exhausted=lambda e: self.ckpt.wait())
             dt = time.monotonic() - t0
             if self.straggler.record(dt):
                 self.health_cb(f"straggler step {step}: {dt:.3f}s")

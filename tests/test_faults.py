@@ -1,0 +1,399 @@
+"""Dynamic fault schedules and the crash-safe retry/resume sweep runner.
+
+Three differential contracts anchor the fault subsystem:
+
+* a single-epoch :class:`FaultSchedule` is bitwise-identical to the static
+  ``links`` (+ ``g_converge`` on the loop engine) path it generalizes;
+* mixed static/flapping campaigns fused onto one megabatch dispatch equal
+  serial per-point simulation bitwise, on both engines;
+* a campaign killed mid-run and finished via ``resume=True`` produces a
+  byte-identical ``results.jsonl`` to an uninterrupted run.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import lb_schemes as lbs
+from repro.core.retry import retry_call
+from repro.faults import FaultSchedule, LinkEvent
+from repro.net import fastsim, loopsim, workloads
+from repro.net.topology import FatTree, LinkState
+from repro.obs.report import render_report
+from repro.obs.trace import TraceWriter
+from repro.sweep import runner as runner_mod
+from repro.sweep.results import ResultStore
+from repro.sweep.runner import run_campaign
+from repro.sweep.spec import Campaign, FailureSpec, WorkloadSpec
+
+
+@pytest.fixture(scope="module")
+def tree():
+    return FatTree(4)
+
+
+@pytest.fixture(scope="module")
+def wl(tree):
+    return workloads.permutation(tree, 24, np.random.default_rng(1),
+                                 inter_pod_only=True)
+
+
+CFG = loopsim.LoopConfig(max_slots=4000)
+
+FLAP = FaultSchedule.flap(layer="ea", pod=0, i=0, j=1, t0=20, period=60,
+                          cycles=1, host_react=8, switch_react=16)
+
+
+def _failing_seed(tree, p=0.15):
+    for s in range(60):
+        if LinkState.random_failures(tree, p, seed=s).any_failure():
+            return s
+    raise RuntimeError("no failures sampled")
+
+
+# ---- schedule object ------------------------------------------------------
+
+def test_event_validation():
+    with pytest.raises(ValueError):
+        LinkEvent(10, "xx", 0, 0, 0, up=False)
+    with pytest.raises(ValueError):
+        LinkEvent(-1, "ea", 0, 0, 0, up=False)
+    with pytest.raises(ValueError):
+        FaultSchedule.flap(period=0)
+    with pytest.raises(ValueError):
+        FaultSchedule.burst([("ea", 0, 0, 0)], t_down=10, t_up=5)
+    with pytest.raises(ValueError):        # coordinates checked vs the tree
+        FaultSchedule(events=(LinkEvent(5, "ea", 0, 3, 0, up=False),)
+                      ).compile(FatTree(4))
+
+
+def test_compile_epoch_timeline(tree):
+    comp = FLAP.compile(tree)
+    assert comp.ep_start == (0, 20, 80)
+    assert comp.n_epochs == 3
+    # epoch 0 all up, epoch 1 the link is down, epoch 2 back up
+    assert not comp.links[0].any_failure()
+    assert comp.links[0].ea[0, 0, 1]
+    assert not comp.links[1].ea[0, 0, 1]
+    assert comp.links[2].ea[0, 0, 1]
+    # reaction delays saturate instead of overflowing
+    host = comp.react_starts("host")
+    sw = comp.react_starts("switch")
+    assert host.tolist() == [8, 28, 88]
+    assert sw.tolist() == [16, 36, 96]
+    assert host.dtype == np.int32
+
+
+def test_schedule_json_roundtrip():
+    for sched in (FLAP,
+                  FaultSchedule.static(0.1, 7, host_react=64, switch_react=64),
+                  FaultSchedule.burst([("ea", 1, 0, 0), ("ac", 1, 1, 1)],
+                                      t_down=100, t_up=300, p_fail=0.05)):
+        d = sched.to_dict()
+        assert d["kind"] == "schedule"
+        assert FaultSchedule.from_dict(json.loads(json.dumps(d))) == sched
+        assert FaultSchedule.from_dict(d).label() == sched.label()
+
+
+def test_labels_distinguish_schedules():
+    a = FaultSchedule.flap(t0=10, period=20)
+    b = FaultSchedule.flap(t0=10, period=30)
+    assert a.label() != b.label()
+    assert FaultSchedule.static(0.1).label() \
+        != FaultSchedule.static(0.1, legacy_rng=True).label()
+
+
+# ---- satellite: entropy-keyed random failures -----------------------------
+
+def test_random_failures_entropy_keyed(tree):
+    a = LinkState.random_failures(tree, 0.2, seed=3)
+    b = LinkState.random_failures(tree, 0.2, seed=3)
+    assert (a.ea == b.ea).all() and (a.ac == b.ac).all()
+    c = LinkState.random_failures(tree, 0.2, seed=4)
+    assert not ((a.ea == c.ea).all() and (a.ac == c.ac).all())
+    legacy = LinkState.random_failures(tree, 0.2,
+                                       np.random.default_rng(3))
+    # different stream by design; both are valid patterns of the same rate
+    assert legacy.ea.shape == a.ea.shape
+
+
+# ---- differential (a): single epoch == static path ------------------------
+
+def test_single_epoch_equals_static_fast(tree, wl):
+    s = _failing_seed(tree)
+    links = LinkState.random_failures(tree, 0.15, seed=s)
+    sched = FaultSchedule.static(0.15, s)
+    for name in ("host_pkt", "host_dr", "ofan", "jsq", "flow_ecmp"):
+        scheme = lbs.by_name(name)
+        ref = fastsim.simulate(tree, wl, scheme, seed=0, links=links)
+        got = fastsim.simulate(tree, wl, scheme, seed=0, fault=sched)
+        np.testing.assert_array_equal(np.asarray(ref.delivery),
+                                      np.asarray(got.delivery),
+                                      err_msg=name)
+        assert ref.cct == got.cct, name
+
+
+def test_single_epoch_equals_static_loop(tree, wl):
+    s = _failing_seed(tree)
+    links = LinkState.random_failures(tree, 0.15, seed=s)
+    G = 64
+    sched = FaultSchedule.static(0.15, s, host_react=G, switch_react=G)
+    for name in ("host_pkt_ar", "ofan"):        # one host-, one switch-class
+        scheme = lbs.by_name(name)
+        ref = loopsim.simulate(tree, wl, scheme, CFG, seed=0, links=links,
+                               g_converge=G)
+        got = loopsim.simulate(tree, wl, scheme, CFG, seed=0, fault=sched)
+        np.testing.assert_array_equal(ref.delivered_slot, got.delivered_slot,
+                                      err_msg=name)
+        assert ref.cct_slots == got.cct_slots, name
+        assert ref.retransmissions == got.retransmissions, name
+
+
+def test_fault_excludes_static_operands(tree, wl):
+    links = LinkState.all_up(tree)
+    with pytest.raises(ValueError):
+        loopsim.simulate(tree, wl, lbs.ofan(), CFG, fault=FLAP, links=links)
+    with pytest.raises(ValueError):
+        loopsim.simulate(tree, wl, lbs.ofan(), CFG, fault=FLAP, g_converge=8)
+    with pytest.raises(ValueError):
+        fastsim.simulate(tree, wl, lbs.ofan(), fault=FLAP, links=links)
+
+
+def test_flap_perturbs_reactive_schemes_only(tree, wl):
+    """A flap whose reaction window overlaps the release span must change
+    link-aware routing (fastsim binds a packet's routing epoch at its
+    release slot), and must be inert for link-oblivious schemes (RR / JSQ
+    ignore link state)."""
+    quick = FaultSchedule.flap(layer="ea", pod=0, i=0, j=1, t0=4, period=12,
+                               cycles=1, host_react=0, switch_react=0)
+    for reactive in ("ofan", "host_pkt"):
+        scheme = lbs.by_name(reactive)
+        base = fastsim.simulate(tree, wl, scheme, seed=0)
+        flap = fastsim.simulate(tree, wl, scheme, seed=0, fault=quick)
+        assert not np.array_equal(np.asarray(base.delivery),
+                                  np.asarray(flap.delivery)), reactive
+    for inert in ("simple_rr", "jsq"):
+        scheme = lbs.by_name(inert)
+        base = fastsim.simulate(tree, wl, scheme, seed=0)
+        flap = fastsim.simulate(tree, wl, scheme, seed=0, fault=quick)
+        np.testing.assert_array_equal(np.asarray(base.delivery),
+                                      np.asarray(flap.delivery),
+                                      err_msg=inert)
+
+
+def test_flap_perturbs_loop_engine(tree, wl):
+    base = loopsim.simulate(tree, wl, lbs.ofan(), CFG, seed=0)
+    flap = loopsim.simulate(tree, wl, lbs.ofan(), CFG, seed=0, fault=FLAP)
+    assert base.finished and flap.finished
+    assert not np.array_equal(base.delivered_slot, flap.delivered_slot)
+
+
+# ---- differential (b): fused mixed campaign == serial ---------------------
+
+def test_megabatch_mixed_faults_fast(tree, wl):
+    s = _failing_seed(tree)
+    static = LinkState.random_failures(tree, 0.15, seed=s)
+    items = [
+        (tree, wl, lbs.host_pkt(), [0, 1], None, None),
+        (tree, wl, lbs.host_pkt(), [0, 1], static, None),
+        (tree, wl, lbs.host_pkt(), [0, 1], None, FLAP),
+        (tree, wl, lbs.host_pkt(), [0], None,
+         FaultSchedule.burst([("ea", 0, 0, 0), ("ac", 0, 1, 0)],
+                             t_down=30, t_up=90, host_react=12)),
+    ]
+    fused = fastsim.simulate_megabatch(items, n_shards=1)
+    for (t, w, scheme, seeds, links, fz), results in zip(items, fused):
+        for seed, got in zip(seeds, results):
+            ref = fastsim.simulate(t, w, scheme, seed=seed, links=links,
+                                   fault=fz)
+            np.testing.assert_array_equal(np.asarray(ref.delivery),
+                                          np.asarray(got.delivery))
+
+
+def test_megabatch_mixed_faults_loop(tree, wl):
+    s = _failing_seed(tree)
+    static = LinkState.random_failures(tree, 0.15, seed=s)
+    items = [
+        (tree, wl, lbs.host_pkt_ar(), CFG, [0, 1], None, None, None),
+        (tree, wl, lbs.host_pkt_ar(), CFG, [0, 1], static, 64, None),
+        (tree, wl, lbs.host_pkt_ar(), CFG, [0, 1], None, None, FLAP),
+        (tree, wl, lbs.host_pkt_ar(), CFG, [0], None, None,
+         FaultSchedule.burst([("ea", 0, 0, 0), ("ac", 0, 1, 0)],
+                             t_down=30, t_up=90, host_react=12,
+                             switch_react=24)),
+    ]
+    fused = loopsim.simulate_megabatch(items, n_shards=1)
+    for (t, w, scheme, cfg, seeds, links, g, fz), results in zip(items,
+                                                                 fused):
+        for seed, got in zip(seeds, results):
+            ref = loopsim.simulate(t, w, scheme, cfg, seed=seed, links=links,
+                                   g_converge=g, fault=fz)
+            np.testing.assert_array_equal(ref.delivered_slot,
+                                          got.delivered_slot)
+            assert ref.cct_slots == got.cct_slots
+
+
+# ---- runner: retry / degradation ladder / resume --------------------------
+
+MIXED = Campaign(
+    name="faults-mixed", schemes=("host_pkt", "simple_rr", "ofan"),
+    loads=(WorkloadSpec("permutation", 24, inter_pod_only=True),),
+    trees=(4,), seeds=(0, 1),
+    failures=(None, FailureSpec(0.08, 42), FLAP),
+    engine="fast", shard="off")
+
+
+def test_mixed_campaign_fuses_to_plan_shapes():
+    """Static, flapping and failure-free rows plan onto the same fused
+    dispatches: n_dispatches == n_shapes (the acceptance bar)."""
+    from repro.sweep.planner import plan
+    p = plan(MIXED)
+    assert p.n_dispatches == p.n_shapes
+    assert p.n_points == 18
+
+
+def test_retry_call_backoff_and_exhaustion():
+    slept, tries = [], {"n": 0}
+
+    def boom():
+        tries["n"] += 1
+        raise RuntimeError("always")
+
+    cleanup = []
+    with pytest.raises(RuntimeError):
+        retry_call(boom, max_retries=3, backoff_s=0.5, sleep=slept.append,
+                   on_exhausted=cleanup.append)
+    assert tries["n"] == 4
+    assert slept == [0.5, 1.0, 2.0]         # exponential, no sleep after last
+    assert len(cleanup) == 1
+
+    tries["n"] = 0
+
+    def flaky():
+        tries["n"] += 1
+        if tries["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert retry_call(flaky, max_retries=5, backoff_s=1.0,
+                      sleep=slept.append) == "ok"
+
+
+def test_runner_retry_recovers_transient(monkeypatch):
+    real = runner_mod._run_fast_mega
+    calls = {"n": 0}
+
+    def flaky(mega, campaign, cache):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("injected transient")
+        return real(mega, campaign, cache)
+
+    monkeypatch.setattr(runner_mod, "_run_fast_mega", flaky)
+    trace = TraceWriter(None)
+    slept = []
+    recs, _ = run_campaign(MIXED, trace=trace, compile_cache_dir=False,
+                           retry=2, backoff_s=0.25, sleep=slept.append)
+    assert len(recs) == 18                  # nothing lost
+    retries = [s for s in trace.spans if s["kind"] == "retry"]
+    assert len(retries) == 1 and retries[0]["stage"] == "megabatch"
+    assert slept == [0.25]
+    assert not any(s["kind"] == "error" for s in trace.spans)
+
+
+def test_runner_degrades_and_reports(monkeypatch):
+    """A poisoned member exhausts its budget, the dispatch degrades member
+    -> serial, only the poisoned points are lost, and the report surfaces
+    all of it."""
+    real = runner_mod._run_fast_mega
+
+    def poison(mega, campaign, cache):
+        if any(b.scheme == "ofan" and 1 in b.seeds for b in mega.members):
+            raise RuntimeError("poisoned member")
+        return real(mega, campaign, cache)
+
+    monkeypatch.setattr(runner_mod, "_run_fast_mega", poison)
+    trace = TraceWriter(None)
+    recs, _ = run_campaign(MIXED, trace=trace, compile_cache_dir=False,
+                           retry=0, sleep=lambda s: None)
+    lost = 18 - len(recs)
+    assert 0 < lost <= 3                    # only ofan seed-1 points
+    assert all(not (r["scheme"] == "ofan" and r["seed"] == 1)
+               for r in recs)
+    kinds = [s["kind"] for s in trace.spans]
+    assert "error" in kinds and "degrade" in kinds
+    point_errors = [s for s in trace.spans
+                    if s["kind"] == "error" and s.get("stage") == "point"]
+    assert len(point_errors) == lost
+    rep = render_report(trace.spans, recs)
+    assert "robustness" in rep
+    assert "LOST point" in rep and "degraded" in rep
+
+
+def test_resume_byte_identical(tmp_path):
+    """Differential (c): kill-and-resume reproduces the uninterrupted run's
+    results JSONL byte-for-byte, including a torn final line."""
+    a = tmp_path / "a"
+    store = ResultStore(a / "results.jsonl")
+    run_campaign(MIXED, store=store, compile_cache_dir=False)
+    store.close()
+    golden = (a / "results.jsonl").read_bytes()
+
+    lines = golden.decode().splitlines(keepends=True)
+    for cut in (0, 5, len(lines) - 1):      # crash early / mid / late
+        b = tmp_path / f"b{cut}"
+        b.mkdir()
+        partial = "".join(lines[:cut]) + lines[cut][: len(lines[cut]) // 2]
+        (b / "results.jsonl").write_text(partial)   # torn tail, no newline
+
+        store = ResultStore(b / "results.jsonl", overwrite=False)
+        trace = TraceWriter(None)
+        run_campaign(MIXED, store=store, compile_cache_dir=False,
+                     resume=True, trace=trace)
+        store.close()
+        assert (b / "results.jsonl").read_bytes() == golden, f"cut={cut}"
+        resume_spans = [s for s in trace.spans if s["kind"] == "resume"]
+        assert len(resume_spans) == 1
+        assert resume_spans[0]["records_kept"] <= cut
+
+
+def test_resume_noop_when_complete(tmp_path):
+    """Resuming a finished campaign re-runs nothing and rewrites nothing."""
+    out = tmp_path / "done"
+    store = ResultStore(out / "results.jsonl")
+    run_campaign(MIXED, store=store, compile_cache_dir=False)
+    store.close()
+    golden = (out / "results.jsonl").read_bytes()
+
+    store = ResultStore(out / "results.jsonl", overwrite=False)
+    trace = TraceWriter(None)
+    recs, _ = run_campaign(MIXED, store=store, compile_cache_dir=False,
+                           resume=True, trace=trace)
+    store.close()
+    assert recs == []                       # no new records
+    assert (out / "results.jsonl").read_bytes() == golden
+    span = next(s for s in trace.spans if s["kind"] == "resume")
+    assert span["records_kept"] == 18
+
+
+def test_loop_campaign_with_schedule_rows():
+    """Loop-engine campaign mixing static and schedule rows: schedule rows
+    drop g_converge (reaction delays come from the schedule), static rows
+    keep it, and everything fuses."""
+    camp = Campaign(
+        name="faults-loop", schemes=("host_pkt_ar", "ofan"),
+        loads=(WorkloadSpec("permutation", 16, inter_pod_only=True),),
+        trees=(4,), seeds=(0,),
+        failures=(FailureSpec(0.08, 42), FLAP),
+        g_converge=(64,), engine="loop", max_slots=4000, shard="off",
+        loop_opts=(("rho", "auto"),))
+    from repro.sweep.planner import plan
+    p = plan(camp)
+    assert p.n_dispatches == p.n_shapes
+    recs, _ = run_campaign(camp, compile_cache_dir=False)
+    assert len(recs) == 4
+    by_fail = {(r["failure"], r["scheme"]): r for r in recs}
+    sched_label = FLAP.label()
+    assert by_fail[(sched_label, "ofan")]["g_converge"] is None
+    assert by_fail[("fail0.08-r42", "ofan")]["g_converge"] == 64
