@@ -1,0 +1,196 @@
+"""Per-kernel microbenchmarks for the slot-step Pallas kernels.
+
+Times each ``kernels/slot_step`` op three ways on synthetic engine-shaped
+operands:
+
+  * **lax**: the inline engine formulation extracted as a jitted closure
+    (for the SACK scoreboard this is the *per-send-lane* window scan the
+    engine used before the kernel fused it per-flow);
+  * **xla**: the ``ref.py`` oracle through the ``ops`` backend switch --
+    what ``LoopConfig.impl="pallas"`` would run if Pallas were unavailable;
+  * **pallas_interpret**: the Pallas kernel in interpret mode (the only
+    mode available off-TPU).  Interpret mode is a *correctness* vehicle,
+    not a performance one -- expect it orders of magnitude slower on CPU;
+    the number is recorded so TPU runs have a baseline to compare against.
+
+Results merge under ``BENCH_sweep.json:"kernels"`` (same merge contract as
+``sweep_bench``), one sample per op with microseconds per call and the
+operand shapes.  Registered as ``--only kernels`` in ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import entropy as ent
+from repro.net._batching import rank_by
+from repro.kernels.slot_step import ops as slot_ops
+
+from . import common as C
+from .sweep_bench import SMOKE, _merge_bench_json
+
+
+def _bench(fn, iters):
+    """Median-of-iters wall time per call in us (first call compiles)."""
+    jax.block_until_ready(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)) * 1e6
+
+
+def _operands(rng):
+    """Synthetic engine-shaped operands: a k=8-ish switch layer (h ports,
+    NQ queues of CAP slots) with M in-flight arrival lanes over F flows."""
+    m = 32 if SMOKE else 128        # choosers / arrival lanes
+    h = 8                           # ports per switch
+    nq = 64 if SMOKE else 256       # queues in the layer stack
+    cap = 16
+    f = 32 if SMOKE else 128        # flows
+    per_flow = 32 if SMOKE else 64
+    p = f * per_flow                # packets
+    ops = {
+        "m": m, "h": h, "nq": nq, "cap": cap, "f": f, "p": p,
+        "qcnt": jnp.asarray(rng.integers(0, cap, nq), jnp.int32),
+        "qbuf": jnp.asarray(rng.integers(-1, p, (nq, cap)), jnp.int32),
+        "qhead": jnp.asarray(rng.integers(0, cap, nq), jnp.int32),
+        "qbase": jnp.asarray(rng.integers(0, nq - h, m), jnp.int32),
+        "ids": jnp.arange(m, dtype=jnp.int32),
+        "dead": jnp.asarray(rng.random((m, h)) < 0.1),
+        "pad_pen": jnp.where(jnp.arange(h) < h - 1, 0.0, 1e9
+                             ).astype(jnp.float32),
+        "alive": jnp.asarray(rng.random(nq) < 0.95),
+        "apk": jnp.asarray(np.where(rng.random(m) < 0.8,
+                                    rng.integers(0, p, m), -1), jnp.int32),
+        "aq": jnp.asarray(rng.integers(0, nq, m), jnp.int32),
+        "asw": jnp.asarray(rng.integers(0, 4, m), jnp.int32),
+        "p_recv": jnp.asarray(rng.random(p) < 0.5),
+        "pk": jnp.asarray(rng.integers(0, p, m), jnp.int32),
+        "deliv": jnp.asarray(rng.random(m) < 0.5),
+        "f_cum": jnp.asarray(rng.integers(0, per_flow, f), jnp.int32),
+        "fsize": jnp.full((f,), per_flow, jnp.int32),
+        "pbase": jnp.arange(f, dtype=jnp.int32) * per_flow,
+        "sfv": jnp.asarray(rng.integers(0, f, m), jnp.int32),
+    }
+    ops["avalid"] = ops["apk"] >= 0
+    ops["to_agg"] = ops["avalid"] & (ops["aq"] < 4 * ops["h"])
+    return ops
+
+
+def _sack_lane_scan_closure(o):
+    """The pre-kernel engine formulation: scatter, then the 64-wide
+    first-missing window per *send lane* (gathered per-lane flow state)."""
+    @jax.jit
+    def run(p_recv, pk, deliv, f_cum, fsize, sfv):
+        P = p_recv.shape[0]
+        prec = p_recv.at[jnp.where(deliv, pk, P)].set(True, mode="drop")
+        base = f_cum[sfv]
+        offs = jnp.arange(64)[None, :]
+        cand = jnp.minimum(base[:, None] + offs, fsize[sfv][:, None] - 1)
+        got = prec[o["pbase"][sfv][:, None] + cand]
+        fm = cand[jnp.arange(cand.shape[0]), jnp.argmin(got, axis=1)]
+        return prec, fm
+    return lambda: run(o["p_recv"], o["pk"], o["deliv"], o["f_cum"],
+                       o["fsize"], o["sfv"])
+
+
+def kernel_microbench(scale: C.Scale):
+    """Slot-step kernel microbench: pallas-interpret vs xla oracle vs the
+    inline lax closures, merged under BENCH_sweep.json:"kernels"."""
+    iters = 5 if SMOKE else 20
+    rng = np.random.default_rng(0)
+    o = _operands(rng)
+    quanta = (0.05, 0.10, 0.20)
+    seed_lo, seed_hi, t = jnp.uint32(0x1234), jnp.uint32(0x9e37), 17
+
+    def _jsq(backend, quanta_):
+        fn = jax.jit(lambda qc: slot_ops.jsq_pick(
+            qc, o["qbase"], o["ids"], o["dead"], o["pad_pen"],
+            seed_lo, seed_hi, t, site=ent.SITE_EDGE_JSQ, quanta=quanta_,
+            cap=o["cap"], backend=backend))
+        return lambda: fn(o["qcnt"])
+
+    def _enq(backend):
+        fn = jax.jit(lambda qb, qc: slot_ops.enqueue(
+            qb, o["qhead"], qc, o["alive"], o["apk"], o["aq"], o["avalid"],
+            cap=o["cap"], ecn_thresh=12, backend=backend))
+        return lambda: fn(o["qbuf"], o["qcnt"])
+
+    def _agg(backend):
+        fn = jax.jit(lambda qb, qc: slot_ops.agg_jsq_enqueue(
+            qb, o["qhead"], qc, o["alive"], o["apk"], o["aq"], o["to_agg"],
+            o["asw"], o["dead"], o["pad_pen"], seed_lo, seed_hi, t,
+            site=ent.SITE_AGG_JSQ, quanta=None, cap=o["cap"], ecn_thresh=12,
+            off1=0, h=o["h"], backend=backend))
+        return lambda: fn(o["qbuf"], o["qcnt"])
+
+    def _sack_up(backend):
+        fn = jax.jit(lambda pr: slot_ops.sack_update_scan(
+            pr, o["pk"], o["deliv"], o["f_cum"], o["fsize"], o["pbase"],
+            backend=backend))
+        return lambda: fn(o["p_recv"])
+
+    def _sack_adv(backend):
+        fn = jax.jit(lambda fc: slot_ops.sack_advance(
+            o["p_recv"], fc, o["fsize"], o["pbase"], backend=backend))
+        return lambda: fn(o["f_cum"])
+
+    # The inline engine blocks as standalone jitted closures.  For jsq/
+    # enqueue the inline code IS the ref formulation (ref.py mirrors it
+    # op-for-op), so "lax" times the same computation outside the ops
+    # dispatch layer; the SACK lane scan is genuinely different code.
+    @jax.jit
+    def _lax_enqueue(qbuf, qcnt):
+        aq, apk, avalid = o["aq"], o["apk"], o["avalid"]
+        aqc = jnp.clip(aq, 0, o["nq"] - 1)
+        enq_try = avalid & o["alive"][aqc]
+        rkq = rank_by(aq, enq_try)
+        do_enq = enq_try & (qcnt[aqc] + rkq < o["cap"])
+        pos = (o["qhead"][aqc] + qcnt[aqc] + rkq) % o["cap"]
+        qbuf = qbuf.at[jnp.where(do_enq, aq, o["nq"]),
+                       jnp.where(do_enq, pos, 0)].set(
+            jnp.where(do_enq, apk, -1), mode="drop")
+        return qbuf, qcnt.at[jnp.where(do_enq, aq, o["nq"])].add(
+            1, mode="drop")
+
+    samples = {}
+    cases = [
+        ("jsq_pick", _jsq("xla", None), _jsq("pallas", None),
+         _jsq("xla", None)),
+        ("jsq_pick_quant", _jsq("xla", quanta), _jsq("pallas", quanta),
+         _jsq("xla", quanta)),
+        ("enqueue", lambda: _lax_enqueue(o["qbuf"], o["qcnt"]),
+         _enq("pallas"), _enq("xla")),
+        ("agg_jsq_enqueue", _agg("xla"), _agg("pallas"), _agg("xla")),
+        ("sack_update_scan", _sack_lane_scan_closure(o),
+         _sack_up("pallas"), _sack_up("xla")),
+        ("sack_advance", _sack_adv("xla"), _sack_adv("pallas"),
+         _sack_adv("xla")),
+    ]
+    for name, lax_fn, pallas_fn, xla_fn in cases:
+        lax_us = _bench(lax_fn, iters)
+        xla_us = _bench(xla_fn, iters)
+        pal_us = _bench(pallas_fn, max(2, iters // 4))
+        samples[name] = {
+            "lax_us": round(lax_us, 1),
+            "xla_us": round(xla_us, 1),
+            "pallas_interpret_us": round(pal_us, 1),
+        }
+        C.emit(f"kernel_{name}", xla_us, lax_us=round(lax_us, 1),
+               pallas_interpret_us=round(pal_us, 1))
+
+    result = {
+        "shapes": {k: o[k] for k in ("m", "h", "nq", "cap", "f", "p")},
+        "iters": iters, "smoke": SMOKE,
+        "on_tpu": jax.default_backend() == "tpu",
+        "note": ("pallas numbers are interpret-mode (off-TPU): a "
+                 "correctness baseline, not a perf claim"),
+        "samples": samples,
+    }
+    _merge_bench_json({"kernels": result})
+    return result

@@ -419,10 +419,11 @@ def tbl3(scale: C.Scale):
 
 
 from .sweep_bench import sweep_speedup  # noqa: E402  (registered below)
+from .kernel_bench import kernel_microbench  # noqa: E402
 
 ALL = {
     "fig1": fig1, "fig3": fig3, "fig4": fig4, "fig5": fig5, "fig6": fig6,
     "fig7": fig7, "fig8": fig8, "fig9": fig9, "fig10": fig10,
     "fig11": fig11, "fig12": fig12, "fig13": fig13, "fig14": fig14,
-    "tbl3": tbl3, "sweep": sweep_speedup,
+    "tbl3": tbl3, "sweep": sweep_speedup, "kernels": kernel_microbench,
 }

@@ -140,11 +140,15 @@ def _loop_sample(k: int, tree: FatTree):
     cold_s = time.perf_counter() - t0
     isolated_s = cold_s * campaign.n_points
 
+    from repro.kernels.slot_step import ops as slot_ops
     return {
         "grid": {"k": k, "msg_packets": load.msg_packets,
                  "schemes": list(LOOP_SCHEMES), "n_seeds": len(seeds),
                  "points": campaign.n_points},
         "plan": {"n_dispatches": p.n_dispatches, "n_shapes": p.n_shapes},
+        # Which slot-step implementation produced these numbers (lax vs
+        # pallas), so the perf trajectory in BENCH_sweep.json stays legible.
+        "impl": slot_ops.resolve_impl(campaign.loop_config().impl),
         "megabatch_s": round(mega_s, 3),
         "serial_warm_s": round(serial_s, 3),
         "serial_isolated_s": round(isolated_s, 3),
@@ -237,12 +241,14 @@ def _kfuse_loop_sample():
     assert fused_cct == per_k_cct, ("loop cross-k fused CCTs diverge from "
                                     "per-k")
 
+    from repro.kernels.slot_step import ops as slot_ops
     return {
         "grid": {"trees": list(trees), "msg_packets": load.msg_packets,
                  "schemes": list(schemes), "n_seeds": len(seeds),
                  "points": fused_c.n_points},
         "plan": {"n_dispatches": p.n_dispatches, "n_shapes": p.n_shapes,
                  "k_pad": p.megabatches[0].k_pad},
+        "impl": slot_ops.resolve_impl(fused_c.loop_config().impl),
         "fused_s": round(fused_s, 3),
         "per_k_s": round(per_k_s, 3),
         "speedup_vs_per_k": round(per_k_s / fused_s, 2),

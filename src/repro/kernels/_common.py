@@ -1,0 +1,54 @@
+"""Shared helpers for the Pallas kernel packages.
+
+Every kernel package (``lindley``, ``ssd_scan``, ``slot_step``, ...) ships
+the same three-file idiom: ``kernel.py`` (the Pallas TPU kernel),
+``ref.py`` (a pure-jnp oracle) and ``ops.py`` (a public wrapper with a
+``backend`` switch).  The backend-detection logic and the captured-const
+conventions they all need live here instead of being copy-pasted.
+
+``REPRO_PALLAS=interpret`` (environment) forces ``auto`` to resolve to the
+Pallas kernels in interpret mode even off-TPU -- CI uses this to smoke the
+kernel paths on the CPU runners, where ``auto`` would otherwise pick the
+XLA oracle (interpret-mode Pallas is orders of magnitude slower than XLA,
+so it is never the default on CPU).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+# Large-negative sentinel for max-scans inside kernel bodies.  A python
+# float on purpose: jnp scalars would become captured consts in pallas.
+NEG = -3.0e38
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def interpret_forced() -> bool:
+    """True when ``REPRO_PALLAS=interpret`` asks for interpret-mode Pallas
+    off-TPU (CI kernel smoke; never set in production runs)."""
+    return os.environ.get("REPRO_PALLAS", "") == "interpret"
+
+
+def resolve_backend(backend: str, *, fallback: str = "xla",
+                    choices: tuple = ("auto", "xla", "pallas")) -> str:
+    """Resolve an ``{auto, xla, pallas}``-style backend switch.
+
+    ``auto`` picks ``"pallas"`` on TPU (or under ``REPRO_PALLAS=interpret``)
+    and ``fallback`` elsewhere; explicit values pass through after
+    validation.
+    """
+    if backend not in choices:
+        raise ValueError(f"backend {backend!r}: expected one of {choices}")
+    if backend == "auto":
+        return "pallas" if (_on_tpu() or interpret_forced()) else fallback
+    return backend
+
+
+def use_interpret() -> bool:
+    """Interpret flag for a resolved ``"pallas"`` backend: compile for real
+    on TPU, interpret everywhere else (the bitwise CPU validation path)."""
+    return not _on_tpu()

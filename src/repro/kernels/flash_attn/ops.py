@@ -8,14 +8,9 @@
 """
 from __future__ import annotations
 
-import jax
-
 from . import kernel as _kernel
 from . import ref as _ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from .._common import resolve_backend, use_interpret
 
 
 def attention(q, k, v, *, causal: bool = True, scale=None,
@@ -23,8 +18,7 @@ def attention(q, k, v, *, causal: bool = True, scale=None,
     """q (B,Hq,Sq,Dk); k (B,Hkv,Sk,Dk); v (B,Hkv,Sk,Dv) -> (B,Hq,Sq,Dv).
 
     Dv != Dk and long sequences route through the chunked XLA path."""
-    if backend == "auto":
-        backend = "pallas" if _on_tpu() else "xla"
+    backend = resolve_backend(backend)
     mixed_dims = v.shape[-1] != k.shape[-1]
     long_seq = k.shape[2] > 1024
     if backend == "xla":
@@ -32,10 +26,8 @@ def attention(q, k, v, *, causal: bool = True, scale=None,
             return _ref.mha_chunked(q, k, v, causal=causal, scale=scale,
                                     block_k=min(512, k.shape[2]))
         return _ref.mha(q, k, v, causal=causal, scale=scale)
-    if backend == "pallas":
-        if mixed_dims:
-            return _ref.mha_chunked(q, k, v, causal=causal, scale=scale)
-        return _kernel.flash_attention(
-            q, k, v, causal=causal, scale=scale, block_q=block_q,
-            block_k=block_k, interpret=not _on_tpu())
-    raise ValueError(backend)
+    if mixed_dims:
+        return _ref.mha_chunked(q, k, v, causal=causal, scale=scale)
+    return _kernel.flash_attention(
+        q, k, v, causal=causal, scale=scale, block_q=block_q,
+        block_k=block_k, interpret=use_interpret())

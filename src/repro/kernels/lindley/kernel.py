@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG = -3.0e38  # python float: jnp scalars would be captured consts in pallas
+from .._common import NEG
 
 
 def _scan_block(v, f):

@@ -8,26 +8,19 @@
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from . import kernel as _kernel
 from . import ref as _ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from .._common import resolve_backend, use_interpret
 
 
 def segmented_cummax(v, flags, backend: str = "auto", block: int = 1024):
-    if backend == "auto":
-        backend = "pallas" if _on_tpu() else "xla"
+    backend = resolve_backend(backend)
     if backend == "xla":
         return _ref.segmented_cummax(v, flags)
-    if backend == "pallas":
-        return _kernel.segmented_cummax(v, flags, block=block,
-                                        interpret=not _on_tpu())
-    raise ValueError(backend)
+    return _kernel.segmented_cummax(v, flags, block=block,
+                                    interpret=use_interpret())
 
 
 def lindley_departures(arrival_sorted, seg_start, service: float = 1.0,

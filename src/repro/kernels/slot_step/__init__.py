@@ -1,0 +1,9 @@
+"""Pallas kernels for the slotted feedback engine's per-slot body.
+
+Four fused ops replacing the scatter/gather-heavy sections of
+``repro.net.loopsim._engine`` (JSQ port-rank + queue-occupancy update, SACK
+scoreboard scans), each with a pure-jnp oracle (``ref.py``) that is
+bitwise-identical to the inline lax engine code and a Pallas kernel
+(``kernel.py``) validated against it in interpret mode.  Use via
+``ops`` (backend switch) or through ``LoopConfig(impl="pallas")``.
+"""

@@ -1,0 +1,328 @@
+"""Pallas kernels for the slotted engine's per-slot body.
+
+Four fused ops (see ``ref.py`` for the oracle semantics):
+
+  * :func:`jsq_pick` -- queue-occupancy gather + in-kernel Threefry
+    tie-break noise (:mod:`repro.core.entropy` is written against the
+    numpy/jnp-shared operator set, so the PRF evaluates inside the kernel
+    body) + quantization + pad/dead penalties + masked argmin.  Tiled over
+    choosers (``block``); the occupancy vector rides whole in VMEM.
+  * :func:`enqueue` / :func:`agg_jsq_enqueue` -- the arrival enqueue
+    update (same-queue ranking, capacity drops, ring-buffer scatter,
+    occupancy add, ECN marks), optionally fused with the agg-layer JSQ
+    pick so the pick and the occupancy it feeds stay in one VMEM-resident
+    pass.  Single-program kernels: the ranking couples all lanes.
+  * :func:`sack_update_scan` / :func:`sack_advance` -- receiver-bitmap
+    scatter + per-flow first-missing window argmin, and the unrolled
+    cumulative-ack advance rounds.
+
+Under ``vmap`` (the engine's seed/mega batch axes) the fused campaign axis
+becomes the leading kernel grid dimension via the ``pallas_call`` batching
+rule -- one launch covers the megabatch.
+
+TPU-safe formulations throughout: 2D ``broadcasted_iota`` (1D iota does
+not lower), argmin as min-of-iota-where-min (bitwise-equal to
+``jnp.argmin`` first-occurrence semantics), same-slot arrival ranking as
+an O(M^2) masked count (``rank_by``'s stable sort has no Mosaic lowering),
+window ``cumprod`` unrolled to running products.  Booleans cross the
+kernel boundary as int32 (bool VMEM blocks are awkward on TPU).  The
+ring-buffer scatter uses ``.at[].set(mode="drop")``, which interpret mode
+executes exactly; on a real TPU backend it relies on Mosaic's (limited)
+scatter support -- the CPU-validated interpret path is the one tests pin.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core import entropy as ent
+
+
+def _iota2(shape, dim):
+    return jax.lax.broadcasted_iota(jnp.int32, shape, dim)
+
+
+def _first_min_index(x, width):
+    """Index of the first minimum along axis 1: bitwise-equal to
+    ``jnp.argmin(x, axis=1)`` (min-reduction formulation lowers on TPU)."""
+    m = jnp.min(x, axis=1, keepdims=True)
+    return jnp.min(jnp.where(x == m, _iota2(x.shape, 1), width), axis=1)
+
+
+def _pick_body(qcnt, qbase, ids, dead, pen, s_lo, s_hi, t, *,
+               site, quanta, cap):
+    """Score grid + masked argmin for one block of choosers (mirrors
+    ``ref.jsq_score``/``ref.jsq_pick`` op for op)."""
+    h = pen.shape[0]
+    lane = _iota2((1, h), 1)
+    lens = qcnt[qbase[:, None] + lane]
+    nz = ent.draw_uniform(s_lo, s_hi, site, ids[:, None], t, lane=lane)
+    if quanta is None:
+        score = lens.astype(jnp.float32) + nz * 1e-3
+    else:
+        # Host-side f32 thresholds: identical rounding to the engine's
+        # ``jnp.asarray(quanta, f32) * CAP``.
+        thr = np.asarray(quanta, np.float32) * np.float32(cap)
+        lf = lens.astype(jnp.float32)
+        bins = jnp.zeros(lens.shape, jnp.int32)
+        for v in thr:
+            bins = bins + (lf > jnp.float32(v)).astype(jnp.int32)
+        score = bins.astype(jnp.float32) + nz * 0.5
+    score = score + pen[None, :]
+    score = score + jnp.where(dead, jnp.float32(1e9), jnp.float32(0.0))
+    return _first_min_index(score, h).astype(jnp.int32)
+
+
+def _enqueue_body(qbuf, qhead, qcnt, alive, apk, aq, avalid, *,
+                  cap, ecn_thresh):
+    """Mirrors ``ref.enqueue`` with the rank as an O(M^2) masked count:
+    ``rkq[i] = #{j < i : valid[j] and aq[j] == aq[i]}`` -- the stable-sort
+    rank of ``rank_by`` without the sort."""
+    nq = qcnt.shape[0]
+    M = aq.shape[0]
+    aqc = jnp.clip(aq, 0, nq - 1)
+    dead = alive[aqc] == 0
+    enq_try = avalid & ~dead
+    earlier = ((aq[:, None] == aq[None, :]) & enq_try[None, :]
+               & (_iota2((M, M), 1) < _iota2((M, M), 0)))
+    rkq = jnp.where(enq_try,
+                    jnp.sum(earlier.astype(jnp.int32), axis=1), 0)
+    room = qcnt[aqc] + rkq < cap
+    do_enq = enq_try & room
+    pos = (qhead[aqc] + qcnt[aqc] + rkq) % cap
+    qbuf2 = qbuf.at[jnp.where(do_enq, aq, nq),
+                    jnp.where(do_enq, pos, 0)].set(
+        jnp.where(do_enq, apk, -1), mode="drop")
+    occ_after = qcnt[aqc] + rkq + 1
+    marked = do_enq & (occ_after > ecn_thresh)
+    qcnt2 = qcnt.at[jnp.where(do_enq, aq, nq)].add(1, mode="drop")
+    return qbuf2, qcnt2, enq_try, do_enq, occ_after, marked
+
+
+def _s1(x, dtype):
+    """Scalar operand as a (1,)-shaped array (0-d operands don't batch
+    cleanly through the pallas_call vmap rule)."""
+    return jnp.asarray(x, dtype).reshape(1)
+
+
+# ---------------------------------------------------------------------------
+# jsq_pick: tiled over choosers
+# ---------------------------------------------------------------------------
+
+def _jsq_pick_kernel(qcnt_ref, qbase_ref, ids_ref, dead_ref, pen_ref,
+                     slo_ref, shi_ref, t_ref, o_ref, *, site, quanta, cap):
+    o_ref[...] = _pick_body(
+        qcnt_ref[...], qbase_ref[...], ids_ref[...], dead_ref[...] != 0,
+        pen_ref[...], slo_ref[0], shi_ref[0], t_ref[0],
+        site=site, quanta=quanta, cap=cap)
+
+
+@functools.partial(jax.jit, static_argnames=("site", "quanta", "cap",
+                                             "block", "interpret"))
+def jsq_pick(qcnt, qbase, ids, dead, pad_pen, seed_lo, seed_hi, t, *,
+             site, quanta, cap, block=None, interpret=False):
+    """Fused JSQ port pick; see ``ref.jsq_pick``.  ``block`` tiles the
+    chooser axis (default: one program for the whole row); non-divisible
+    tails are padded with inert choosers and sliced off."""
+    M = qbase.shape[0]
+    NQ = qcnt.shape[0]
+    h = pad_pen.shape[0]
+    block = M if block is None else min(int(block), M)
+    npad = (-M) % block
+    if npad:
+        qbase = jnp.concatenate([qbase, jnp.zeros((npad,), qbase.dtype)])
+        ids = jnp.concatenate([ids, jnp.zeros((npad,), ids.dtype)])
+        dead = jnp.concatenate([dead, jnp.zeros((npad, h), bool)])
+    out = pl.pallas_call(
+        functools.partial(_jsq_pick_kernel, site=site, quanta=quanta,
+                          cap=cap),
+        grid=((M + npad) // block,),
+        in_specs=[
+            pl.BlockSpec((NQ,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((M + npad,), jnp.int32),
+        interpret=interpret,
+    )(qcnt, qbase, ids, dead.astype(jnp.int32), pad_pen,
+      _s1(seed_lo, jnp.uint32), _s1(seed_hi, jnp.uint32), _s1(t, jnp.int32))
+    return out[:M]
+
+
+# ---------------------------------------------------------------------------
+# enqueue / agg_jsq_enqueue: single-program (ranking couples all lanes)
+# ---------------------------------------------------------------------------
+
+def _store_enqueue_outs(outs, o_qbuf, o_qcnt, o_enq_try, o_do_enq, o_occ,
+                        o_marked):
+    qbuf2, qcnt2, enq_try, do_enq, occ_after, marked = outs
+    o_qbuf[...] = qbuf2
+    o_qcnt[...] = qcnt2
+    o_enq_try[...] = enq_try.astype(jnp.int32)
+    o_do_enq[...] = do_enq.astype(jnp.int32)
+    o_occ[...] = occ_after
+    o_marked[...] = marked.astype(jnp.int32)
+
+
+def _enqueue_kernel(qbuf_ref, qhead_ref, qcnt_ref, alive_ref, apk_ref,
+                    aq_ref, avalid_ref, o_qbuf, o_qcnt, o_enq_try, o_do_enq,
+                    o_occ, o_marked, *, cap, ecn_thresh):
+    _store_enqueue_outs(
+        _enqueue_body(qbuf_ref[...], qhead_ref[...], qcnt_ref[...],
+                      alive_ref[...], apk_ref[...], aq_ref[...],
+                      avalid_ref[...] != 0, cap=cap, ecn_thresh=ecn_thresh),
+        o_qbuf, o_qcnt, o_enq_try, o_do_enq, o_occ, o_marked)
+
+
+def _enqueue_out_shapes(nq, cap, m):
+    return (jax.ShapeDtypeStruct((nq, cap), jnp.int32),
+            jax.ShapeDtypeStruct((nq,), jnp.int32),
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+            jax.ShapeDtypeStruct((m,), jnp.int32))
+
+
+def _unpack_enqueue_outs(outs):
+    qbuf2, qcnt2, enq_try, do_enq, occ_after, marked = outs
+    return (qbuf2, qcnt2, enq_try != 0, do_enq != 0, occ_after, marked != 0)
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "ecn_thresh",
+                                             "interpret"))
+def enqueue(qbuf, qhead, qcnt, alive_row, apk, aq, avalid, *,
+            cap, ecn_thresh, interpret=False):
+    """Fused arrival enqueue; see ``ref.enqueue``."""
+    outs = pl.pallas_call(
+        functools.partial(_enqueue_kernel, cap=cap, ecn_thresh=ecn_thresh),
+        out_shape=_enqueue_out_shapes(qcnt.shape[0], cap, aq.shape[0]),
+        interpret=interpret,
+    )(qbuf, qhead, qcnt, alive_row.astype(jnp.int32), apk, aq,
+      avalid.astype(jnp.int32))
+    return _unpack_enqueue_outs(outs)
+
+
+def _agg_jsq_enqueue_kernel(qbuf_ref, qhead_ref, qcnt_ref, alive_ref,
+                            apk_ref, aq_ref, to_agg_ref, asw_ref, dead_ref,
+                            pen_ref, slo_ref, shi_ref, t_ref,
+                            o_qbuf, o_qcnt, o_cfin, o_enq_try, o_do_enq,
+                            o_occ, o_marked, *,
+                            site, quanta, cap, ecn_thresh, off1, h):
+    qcnt = qcnt_ref[...]
+    apk = apk_ref[...]
+    asw = asw_ref[...]
+    c_fin = _pick_body(qcnt, off1 + asw * h, jnp.maximum(apk, 0),
+                       dead_ref[...] != 0, pen_ref[...],
+                       slo_ref[0], shi_ref[0], t_ref[0],
+                       site=site, quanta=quanta, cap=cap)
+    aq2 = jnp.where(to_agg_ref[...] != 0, off1 + asw * h + c_fin,
+                    aq_ref[...])
+    o_cfin[...] = c_fin
+    _store_enqueue_outs(
+        _enqueue_body(qbuf_ref[...], qhead_ref[...], qcnt, alive_ref[...],
+                      apk, aq2, apk >= 0, cap=cap, ecn_thresh=ecn_thresh),
+        o_qbuf, o_qcnt, o_enq_try, o_do_enq, o_occ, o_marked)
+
+
+@functools.partial(jax.jit, static_argnames=("site", "quanta", "cap",
+                                             "ecn_thresh", "off1", "h",
+                                             "interpret"))
+def agg_jsq_enqueue(qbuf, qhead, qcnt, alive_row, apk, aq, to_agg, asw,
+                    dead, pad_pen, seed_lo, seed_hi, t, *,
+                    site, quanta, cap, ecn_thresh, off1, h,
+                    interpret=False):
+    """Fused agg-layer JSQ pick + enqueue; see ``ref.agg_jsq_enqueue``."""
+    nq, m = qcnt.shape[0], aq.shape[0]
+    shapes = _enqueue_out_shapes(nq, cap, m)
+    outs = pl.pallas_call(
+        functools.partial(_agg_jsq_enqueue_kernel, site=site, quanta=quanta,
+                          cap=cap, ecn_thresh=ecn_thresh, off1=off1, h=h),
+        out_shape=shapes[:2] + (jax.ShapeDtypeStruct((m,), jnp.int32),)
+        + shapes[2:],
+        interpret=interpret,
+    )(qbuf, qhead, qcnt, alive_row.astype(jnp.int32), apk, aq,
+      to_agg.astype(jnp.int32), asw, dead.astype(jnp.int32), pad_pen,
+      _s1(seed_lo, jnp.uint32), _s1(seed_hi, jnp.uint32), _s1(t, jnp.int32))
+    up = _unpack_enqueue_outs(outs[:2] + outs[3:])
+    return up[:2] + (outs[2],) + up[2:]
+
+
+# ---------------------------------------------------------------------------
+# SACK scoreboard
+# ---------------------------------------------------------------------------
+
+def _sack_update_scan_kernel(prec_ref, pk_ref, deliv_ref, cum_ref, fsz_ref,
+                             pbase_ref, o_prec, o_fm, *, window):
+    prec = prec_ref[...]
+    P = prec.shape[0]
+    deliv = deliv_ref[...] != 0
+    prec2 = prec.at[jnp.where(deliv, pk_ref[...], P)].set(1, mode="drop")
+    cum = cum_ref[...]
+    fsz = fsz_ref[...]
+    offs = _iota2((1, window), 1)
+    cand = jnp.minimum(cum[:, None] + offs, fsz[:, None] - 1)
+    got = prec2[pbase_ref[...][:, None] + cand]
+    idx = _first_min_index(got, window)
+    o_prec[...] = prec2
+    o_fm[...] = jnp.take_along_axis(cand, idx[:, None], axis=1)[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def sack_update_scan(p_recv, pk, deliv, f_cum, fsize, pbase, *,
+                     window=64, interpret=False):
+    """Fused bitmap update + per-flow first-missing scan; see
+    ``ref.sack_update_scan``."""
+    F = f_cum.shape[0]
+    prec2, fm = pl.pallas_call(
+        functools.partial(_sack_update_scan_kernel, window=window),
+        out_shape=(jax.ShapeDtypeStruct(p_recv.shape, jnp.int32),
+                   jax.ShapeDtypeStruct((F,), jnp.int32)),
+        interpret=interpret,
+    )(p_recv.astype(jnp.int32), pk, deliv.astype(jnp.int32),
+      f_cum, fsize, pbase)
+    return prec2 != 0, fm
+
+
+def _sack_advance_kernel(prec_ref, cum_ref, fsz_ref, pbase_ref, o_cum, *,
+                         rounds, window):
+    prec = prec_ref[...]
+    cum = cum_ref[...]
+    fsz = fsz_ref[...]
+    pbase = pbase_ref[...]
+    offs = _iota2((1, window), 1)
+    for _ in range(rounds):
+        cand = jnp.minimum(cum[:, None] + offs, fsz[:, None] - 1)
+        got = ((prec[pbase[:, None] + cand] != 0)
+               & (cum[:, None] + offs < fsz[:, None])).astype(jnp.int32)
+        # sum(cumprod(got)) with the window product unrolled (integer
+        # arithmetic: identical to the oracle's cumprod formulation).
+        run = jnp.ones(cum.shape, jnp.int32)
+        adv = jnp.zeros(cum.shape, jnp.int32)
+        for w in range(window):
+            run = run * got[:, w]
+            adv = adv + run
+        cum = jnp.minimum(cum + adv, fsz)
+    o_cum[...] = cum
+
+
+@functools.partial(jax.jit, static_argnames=("rounds", "window",
+                                             "interpret"))
+def sack_advance(p_recv, f_cum, fsize, pbase, *, rounds=2, window=4,
+                 interpret=False):
+    """Fused cumulative-ack advance rounds; see ``ref.sack_advance``."""
+    return pl.pallas_call(
+        functools.partial(_sack_advance_kernel, rounds=rounds,
+                          window=window),
+        out_shape=jax.ShapeDtypeStruct(f_cum.shape, jnp.int32),
+        interpret=interpret,
+    )(p_recv.astype(jnp.int32), f_cum, fsize, pbase)

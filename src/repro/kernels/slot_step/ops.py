@@ -1,0 +1,94 @@
+"""Public wrappers for the slot-step kernels.
+
+``backend``:
+  * ``xla``     -- the pure-jnp oracle (``ref.py``), bitwise-identical to
+                   the inline lax engine code (default off-TPU: interpret-
+                   mode Pallas is orders of magnitude slower than XLA);
+  * ``pallas``  -- the TPU kernels (interpret=True off-TPU for validation);
+  * ``auto``    -- pallas on TPU (or under ``REPRO_PALLAS=interpret``),
+                   xla elsewhere.
+
+:func:`resolve_impl` maps the engine-level ``LoopConfig.impl`` switch
+(``lax``/``pallas``/``auto``) onto this: ``auto`` runs the kernels only
+where they win (TPU) or where CI forces them (``REPRO_PALLAS=interpret``),
+falling back to the inline lax code path otherwise.
+"""
+from __future__ import annotations
+
+from . import kernel as _kernel
+from . import ref as _ref
+from .._common import resolve_backend, use_interpret, interpret_forced, \
+    _on_tpu
+
+LOOP_IMPLS = ("lax", "pallas", "auto")
+
+
+def resolve_impl(impl: str) -> str:
+    """Resolve ``LoopConfig.impl`` to the concrete engine path
+    (``"lax"`` or ``"pallas"``)."""
+    if impl not in LOOP_IMPLS:
+        raise ValueError(f"LoopConfig.impl {impl!r}: expected one of "
+                         f"{LOOP_IMPLS}")
+    if impl == "auto":
+        return "pallas" if (_on_tpu() or interpret_forced()) else "lax"
+    return impl
+
+
+def jsq_pick(qcnt, qbase, ids, dead, pad_pen, seed_lo, seed_hi, t, *,
+             site, quanta, cap, backend="auto", block=None):
+    backend = resolve_backend(backend)
+    if backend == "xla":
+        return _ref.jsq_pick(qcnt, qbase, ids, dead, pad_pen,
+                             seed_lo, seed_hi, t,
+                             site=site, quanta=quanta, cap=cap)
+    return _kernel.jsq_pick(qcnt, qbase, ids, dead, pad_pen,
+                            seed_lo, seed_hi, t,
+                            site=site, quanta=quanta, cap=cap, block=block,
+                            interpret=use_interpret())
+
+
+def enqueue(qbuf, qhead, qcnt, alive_row, apk, aq, avalid, *,
+            cap, ecn_thresh, backend="auto"):
+    backend = resolve_backend(backend)
+    if backend == "xla":
+        return _ref.enqueue(qbuf, qhead, qcnt, alive_row, apk, aq, avalid,
+                            cap=cap, ecn_thresh=ecn_thresh)
+    return _kernel.enqueue(qbuf, qhead, qcnt, alive_row, apk, aq, avalid,
+                           cap=cap, ecn_thresh=ecn_thresh,
+                           interpret=use_interpret())
+
+
+def agg_jsq_enqueue(qbuf, qhead, qcnt, alive_row, apk, aq, to_agg, asw,
+                    dead, pad_pen, seed_lo, seed_hi, t, *,
+                    site, quanta, cap, ecn_thresh, off1, h, backend="auto"):
+    backend = resolve_backend(backend)
+    if backend == "xla":
+        return _ref.agg_jsq_enqueue(
+            qbuf, qhead, qcnt, alive_row, apk, aq, to_agg, asw, dead,
+            pad_pen, seed_lo, seed_hi, t, site=site, quanta=quanta,
+            cap=cap, ecn_thresh=ecn_thresh, off1=off1, h=h)
+    return _kernel.agg_jsq_enqueue(
+        qbuf, qhead, qcnt, alive_row, apk, aq, to_agg, asw, dead,
+        pad_pen, seed_lo, seed_hi, t, site=site, quanta=quanta,
+        cap=cap, ecn_thresh=ecn_thresh, off1=off1, h=h,
+        interpret=use_interpret())
+
+
+def sack_update_scan(p_recv, pk, deliv, f_cum, fsize, pbase, *,
+                     window=64, backend="auto"):
+    backend = resolve_backend(backend)
+    if backend == "xla":
+        return _ref.sack_update_scan(p_recv, pk, deliv, f_cum, fsize,
+                                     pbase, window=window)
+    return _kernel.sack_update_scan(p_recv, pk, deliv, f_cum, fsize, pbase,
+                                    window=window, interpret=use_interpret())
+
+
+def sack_advance(p_recv, f_cum, fsize, pbase, *, rounds=2, window=4,
+                 backend="auto"):
+    backend = resolve_backend(backend)
+    if backend == "xla":
+        return _ref.sack_advance(p_recv, f_cum, fsize, pbase,
+                                 rounds=rounds, window=window)
+    return _kernel.sack_advance(p_recv, f_cum, fsize, pbase, rounds=rounds,
+                                window=window, interpret=use_interpret())

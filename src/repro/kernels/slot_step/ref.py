@@ -1,0 +1,133 @@
+"""Pure-jnp oracles for the slot-step kernels.
+
+Each function mirrors the corresponding inline lax block of
+``repro.net.loopsim._engine`` *operation for operation* (same ops, same
+order -- f32 additions included), so `ref == inline lax` holds bitwise and
+the interpret-mode Pallas kernels in ``kernel.py`` are tested against these
+as ground truth.  All oracles are single-row; callers ``vmap`` the fused
+campaign axis over them.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import entropy as ent
+from ...net._batching import rank_by
+
+
+def jsq_score(qcnt, qbase, ids, dead, pad_pen, seed_lo, seed_hi, t, *,
+              site, quanta, cap):
+    """The (M, h) JSQ score grid: occupancy gather + counter-stream
+    tie-break noise + quantization + pad/dead penalties.
+
+    ``qcnt`` (NQ,) int32 queue occupancy; ``qbase`` (M,) int32 first-port
+    queue id per chooser; ``ids`` (M,) int32 entropy lane ids (host ids at
+    the edge, packet ids at the agg); ``dead`` (M, h) bool pre-gathered
+    failed-port mask (already gated on convergence); ``pad_pen`` (h,) f32
+    ``port_pad_penalty``.  ``quanta`` is the static quantization tuple (or
+    None for plain JSQ); ``cap`` the buffer capacity scaling it.
+    """
+    h = pad_pen.shape[0]
+    lens = qcnt[qbase[:, None] + jnp.arange(h)[None, :]]
+    nz = ent.draw_uniform(seed_lo, seed_hi, site, ids[:, None], t,
+                          lane=jnp.arange(h)[None, :])
+    if quanta is None:
+        score = lens.astype(jnp.float32) + nz * 1e-3
+    else:
+        thr = jnp.asarray(quanta, jnp.float32) * cap
+        bins = jnp.sum(lens[:, :, None] > thr[None, None, :], axis=2)
+        score = bins.astype(jnp.float32) + nz * 0.5
+    score = score + pad_pen[None, :]
+    score = score + jnp.where(dead, 1e9, 0.0)
+    return score
+
+
+def jsq_pick(qcnt, qbase, ids, dead, pad_pen, seed_lo, seed_hi, t, *,
+             site, quanta, cap):
+    """Masked-argmin port pick per chooser: (M,) int32."""
+    score = jsq_score(qcnt, qbase, ids, dead, pad_pen, seed_lo, seed_hi, t,
+                      site=site, quanta=quanta, cap=cap)
+    return jnp.argmin(score, axis=1).astype(jnp.int32)
+
+
+def enqueue(qbuf, qhead, qcnt, alive_row, apk, aq, avalid, *,
+            cap, ecn_thresh):
+    """Fused same-slot arrival enqueue: failure black-holing, same-queue
+    arrival ranking, capacity drop, ring-buffer scatter, occupancy add and
+    ECN marking -- the engine's step-8 block.
+
+    ``qbuf`` (NQ, cap) int32 ring buffers; ``qhead``/``qcnt`` (NQ,) int32;
+    ``alive_row`` (NQ,) bool (current physical epoch); ``apk``/``aq``
+    (M,) int32 arriving packet / target queue per lane; ``avalid`` (M,)
+    bool.  Returns ``(qbuf', qcnt', enq_try, do_enq, occ_after, marked)``;
+    drop counts derive outside as ``avalid & ~enq_try`` (black-holed) and
+    ``enq_try & ~do_enq`` (buffer full).
+    """
+    nq = qcnt.shape[0]
+    aqc = jnp.clip(aq, 0, nq - 1)
+    dead = ~alive_row[aqc]
+    enq_try = avalid & ~dead
+    rkq = rank_by(aq, enq_try)
+    room = qcnt[aqc] + rkq < cap
+    do_enq = enq_try & room
+    pos = (qhead[aqc] + qcnt[aqc] + rkq) % cap
+    qbuf2 = qbuf.at[jnp.where(do_enq, aq, nq),
+                    jnp.where(do_enq, pos, 0)].set(
+        jnp.where(do_enq, apk, -1), mode="drop")
+    occ_after = qcnt[aqc] + rkq + 1
+    marked = do_enq & (occ_after > ecn_thresh)
+    qcnt2 = qcnt.at[jnp.where(do_enq, aq, nq)].add(1, mode="drop")
+    return qbuf2, qcnt2, enq_try, do_enq, occ_after, marked
+
+
+def agg_jsq_enqueue(qbuf, qhead, qcnt, alive_row, apk, aq, to_agg, asw,
+                    dead, pad_pen, seed_lo, seed_hi, t, *,
+                    site, quanta, cap, ecn_thresh, off1, h):
+    """Fused agg-layer JSQ pick + enqueue (engine steps 7(jsq) + 8): score
+    the agg uplink queues per arriving packet, argmin, rewrite the target
+    queue of agg-bound lanes, then run the full enqueue update -- one pass
+    over the occupancy state.  Returns ``(qbuf', qcnt', c_fin, enq_try,
+    do_enq, occ_after, marked)``.
+    """
+    apkc = jnp.maximum(apk, 0)
+    c_fin = jsq_pick(qcnt, off1 + asw * h, apkc, dead, pad_pen,
+                     seed_lo, seed_hi, t, site=site, quanta=quanta, cap=cap)
+    aq2 = jnp.where(to_agg, off1 + asw * h + c_fin, aq)
+    out = enqueue(qbuf, qhead, qcnt, alive_row, apk, aq2, avalid=apk >= 0,
+                  cap=cap, ecn_thresh=ecn_thresh)
+    return out[:2] + (c_fin,) + out[2:]
+
+
+def sack_update_scan(p_recv, pk, deliv, f_cum, fsize, pbase, *, window=64):
+    """Fused receiver-bitmap update + per-flow first-missing-sequence scan
+    (the SACK retransmit candidate): engine step 3's ``p_recv`` scatter and
+    step 5's 64-wide window argmin, evaluated per *flow* (the inline code
+    evaluates it per send lane; gathering ``fm[flow]`` afterwards is
+    bitwise-identical since every lane's window is its flow's window).
+
+    ``p_recv`` (P,) bool; ``pk``/``deliv`` (M,) this slot's popped packets
+    and delivery mask; ``f_cum``/``fsize``/``pbase`` (F,) int32.  Returns
+    ``(p_recv', first_missing (F,) int32)``.
+    """
+    P = p_recv.shape[0]
+    F = f_cum.shape[0]
+    p_recv2 = p_recv.at[jnp.where(deliv, pk, P)].set(True, mode="drop")
+    offs = jnp.arange(window)[None, :]
+    cand = jnp.minimum(f_cum[:, None] + offs, fsize[:, None] - 1)
+    got = p_recv2[pbase[:, None] + cand]
+    fm = cand[jnp.arange(F), jnp.argmin(got, axis=1)]
+    return p_recv2, fm
+
+
+def sack_advance(p_recv, f_cum, fsize, pbase, *, rounds=2, window=4):
+    """Cumulative-ack advance: ``rounds`` unrolled passes of the engine's
+    step-9 window scan (each advances ``f_cum`` past up to ``window``
+    contiguously received sequences) fused into one call."""
+    for _ in range(rounds):
+        offs = jnp.arange(window)[None, :]
+        cand = jnp.minimum(f_cum[:, None] + offs, fsize[:, None] - 1)
+        got = p_recv[pbase[:, None] + cand] & (
+            f_cum[:, None] + offs < fsize[:, None])
+        adv = jnp.sum(jnp.cumprod(got, axis=1), axis=1).astype(jnp.int32)
+        f_cum = jnp.minimum(f_cum + adv, fsize)
+    return f_cum

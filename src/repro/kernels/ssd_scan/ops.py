@@ -5,20 +5,17 @@
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from . import kernel as _kernel
 from . import ref as _ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from .._common import resolve_backend, use_interpret
 
 
 def ssd(x, dt, A, B_mat, C, *, chunk: int = 64, backend: str = "auto"):
-    if backend == "auto":
-        backend = "pallas" if _on_tpu() else "chunked"
+    backend = resolve_backend(
+        backend, fallback="chunked",
+        choices=("auto", "pallas", "chunked", "scan"))
     L = x.shape[1]
     pad = (-L) % chunk
     if pad and backend in ("pallas", "chunked"):
@@ -27,11 +24,9 @@ def ssd(x, dt, A, B_mat, C, *, chunk: int = 64, backend: str = "auto"):
         x, dt, B_mat, C = zp(x), zp(dt), zp(B_mat), zp(C)
     if backend == "pallas":
         y = _kernel.ssd_scan(x, dt, A, B_mat, C, chunk=chunk,
-                             interpret=not _on_tpu())
+                             interpret=use_interpret())
     elif backend == "chunked":
         y = _ref.ssd_chunked(x, dt, A, B_mat, C, chunk=chunk)
-    elif backend == "scan":
-        y = _ref.ssd_scan(x, dt, A, B_mat, C)
     else:
-        raise ValueError(backend)
+        y = _ref.ssd_scan(x, dt, A, B_mat, C)
     return y[:, :L]

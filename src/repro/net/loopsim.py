@@ -136,6 +136,11 @@ class LoopConfig:
     sw_ai: float = 1.0
     sw_beta: float = 0.8
     sw_max_cwnd: float = 384.0
+    # Engine body implementation: 'lax' (inline while_loop body), 'pallas'
+    # (fused slot-step kernels, repro.kernels.slot_step; interpret-mode
+    # off-TPU) or 'auto' (pallas where it wins: on TPU, or under
+    # REPRO_PALLAS=interpret).  Bitwise-identical on integer outputs.
+    impl: str = "lax"
 
 
 def static_config(cfg: LoopConfig) -> LoopConfig:
@@ -145,8 +150,9 @@ def static_config(cfg: LoopConfig) -> LoopConfig:
     engine (so an rho_max axis or differing slot budgets share one
     executable); every other field is baked into the compiled pipeline --
     either through shapes (``buffer_pkts``, ``prop_slots``, ``ack_delay``)
-    or through Python branches (``cca``, ``loss``).  Two points whose
-    ``static_config`` are equal can fuse into one megabatch dispatch.
+    or through Python branches (``cca``, ``loss``, ``impl``).  Two points
+    whose ``static_config`` are equal can fuse into one megabatch dispatch
+    (mixed-``impl`` grids therefore plan one dispatch per impl).
     """
     return dataclasses.replace(cfg, rho=0.0, max_slots=0)
 
@@ -214,6 +220,9 @@ def _prepare(tree: FatTree, wl: Workload, scheme: LBScheme,
     static pair lowers to the identical machinery with one epoch starting
     at slot 0 and reacting at ``g_converge``.
     """
+    if cfg.impl not in ("lax", "pallas", "auto"):
+        raise ValueError(f"LoopConfig.impl {cfg.impl!r}: expected "
+                         f"'lax', 'pallas' or 'auto'")
     h = tree.half
     n = tree.n_hosts
     P = wl.n_packets
@@ -844,7 +853,16 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
     DELAY = max(cfg.prop_slots, 1) + 1
     MOVE = 4 * mid + n
     ADELAY = cfg.ack_delay + 1
-    ecn_thresh = jnp.int32(max(1, int(cfg.ecn_frac * CAP)))
+    ecn_t = max(1, int(cfg.ecn_frac * CAP))
+    ecn_thresh = jnp.int32(ecn_t)
+    # LoopConfig.impl: trace the inline lax body or the fused Pallas
+    # slot-step kernels (repro.kernels.slot_step; 'auto' resolves to pallas
+    # on TPU or under REPRO_PALLAS=interpret, lax elsewhere).  The kernels
+    # are bitwise-identical to the inline code on integer outputs.
+    use_pallas = False
+    if cfg.impl != "lax":
+        from ..kernels.slot_step import ops as _slot
+        use_pallas = _slot.resolve_impl(cfg.impl) == "pallas"
     OFF = (0, mid, 2 * mid, 3 * mid, 4 * mid)
     PBASE = pkt_base[:F]
     # JSQ guard for tree-size padding: +1e9 on port columns >= h_log (the
@@ -956,8 +974,19 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
         first_del = deliv & ~st["p_recv"][pkc]
         st["p_deliv"] = st["p_deliv"].at[jnp.where(first_del, pk, P)].set(
             dt, mode="drop")
-        st["p_recv"] = st["p_recv"].at[jnp.where(deliv, pk, P)].set(
-            True, mode="drop")
+        if use_pallas and cfg.loss == "sack":
+            # Fused SACK scoreboard kernel: bitmap scatter + per-flow
+            # first-missing window scan in one launch.  Legal here because
+            # step 5's retransmit candidate reads the post-update bitmap
+            # and nothing between writes ``p_recv`` or ``f_cum``; the
+            # per-flow scan gathered at ``[sfv]`` below is bitwise-equal
+            # to the inline per-lane scan.
+            st["p_recv"], fm_flow = _slot.sack_update_scan(
+                st["p_recv"], pk, deliv, st["f_cum"], fsize, PBASE,
+                backend="pallas")
+        else:
+            st["p_recv"] = st["p_recv"].at[jnp.where(deliv, pk, P)].set(
+                True, mode="drop")
         # Erasure coding is rateless: every delivered symbol counts toward
         # decoding; SACK needs unique packets.
         counts_delivery = deliv if cfg.loss == "erasure" else first_del
@@ -1017,11 +1046,15 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
         sfv = jnp.maximum(sf, 0)
         seq_fresh = st["f_next"][sfv]
         if cfg.loss == "sack":
-            base = st["f_cum"][sfv]
-            offs = jnp.arange(64)[None, :]
-            cand = jnp.minimum(base[:, None] + offs, fsize[sfv][:, None] - 1)
-            got = st["p_recv"][PBASE[sfv][:, None] + cand]
-            first_missing = cand[jnp.arange(n), jnp.argmin(got, axis=1)]
+            if use_pallas:
+                first_missing = fm_flow[sfv]
+            else:
+                base = st["f_cum"][sfv]
+                offs = jnp.arange(64)[None, :]
+                cand = jnp.minimum(base[:, None] + offs,
+                                   fsize[sfv][:, None] - 1)
+                got = st["p_recv"][PBASE[sfv][:, None] + cand]
+                first_missing = cand[jnp.arange(n), jnp.argmin(got, axis=1)]
             is_rtx = need_rtx[sfv] & do_send
             seq = jnp.where(is_rtx, first_missing,
                             jnp.minimum(seq_fresh, fsize[sfv] - 1))
@@ -1123,24 +1156,34 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
         else:  # jsq / jsq_quant at edge
             sw = (fp1[sfv] * h + fe1[sfv]).astype(INT)
             de = (fp2[sfv] * h + fe2[sfv]).astype(INT)
-            qbase = OFF[0] + sw * h
-            lens = st["qcnt"][qbase[:, None] + jnp.arange(h)[None, :]]
-            # Tie-break noise from the counter stream keyed on (seed, host
-            # id, slot, port lane): shape-independent, so the same host sees
-            # the same noise at any padding/batch position.
-            nz = ent.draw_uniform(seed_lo, seed_hi, ent.SITE_EDGE_JSQ,
-                                  jnp.arange(n)[:, None], t,
-                                  lane=jnp.arange(h)[None, :])
-            if s.quanta is None:
-                score = lens.astype(jnp.float32) + nz * 1e-3
+            if use_pallas:
+                # Fused occupancy-gather + in-kernel tie-break noise +
+                # masked-argmin kernel (one VMEM-resident pass).
+                a_new = _slot.jsq_pick(
+                    st["qcnt"], OFF[0] + sw * h, jnp.arange(n, dtype=INT),
+                    converged & e_dead[ric, sw, de], pad_pen,
+                    seed_lo, seed_hi, t, site=ent.SITE_EDGE_JSQ,
+                    quanta=s.quanta, cap=CAP, backend="pallas")
             else:
-                thr = jnp.asarray(s.quanta, jnp.float32) * CAP
-                bins = jnp.sum(lens[:, :, None] > thr[None, None, :], axis=2)
-                score = bins.astype(jnp.float32) + nz * 0.5
-            score = score + pad_pen[None, :]
-            score = score + jnp.where(converged & e_dead[ric, sw, de],
-                                      1e9, 0.0)
-            a_new = jnp.argmin(score, axis=1).astype(INT)
+                qbase = OFF[0] + sw * h
+                lens = st["qcnt"][qbase[:, None] + jnp.arange(h)[None, :]]
+                # Tie-break noise from the counter stream keyed on (seed,
+                # host id, slot, port lane): shape-independent, so the same
+                # host sees the same noise at any padding/batch position.
+                nz = ent.draw_uniform(seed_lo, seed_hi, ent.SITE_EDGE_JSQ,
+                                      jnp.arange(n)[:, None], t,
+                                      lane=jnp.arange(h)[None, :])
+                if s.quanta is None:
+                    score = lens.astype(jnp.float32) + nz * 1e-3
+                else:
+                    thr = jnp.asarray(s.quanta, jnp.float32) * CAP
+                    bins = jnp.sum(lens[:, :, None] > thr[None, None, :],
+                                   axis=2)
+                    score = bins.astype(jnp.float32) + nz * 0.5
+                score = score + pad_pen[None, :]
+                score = score + jnp.where(converged & e_dead[ric, sw, de],
+                                          1e9, 0.0)
+                a_new = jnp.argmin(score, axis=1).astype(INT)
             c_new = jnp.zeros((n,), INT)
 
         st["p_a"] = st["p_a"].at[jnp.where(do_send, pid, P)].set(
@@ -1203,7 +1246,7 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
                 c_fin = jnp.where(converged, live, naive)
                 st["ptr_a"] = st["ptr_a"].at[
                     jnp.where(to_agg, asw, s.n_aggs)].add(1, mode="drop")
-        else:  # jsq at agg
+        elif not use_pallas:  # jsq at agg (inline; pallas fuses it below)
             qbase = OFF[1] + asw * h
             lens = st["qcnt"][qbase[:, None] + jnp.arange(h)[None, :]]
             # Noise keyed on (seed, arriving packet id, slot, port lane).
@@ -1220,29 +1263,55 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
             score = score + jnp.where(converged & a_dead[ric, asw, fp2[af]],
                                       1e9, 0.0)
             c_fin = jnp.argmin(score, axis=1).astype(INT)
-        st["p_c"] = st["p_c"].at[jnp.where(to_agg, apk, P)].set(
-            c_fin, mode="drop")
-        aq = jnp.where(to_agg, OFF[1] + asw * h + c_fin, aq)
+        fuse_agg = use_pallas and s.agg_mode not in ("pre", "rand", "rr",
+                                                     "rr_reset", "ofan")
+        if fuse_agg:
+            # ---- 7+8 fused: agg JSQ pick + enqueue in one kernel pass ----
+            (st["qbuf"], qcnt2, c_fin, enq_try, do_enq, occ_after,
+             marked) = _slot.agg_jsq_enqueue(
+                st["qbuf"], st["qhead"], st["qcnt"], alive[pe], apk, aq,
+                to_agg, asw, converged & a_dead[ric, asw, fp2[af]], pad_pen,
+                seed_lo, seed_hi, t, site=ent.SITE_AGG_JSQ, quanta=s.quanta,
+                cap=CAP, ecn_thresh=ecn_t, off1=OFF[1], h=h,
+                backend="pallas")
+            st["p_c"] = st["p_c"].at[jnp.where(to_agg, apk, P)].set(
+                c_fin, mode="drop")
+        else:
+            st["p_c"] = st["p_c"].at[jnp.where(to_agg, apk, P)].set(
+                c_fin, mode="drop")
+            aq = jnp.where(to_agg, OFF[1] + asw * h + c_fin, aq)
 
         # ---- 8. enqueue (drops, ECN, failure black-holing) -------------------
-        aqc = jnp.clip(aq, 0, NQ - 1)
-        dead = ~alive[pe, aqc]
-        enq_try = avalid & ~dead
-        st["drops"] = st["drops"] + (avalid & dead).sum()
-        rkq = rank_by(aq, enq_try)
-        room = st["qcnt"][aqc] + rkq < CAP
-        do_enq = enq_try & room
-        st["drops"] = st["drops"] + (enq_try & ~room).sum()
-        pos = (st["qhead"][aqc] + st["qcnt"][aqc] + rkq) % CAP
-        st["qbuf"] = st["qbuf"].at[jnp.where(do_enq, aq, NQ),
-                                   jnp.where(do_enq, pos, 0)].set(
-            jnp.where(do_enq, apk, -1), mode="drop")
-        occ_after = st["qcnt"][aqc] + rkq + 1
-        marked = do_enq & (occ_after > ecn_thresh)
-        st["p_ecn"] = st["p_ecn"].at[jnp.where(marked, apk, P)].set(
-            True, mode="drop")
-        st["qcnt"] = st["qcnt"].at[jnp.where(do_enq, aq, NQ)].add(
-            1, mode="drop")
+        if use_pallas:
+            if not fuse_agg:
+                (st["qbuf"], qcnt2, enq_try, do_enq, occ_after,
+                 marked) = _slot.enqueue(
+                    st["qbuf"], st["qhead"], st["qcnt"], alive[pe], apk, aq,
+                    avalid, cap=CAP, ecn_thresh=ecn_t, backend="pallas")
+            st["drops"] = st["drops"] + (avalid & ~enq_try).sum()
+            st["drops"] = st["drops"] + (enq_try & ~do_enq).sum()
+            st["p_ecn"] = st["p_ecn"].at[jnp.where(marked, apk, P)].set(
+                True, mode="drop")
+            st["qcnt"] = qcnt2
+        else:
+            aqc = jnp.clip(aq, 0, NQ - 1)
+            dead = ~alive[pe, aqc]
+            enq_try = avalid & ~dead
+            st["drops"] = st["drops"] + (avalid & dead).sum()
+            rkq = rank_by(aq, enq_try)
+            room = st["qcnt"][aqc] + rkq < CAP
+            do_enq = enq_try & room
+            st["drops"] = st["drops"] + (enq_try & ~room).sum()
+            pos = (st["qhead"][aqc] + st["qcnt"][aqc] + rkq) % CAP
+            st["qbuf"] = st["qbuf"].at[jnp.where(do_enq, aq, NQ),
+                                       jnp.where(do_enq, pos, 0)].set(
+                jnp.where(do_enq, apk, -1), mode="drop")
+            occ_after = st["qcnt"][aqc] + rkq + 1
+            marked = do_enq & (occ_after > ecn_thresh)
+            st["p_ecn"] = st["p_ecn"].at[jnp.where(marked, apk, P)].set(
+                True, mode="drop")
+            st["qcnt"] = st["qcnt"].at[jnp.where(do_enq, aq, NQ)].add(
+                1, mode="drop")
         st["max_q"] = jnp.maximum(st["max_q"], st["qcnt"].max())
         if s.probe[1]:
             # Same reduction point as max_q, split per fat-tree layer and
@@ -1277,14 +1346,21 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
         st["f_hi"] = st["f_hi"].at[jnp.where(aok, akf, F)].max(
             jnp.where(aok, aseq, -1), mode="drop")
         if cfg.loss == "sack":
-            for _ in range(2):
-                cum = st["f_cum"]
-                offs = jnp.arange(4)[None, :]
-                cand = jnp.minimum(cum[:, None] + offs, fsize[:, None] - 1)
-                got = st["p_recv"][PBASE[:, None] + cand] & (
-                    cum[:, None] + offs < fsize[:, None])
-                adv = jnp.sum(jnp.cumprod(got, axis=1), axis=1).astype(INT)
-                st["f_cum"] = jnp.minimum(cum + adv, fsize)
+            if use_pallas:
+                st["f_cum"] = _slot.sack_advance(
+                    st["p_recv"], st["f_cum"], fsize, PBASE,
+                    backend="pallas")
+            else:
+                for _ in range(2):
+                    cum = st["f_cum"]
+                    offs = jnp.arange(4)[None, :]
+                    cand = jnp.minimum(cum[:, None] + offs,
+                                       fsize[:, None] - 1)
+                    got = st["p_recv"][PBASE[:, None] + cand] & (
+                        cum[:, None] + offs < fsize[:, None])
+                    adv = jnp.sum(jnp.cumprod(got, axis=1),
+                                  axis=1).astype(INT)
+                    st["f_cum"] = jnp.minimum(cum + adv, fsize)
         mk = st["p_ecn"][akc]
         if s.adaptive_host and not s.plb:      # REPS recycle
             lab_back = st["p_a"][akc] * h_log + st["p_c"][akc]

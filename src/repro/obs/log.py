@@ -56,6 +56,8 @@ def dispatch_line(span: Dict, total: int) -> str:
             ks,
             f"x{span['n_points']}",
             f"fill={span.get('pkt_fill', 0.0):.2f}"]
+    if "impl" in span:
+        bits.append(f"impl={span['impl']}")
     if "slots_run" in span:
         bits.append(f"slots={span['slots_run']}")
     if "wall_s" in span:

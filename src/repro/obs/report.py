@@ -3,10 +3,13 @@
 Backs ``python -m repro.sweep report``: given the dispatch spans of one
 campaign run (``trace.jsonl``) and optionally its ``results.jsonl``, emit
 
-* the dispatch timeline (engine, fused schemes, padding fill, wall split);
+* the dispatch timeline (engine, fused schemes, padding fill, wall split,
+  and -- for loop dispatches -- the resolved slot-step ``impl``);
 * per-shape padding-waste accounting -- the measured costs the ROADMAP's
   cost-modeled planner consumes;
 * loop-engine slot-budget utilization;
+* with ``--bench BENCH_sweep.json``: every ``speedup_vs_*`` sample labeled
+  honestly -- ratios below 1.0 render as slowdowns, not small speedups;
 * a robustness section (retries, terminal dispatch errors, degradation-
   ladder splits, resume checkpoints) whenever the trace carries any of the
   runner's retry/error/degrade/resume spans -- the view that makes a
@@ -42,8 +45,36 @@ def _fmt_s(x) -> str:
     return f"{x:8.2f}s" if isinstance(x, (int, float)) else " " * 9
 
 
+def ratio_label(ratio: float) -> str:
+    """Honest rendering of a wall-time ratio: values below 1.0 are
+    *slowdowns*, not small speedups (a ``speedup_vs_warm`` of 0.49 means
+    the fused path ran at half warm-serial throughput)."""
+    if ratio >= 1.0:
+        return f"{ratio:.2f}x speedup"
+    return (f"{ratio:.2f}x -- SLOWDOWN "
+            f"({1.0 / max(ratio, 1e-9):.1f}x slower)")
+
+
+def _bench_ratio_lines(bench: Dict) -> List[str]:
+    """The speedup/slowdown summary of a ``BENCH_sweep.json`` dict: every
+    ``speedup_vs_*`` sample in the top level and one section deep, labeled
+    via :func:`ratio_label`."""
+    lines: List[str] = []
+    sections = [("", bench)] + [(f"{k}.", v) for k, v in bench.items()
+                                if isinstance(v, dict)]
+    for prefix, sec in sections:
+        impl = sec.get("impl") if isinstance(sec, dict) else None
+        for key, val in sec.items():
+            if not key.startswith("speedup_vs_"):
+                continue
+            tag = f"  [impl={impl}]" if impl else ""
+            lines.append(f"  {prefix + key:<32s} {ratio_label(float(val))}"
+                         f"{tag}")
+    return lines
+
+
 def render_report(spans: List[Dict], records: Optional[List[Dict]] = None,
-                  top: int = 3) -> str:
+                  top: int = 3, bench: Optional[Dict] = None) -> str:
     """The ``python -m repro.sweep report`` text body."""
     plan = next((s for s in spans if s.get("kind") == "plan"), None)
     disp = [s for s in spans if s.get("kind") == "dispatch"]
@@ -73,12 +104,13 @@ def render_report(spans: List[Dict], records: Optional[List[Dict]] = None,
             wall = _fmt_s(s.get("wall_s"))
             comp = _fmt_s(s.get("compile_s"))
             cached = "  [cached]" if s.get("cache") == "hit" else ""
+            impl = f" impl={s['impl']}" if "impl" in s else ""
             lines.append(
                 f"  {s['dispatch']:>2d} {s['engine']:>4s} "
                 f"{s['n_points']:>5d}  {s.get('row_fill', 1.0):.2f}  "
                 f"{s.get('pkt_fill', 0.0):8.2f} {wall} {comp}  "
                 f"{','.join(s.get('schemes', []))}"
-                f" k_pad={s.get('k_pad', '?')}{cached}")
+                f" k_pad={s.get('k_pad', '?')}{impl}{cached}")
 
     # ---- padding waste per shape ------------------------------------------
     if disp:
@@ -98,6 +130,15 @@ def render_report(spans: List[Dict], records: Optional[List[Dict]] = None,
                 f"slot budget (dispatch #{s['dispatch']}): ran "
                 f"{s['slots_run']}/{s['slot_budget']} slots, per-row fill "
                 f"{s.get('slot_fill', 0):.1%}")
+
+    # ---- benchmark ratios (BENCH_sweep.json, --bench) ---------------------
+    if bench:
+        ratio_lines = _bench_ratio_lines(bench)
+        if ratio_lines:
+            lines.append("")
+            lines.append("benchmark wall-time ratios (fused vs serial "
+                         "baselines; below 1.0 the fused path is SLOWER):")
+            lines.extend(ratio_lines)
 
     # ---- dispatch errors / retries / degraded -----------------------------
     retries = [s for s in spans if s.get("kind") == "retry"]

@@ -14,7 +14,10 @@ Span kinds (the ``kind`` field):
 * ``"dispatch"`` -- one per fused megabatch: member population, padding
   ratios (packet rows, batch-row fill, loop slot budget), shard/device
   fill, wall seconds, optional compile-vs-execute split, compile-cache
-  hit/miss.
+  hit/miss.  Loop-engine dispatches additionally carry ``"impl"`` -- the
+  *resolved* slot-step implementation (``"lax"`` or ``"pallas"``; an
+  ``impl="auto"`` campaign records whichever the host selected), so perf
+  trajectories can tell kernel runs from inline-lax runs.
 * ``"campaign"`` -- one per campaign, after execution: totals, including
   the trace's own cumulative emit overhead (``emit_s``), which is how the
   benchmark measures telemetry cost.

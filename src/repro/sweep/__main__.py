@@ -151,7 +151,11 @@ def cmd_report(args) -> int:
     spans = load_trace(args.trace)
     records = (ResultStore.load(args.results).records
                if args.results else None)
-    text = render_report(spans, records, top=args.top)
+    bench = None
+    if args.bench:
+        with open(args.bench) as f:
+            bench = json.load(f)
+    text = render_report(spans, records, top=args.top, bench=bench)
     print(text)
     if args.out:
         p = pathlib.Path(args.out)
@@ -230,6 +234,9 @@ def main(argv=None) -> int:
                                          "campaign ran with probes)")
     p_rep.add_argument("--top", type=int, default=3,
                        help="queue trajectories to show (default 3)")
+    p_rep.add_argument("--bench", help="BENCH_sweep.json: render its "
+                                       "speedup_vs_* samples (ratios below "
+                                       "1.0 are labeled as slowdowns)")
     p_rep.add_argument("--out", help="also write the report to this file")
     p_rep.set_defaults(fn=cmd_report)
 

@@ -231,6 +231,8 @@ def _dispatch_span(idx: int, mega: MegaBatch, campaign: Campaign,
     }
     if mega.engine == "loop":
         span["slot_budget"] = int(campaign.max_slots)
+        from ..kernels.slot_step import ops as _slot
+        span["impl"] = _slot.resolve_impl(campaign.loop_config().impl)
     return span
 
 

@@ -274,3 +274,62 @@ def test_cross_k_sharded_megabatch_bitwise(two_devices):
             items_l, loopsim.simulate_megabatch(items_l, n_shards="auto")):
         for seed, res in zip(seeds, results):
             _assert_loop_equal(res, loopsim.simulate(t, w, s_, c, seed=seed))
+
+
+# ---------------------------------------------------------------------------
+# 4. Pallas slot-step impl: e2e campaign parity vs the inline lax engine.
+# ---------------------------------------------------------------------------
+
+def test_pallas_impl_e2e_campaign_bitwise(two_devices):
+    """``LoopConfig.impl="pallas"`` end to end: a mixed-k fused loop
+    campaign (JSQ + quantized-JSQ schemes, with and without failures, run
+    through the planner/runner and shard_map-sharded over two devices) is
+    bitwise-identical to the same campaign under ``impl="lax"`` -- integer
+    outputs exactly, and the float outputs (avg_queue, mean_cwnd) exactly
+    too, since both paths preserve f32 reduction order (the documented
+    bound is therefore 0 ULP, asserted via strict equality).  The two impls
+    carry distinct planner compile keys, each planning
+    ``n_dispatches == n_shapes``."""
+    def _campaign(impl):
+        return sweep.Campaign(
+            name=f"diff_impl_{impl}", schemes=("jsq", "switch_pkt_ar"),
+            loads=(sweep.WorkloadSpec("permutation", 4, inter_pod_only=True,
+                                      rng_seed=3),),
+            trees=_TREES, seeds=(0,),
+            failures=(None, sweep.FailureSpec(0.05, rng_seed=11)),
+            g_converge=(300,),
+            engine="loop", max_slots=4000,
+            loop_opts=(("rho", "auto"), ("rto_slots", 300),
+                       ("impl", impl)))
+
+    c_lax, c_pal = _campaign("lax"), _campaign("pallas")
+    p_lax, p_pal = sweep.plan(c_lax), sweep.plan(c_pal)
+    # Mixed-impl grids stay fused per impl: each impl's grid plans one
+    # dispatch per compiled shape, under *distinct* compile keys.
+    assert p_lax.n_dispatches == p_lax.n_shapes == 2
+    assert p_pal.n_dispatches == p_pal.n_shapes == 2
+    assert ({m.key for m in p_lax.megabatches}
+            != {m.key for m in p_pal.megabatches})
+
+    _, full_lax = sweep.run_campaign(c_lax, keep_full=True)
+    _, full_pal = sweep.run_campaign(c_pal, keep_full=True)
+    assert len(full_pal) == c_pal.n_points
+    ref_by_key = {(pt.scheme, pt.k, pt.failure.label() if pt.failure
+                   else None, pt.seed): res
+                  for pt, res in full_lax.items()}
+    for pt, res in full_pal.items():
+        ref = ref_by_key[(pt.scheme, pt.k, pt.failure.label() if pt.failure
+                          else None, pt.seed)]
+        _assert_loop_equal(res, ref)
+
+
+def test_impl_auto_resolves_to_lax_off_tpu(monkeypatch):
+    """``impl="auto"`` keeps the engine on the inline lax path off-TPU
+    unless CI forces interpret kernels via REPRO_PALLAS=interpret."""
+    from repro.kernels.slot_step import ops as slot_ops
+    if slot_ops._on_tpu():
+        pytest.skip("auto resolves to pallas on TPU by design")
+    monkeypatch.delenv("REPRO_PALLAS", raising=False)
+    assert slot_ops.resolve_impl("auto") == "lax"
+    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    assert slot_ops.resolve_impl("auto") == "pallas"

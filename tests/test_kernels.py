@@ -198,3 +198,173 @@ def test_ssd_decay_property(seed):
     expect = np.einsum("blgn,blgn,blhp->blhp",
                        np.asarray(C), np.asarray(Bm), np.asarray(x))
     np.testing.assert_allclose(y, expect, atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# slot-step kernels (JSQ port-rank + enqueue, SACK scoreboard scans)
+# ---------------------------------------------------------------------------
+
+import functools  # noqa: E402
+
+from repro.core import entropy as ent  # noqa: E402
+from repro.kernels.slot_step import (  # noqa: E402
+    kernel as qk, ref as qr, ops as qo)
+
+_Q = dict(m=24, h=8, nq=48, cap=8, f=12, per_flow=16, off1=8, n_aggs=4)
+
+
+def _slot_operands(seed, m=_Q["m"], h=_Q["h"], nq=_Q["nq"], cap=_Q["cap"],
+                   f=_Q["f"], per_flow=_Q["per_flow"]):
+    """Random engine-shaped operands for one slot step."""
+    r = np.random.default_rng(seed)
+    p = f * per_flow
+    o = dict(
+        qcnt=jnp.asarray(r.integers(0, cap, nq), jnp.int32),
+        qbuf=jnp.asarray(r.integers(-1, p, (nq, cap)), jnp.int32),
+        qhead=jnp.asarray(r.integers(0, cap, nq), jnp.int32),
+        qbase=jnp.asarray(r.integers(0, nq - h, m), jnp.int32),
+        ids=jnp.asarray(r.integers(0, p, m), jnp.int32),
+        dead=jnp.asarray(r.random((m, h)) < 0.2),
+        pad_pen=jnp.where(jnp.arange(h) < h - 2, 0.0,
+                          1e9).astype(jnp.float32),
+        alive=jnp.asarray(r.random(nq) < 0.9),
+        apk=jnp.asarray(np.where(r.random(m) < 0.8,
+                                 r.integers(0, p, m), -1), jnp.int32),
+        aq=jnp.asarray(r.integers(0, nq, m), jnp.int32),
+        asw=jnp.asarray(r.integers(0, _Q["n_aggs"], m), jnp.int32),
+        p_recv=jnp.asarray(r.random(p) < 0.5),
+        pk=jnp.asarray(r.integers(0, p, m), jnp.int32),
+        deliv=jnp.asarray(r.random(m) < 0.5),
+        f_cum=jnp.asarray(r.integers(0, per_flow, f), jnp.int32),
+        fsize=jnp.full((f,), per_flow, jnp.int32),
+        pbase=jnp.arange(f, dtype=jnp.int32) * per_flow,
+        seed_lo=jnp.uint32(r.integers(0, 2**32)),
+        seed_hi=jnp.uint32(r.integers(0, 2**32)),
+        t=jnp.int32(r.integers(0, 4000)),
+    )
+    o["avalid"] = o["apk"] >= 0
+    o["to_agg"] = o["avalid"] & (r.random(m) < 0.5)
+    # aq of agg-bound lanes is rewritten by the pick; keep others in range
+    return o
+
+
+def _jsq_args(o):
+    return (o["qcnt"], o["qbase"], o["ids"], o["dead"], o["pad_pen"],
+            o["seed_lo"], o["seed_hi"], o["t"])
+
+
+@pytest.mark.parametrize("quanta", [None, (0.05, 0.10, 0.20)])
+@pytest.mark.parametrize("block", [None, 7, 16])
+def test_slot_jsq_pick_matches_ref(quanta, block):
+    """Interpret-mode JSQ pick is bitwise the oracle, including tile tails
+    that don't divide the chooser count (block=7 over 24 lanes pads)."""
+    o = _slot_operands(1)
+    kw = dict(site=ent.SITE_EDGE_JSQ, quanta=quanta, cap=_Q["cap"])
+    got = qk.jsq_pick(*_jsq_args(o), block=block, interpret=True, **kw)
+    want = qr.jsq_pick(*_jsq_args(o), **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_slot_jsq_padded_ports_never_picked():
+    """port_pad_penalty masking: lanes past the real port count carry a 1e9
+    penalty, so no pick may land there (unless every port is padded)."""
+    o = _slot_operands(2)
+    o["dead"] = jnp.zeros_like(o["dead"])     # only the pad penalty acts
+    kw = dict(site=ent.SITE_EDGE_JSQ, quanta=None, cap=_Q["cap"])
+    for backend in ("xla", "pallas"):
+        pick = qo.jsq_pick(*_jsq_args(o), backend=backend, **kw)
+        assert (np.asarray(pick) < _Q["h"] - 2).all(), backend
+
+
+def test_slot_enqueue_matches_ref():
+    o = _slot_operands(3)
+    kw = dict(cap=_Q["cap"], ecn_thresh=5)
+    got = qk.enqueue(o["qbuf"], o["qhead"], o["qcnt"], o["alive"],
+                     o["apk"], o["aq"], o["avalid"], interpret=True, **kw)
+    want = qr.enqueue(o["qbuf"], o["qhead"], o["qcnt"], o["alive"],
+                      o["apk"], o["aq"], o["avalid"], **kw)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@pytest.mark.parametrize("quanta", [None, (0.05, 0.10, 0.20)])
+def test_slot_agg_jsq_enqueue_matches_ref(quanta):
+    o = _slot_operands(4)
+    kw = dict(site=ent.SITE_AGG_JSQ, quanta=quanta, cap=_Q["cap"],
+              ecn_thresh=5, off1=_Q["off1"], h=_Q["h"])
+    args = (o["qbuf"], o["qhead"], o["qcnt"], o["alive"], o["apk"],
+            o["aq"], o["to_agg"], o["asw"], o["dead"], o["pad_pen"],
+            o["seed_lo"], o["seed_hi"], o["t"])
+    got = qk.agg_jsq_enqueue(*args, interpret=True, **kw)
+    want = qr.agg_jsq_enqueue(*args, **kw)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_slot_sack_scans_match_ref():
+    o = _slot_operands(5)
+    got = qk.sack_update_scan(o["p_recv"], o["pk"], o["deliv"], o["f_cum"],
+                              o["fsize"], o["pbase"], interpret=True)
+    want = qr.sack_update_scan(o["p_recv"], o["pk"], o["deliv"], o["f_cum"],
+                               o["fsize"], o["pbase"])
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    ga = qk.sack_advance(o["p_recv"], o["f_cum"], o["fsize"], o["pbase"],
+                         interpret=True)
+    wa = qr.sack_advance(o["p_recv"], o["f_cum"], o["fsize"], o["pbase"])
+    np.testing.assert_array_equal(np.asarray(ga), np.asarray(wa))
+
+
+def test_slot_kernels_campaign_batch_dim():
+    """The fused campaign axis rides vmap's leading batch dim (>= 2 rows):
+    batched kernel outputs equal the per-row oracle row-for-row."""
+    rows = [_slot_operands(10 + i) for i in range(3)]
+    stack = {k: jnp.stack([o[k] for o in rows]) for k in rows[0]}
+    kw = dict(site=ent.SITE_EDGE_JSQ, quanta=None, cap=_Q["cap"])
+    k_fn = jax.vmap(functools.partial(qk.jsq_pick, interpret=True, **kw))
+    picks = k_fn(stack["qcnt"], stack["qbase"], stack["ids"], stack["dead"],
+                 stack["pad_pen"], stack["seed_lo"], stack["seed_hi"],
+                 stack["t"])
+    for i, o in enumerate(rows):
+        np.testing.assert_array_equal(np.asarray(picks[i]),
+                                      np.asarray(qr.jsq_pick(*_jsq_args(o),
+                                                             **kw)))
+    e_fn = jax.vmap(functools.partial(qk.enqueue, cap=_Q["cap"],
+                                      ecn_thresh=5, interpret=True))
+    outs = e_fn(stack["qbuf"], stack["qhead"], stack["qcnt"], stack["alive"],
+                stack["apk"], stack["aq"], stack["avalid"])
+    for i, o in enumerate(rows):
+        want = qr.enqueue(o["qbuf"], o["qhead"], o["qcnt"], o["alive"],
+                          o["apk"], o["aq"], o["avalid"], cap=_Q["cap"],
+                          ecn_thresh=5)
+        for g, w in zip(outs, want):
+            np.testing.assert_array_equal(np.asarray(g[i]), np.asarray(w))
+    s_fn = jax.vmap(functools.partial(qk.sack_update_scan, interpret=True))
+    prec, fm = s_fn(stack["p_recv"], stack["pk"], stack["deliv"],
+                    stack["f_cum"], stack["fsize"], stack["pbase"])
+    for i, o in enumerate(rows):
+        wr, wf = qr.sack_update_scan(o["p_recv"], o["pk"], o["deliv"],
+                                     o["f_cum"], o["fsize"], o["pbase"])
+        np.testing.assert_array_equal(np.asarray(prec[i]), np.asarray(wr))
+        np.testing.assert_array_equal(np.asarray(fm[i]), np.asarray(wf))
+
+
+def test_slot_ops_backend_switch():
+    """ops-layer contract: bad backends raise, resolve_impl honors the
+    REPRO_PALLAS=interpret CI override, xla == pallas bitwise."""
+    o = _slot_operands(6)
+    kw = dict(site=ent.SITE_EDGE_JSQ, quanta=None, cap=_Q["cap"])
+    with pytest.raises(ValueError):
+        qo.jsq_pick(*_jsq_args(o), backend="nope", **kw)
+    with pytest.raises(ValueError):
+        qo.resolve_impl("nope")
+    assert qo.resolve_impl("lax") == "lax"
+    assert qo.resolve_impl("pallas") == "pallas"
+    import os as _os
+    forced = _os.environ.get("REPRO_PALLAS", "") == "interpret"
+    on_tpu = jax.default_backend() == "tpu"
+    assert qo.resolve_impl("auto") == (
+        "pallas" if (on_tpu or forced) else "lax")
+    np.testing.assert_array_equal(
+        np.asarray(qo.jsq_pick(*_jsq_args(o), backend="xla", **kw)),
+        np.asarray(qo.jsq_pick(*_jsq_args(o), backend="pallas", **kw)))
