@@ -315,6 +315,93 @@ def _faults_sample():
     }
 
 
+def _planner_sample():
+    """Cost-modeled planner sample: the mixed-k all_to_all grid whose
+    quadratic per-k packet counts the greedy-2x heuristic pads
+    pathologically, run once under each planner (CCTs verified identical
+    first), plus a loop-engine timing sweep whose pow2-bucketed
+    (prop_slots, ack_delay) axis shares compiled shapes.  Reports the
+    model's predicted padded rows against the heuristic's alongside the
+    measured walls."""
+    import dataclasses
+    trees = (4, 6) if SMOKE else (4, 6, 8)
+    seeds = (0, 1)
+    schemes = ("host_pkt", "host_dr")
+    load = sweep.WorkloadSpec("all_to_all", 4 if SMOKE else 8)
+    heur_c = sweep.Campaign(name="sweep_bench_planner", schemes=schemes,
+                            loads=(load,), trees=trees, seeds=seeds)
+    cost_c = dataclasses.replace(heur_c, planner="cost")
+    p_h, p_c = sweep.plan(heur_c), sweep.plan(cost_c)
+    padded = lambda p: sum(m.n_points * m.npk_pad for m in p.megabatches)
+
+    _clear_compile_caches()
+    t0 = time.perf_counter()
+    rec_h, _ = sweep.run_campaign(heur_c)
+    heur_s = time.perf_counter() - t0
+
+    _clear_compile_caches()
+    t0 = time.perf_counter()
+    rec_c, _ = sweep.run_campaign(cost_c)
+    cost_s = time.perf_counter() - t0
+
+    key = lambda r: (r["scheme"], r["k"], r["seed"])
+    assert ({key(r): r["cct"] for r in rec_h}
+            == {key(r): r["cct"] for r in rec_c}), (
+        "cost-planned CCTs diverge from heuristic plan")
+
+    # Timing sweep on the slotted engine: (9,33) and (12,40) share pow2
+    # buckets (16, 64) -- one compiled shape -- while (3,5) gets its own.
+    timings = (((9, 33), (12, 40)) if SMOKE
+               else ((9, 33), (12, 40), (3, 5)))
+    tc = sweep.Campaign(
+        name="sweep_bench_timing", schemes=("host_pkt",),
+        loads=(sweep.WorkloadSpec("permutation", 8 if SMOKE else 16,
+                                  rng_seed=1),),
+        trees=(4,), seeds=seeds, engine="loop", max_slots=20000,
+        timings=timings)
+    tp = sweep.plan(tc)
+    _clear_compile_caches()
+    t0 = time.perf_counter()
+    trecs, _ = sweep.run_campaign(tc)
+    timing_fused_s = time.perf_counter() - t0
+
+    tree = FatTree(4)
+    wl = sweep.build_workload(tree, tc.loads[0])
+    t0 = time.perf_counter()
+    for r in trecs:
+        tm = (r["prop_slots"], r["ack_delay"])
+        res = loopsim.simulate(tree, wl, lbs.by_name(r["scheme"]),
+                               tc.loop_config(timing=tm), seed=r["seed"])
+        assert r["cct"] == float(res.cct_slots), (
+            f"timing-sweep fused CCT diverges from serial at {tm}")
+    timing_serial_s = time.perf_counter() - t0
+
+    return {
+        "grid": {"trees": list(trees), "msg_packets": load.msg_packets,
+                 "schemes": list(schemes), "n_seeds": len(seeds),
+                 "points": heur_c.n_points},
+        "policy": p_c.policy.label if p_c.policy else "greedy2x/pow2",
+        "heuristic": {"n_dispatches": p_h.n_dispatches,
+                      "n_shapes": p_h.n_shapes,
+                      "pkt_rows_padded": padded(p_h),
+                      "wall_s": round(heur_s, 3)},
+        "cost": {"n_dispatches": p_c.n_dispatches,
+                 "n_shapes": p_c.n_shapes,
+                 "pkt_rows_padded": padded(p_c),
+                 "wall_s": round(cost_s, 3)},
+        "padded_rows_saved": padded(p_h) - padded(p_c),
+        "speedup_vs_heuristic": round(heur_s / cost_s, 2),
+        "timing_sweep": {
+            "timings": [list(t) for t in timings],
+            "n_dispatches": tp.n_dispatches,
+            "n_shapes": tp.n_shapes,
+            "fused_s": round(timing_fused_s, 3),
+            "serial_warm_s": round(timing_serial_s, 3),
+            "speedup_vs_warm": round(timing_serial_s / timing_fused_s, 2),
+        },
+    }
+
+
 def _probe_sample(campaign, records):
     """Probes-on re-run of the first scheme's slice: verifies the probe
     series' per-layer max reproduces the probe-free ``max_queue`` scalars,
@@ -463,6 +550,7 @@ def sweep_speedup(scale: C.Scale):
         "kfuse": _kfuse_sample(),
         "kfuse_loop": _kfuse_loop_sample(),
         "faults": _faults_sample(),
+        "planner": _planner_sample(),
     }
     _merge_bench_json(result)
     C.emit("sweep_speedup", batch_s * 1e6 / n_points,
@@ -482,6 +570,11 @@ def sweep_speedup(scale: C.Scale):
            kfuse_loop_dispatches=result["kfuse_loop"]["plan"]["n_dispatches"],
            faults_speedup=result["faults"]["speedup_vs_serial"],
            faults_dispatches=result["faults"]["plan"]["n_dispatches"],
+           planner_policy=result["planner"]["policy"],
+           planner_rows_saved=result["planner"]["padded_rows_saved"],
+           planner_speedup=result["planner"]["speedup_vs_heuristic"],
+           timing_dispatches=result["planner"]["timing_sweep"]
+                                   ["n_dispatches"],
            trace_overhead_frac=result["telemetry"]["trace_overhead_frac"],
            probe_s=result["telemetry"]["probe"]["probed_s"],
            points=n_points, dispatches=p.n_dispatches, shapes=p.n_shapes)

@@ -38,8 +38,11 @@ import jax.numpy as jnp
 
 def pow2_bucket(n: int) -> int:
     """Next power of two >= ``n`` (and >= 1): sizes landing in one bucket
-    share a compiled pipeline shape."""
-    return 1 << max(0, int(n - 1).bit_length())
+    share a compiled pipeline shape.  ``n <= 0`` clamps to 1 -- degenerate
+    empty workloads and zero slot budgets land in the smallest bucket
+    (``(-1).bit_length() == 1``, so the unclamped formula returned 2 for
+    ``n == 0``, violating the >= 1 / next-pow2 contract)."""
+    return 1 << max(0, int(max(n, 1) - 1).bit_length())
 
 
 def k_buckets(trees: Sequence[int]) -> Dict[int, int]:

@@ -87,7 +87,7 @@ import jax.numpy as jnp
 from .topology import FatTree, LinkState
 from .workloads import Workload
 from ._batching import (TreePad, pad_tail, pad_to_group_max,
-                        port_pad_penalty, rank_by, shard_pad)
+                        port_pad_penalty, pow2_bucket, rank_by, shard_pad)
 from ..core.lb_schemes import LBScheme, precompute_host_choices
 from ..core import entropy as ent
 from ..core import ofan as ofan_mod
@@ -148,13 +148,23 @@ def static_config(cfg: LoopConfig) -> LoopConfig:
 
     ``rho`` and ``max_slots`` ride as per-row *operands* in the jitted
     engine (so an rho_max axis or differing slot budgets share one
-    executable); every other field is baked into the compiled pipeline --
-    either through shapes (``buffer_pkts``, ``prop_slots``, ``ack_delay``)
-    or through Python branches (``cca``, ``loss``, ``impl``).  Two points
-    whose ``static_config`` are equal can fuse into one megabatch dispatch
-    (mixed-``impl`` grids therefore plan one dispatch per impl).
+    executable), and the timing constants ``prop_slots``/``ack_delay``
+    bucket to the next power of two: they only set the ``DELAY``/``ADELAY``
+    ring-buffer *shapes*, while every ring index is taken modulo the
+    point's real constants (per-row operands), so a timing sweep shares
+    one compiled pipeline per bucket instead of compiling per point --
+    rows past a point's real modulus stay at their init value and are
+    never read, keeping results bitwise-identical to serial.  Every other
+    field is baked into the compiled pipeline -- either through shapes
+    (``buffer_pkts``) or through Python branches (``cca``, ``loss``,
+    ``impl``).  Two points whose ``static_config`` are equal can fuse into
+    one megabatch dispatch (mixed-``impl`` grids therefore plan one
+    dispatch per impl).
     """
-    return dataclasses.replace(cfg, rho=0.0, max_slots=0)
+    return dataclasses.replace(
+        cfg, rho=0.0, max_slots=0,
+        prop_slots=pow2_bucket(max(int(cfg.prop_slots), 1)),
+        ack_delay=pow2_bucket(max(int(cfg.ack_delay), 1)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -382,6 +392,11 @@ def _prepare(tree: FatTree, wl: Workload, scheme: LBScheme,
         # tree's compiled engine still decodes labels / rotates pointers
         # over its own k/2 ports.
         h_log=np.int32(h),
+        # Real timing constants: the compiled engine sizes its delay rings
+        # from the pow2-bucketed static_config but indexes them modulo
+        # these per-row values, so a timing sweep rides one compile.
+        prop_slots=np.int32(cfg.prop_slots),
+        ack_delay=np.int32(cfg.ack_delay),
     )
     return LoopPlan(tree=tree, wl=wl, scheme=scheme, cfg=cfg, links=links,
                     ep_links=ep_links, any_fail=any_fail, pv=pv,
@@ -802,7 +817,8 @@ _STATIC_KEYS = ("fsrc", "fdst", "fsize", "pkt_base", "fp1", "fe1", "fp2",
                 "fe2", "f_inter", "f_leaves", "host_flows", "alive",
                 "ep_start", "r_start",
                 "e_ports", "e_pcnt", "a_ports", "a_pcnt", "e_dead", "a_dead",
-                "f_vpaths", "f_vcnt", "rho", "max_slots", "h_log")
+                "f_vpaths", "f_vcnt", "rho", "max_slots", "h_log",
+                "prop_slots", "ack_delay")
 _SEED_KEYS = ("a_stale", "c_stale", "a_conv", "c_conv", "rand_pool",
               "rr_starts_e", "rr_starts_a",
               "ofan_e_orders", "ofan_e_starts", "ofan_e_len",
@@ -841,7 +857,7 @@ def _run(static: _Static, tables: dict, batch=False, n_shards: int = 1):
 def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
             f_inter, f_leaves, host_flows, alive, ep_start, r_start,
             e_ports, e_pcnt, a_ports, a_pcnt, e_dead, a_dead,
-            f_vpaths, f_vcnt, rho, max_slots, h_log,
+            f_vpaths, f_vcnt, rho, max_slots, h_log, prop_slots, ack_delay,
             a_stale, c_stale, a_conv, c_conv, rand_pool,
             rr_starts_e, rr_starts_a,
             ofan_e_orders, ofan_e_starts, ofan_e_len,
@@ -850,9 +866,17 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
     n, h, mid, F, P, Fh = s.n, s.h, s.mid, s.F, s.P, s.Fh
     CAP = cfg.buffer_pkts
     NQ = 4 * mid + n
-    DELAY = max(cfg.prop_slots, 1) + 1
+    # Delay rings: *shapes* come from the pow2-bucketed static config
+    # (DELAY_PAD/ADELAY_PAD rows), but every index is taken modulo the
+    # point's real timing constants (per-row operands), so the real
+    # modulus is always <= the ring size, rows past it keep their init
+    # value and are never read, and a prop_slots/ack_delay sweep shares
+    # one compiled pipeline per bucket -- bitwise-identical to serial.
+    DELAY_PAD = max(cfg.prop_slots, 1) + 1
+    DELAY = jnp.maximum(prop_slots, 1) + 1
     MOVE = 4 * mid + n
-    ADELAY = cfg.ack_delay + 1
+    ADELAY_PAD = cfg.ack_delay + 1
+    ADELAY = ack_delay + 1
     ecn_t = max(1, int(cfg.ecn_frac * CAP))
     ecn_thresh = jnp.int32(ecn_t)
     # LoopConfig.impl: trace the inline lax body or the fused Pallas
@@ -874,9 +898,9 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
         qbuf=jnp.full((NQ, CAP), -1, INT),
         qhead=jnp.zeros((NQ,), INT),
         qcnt=jnp.zeros((NQ,), INT),
-        dl_pkt=jnp.full((DELAY, MOVE), -1, INT),
-        dl_q=jnp.zeros((DELAY, MOVE), INT),
-        al_pkt=jnp.full((ADELAY, n), -1, INT),
+        dl_pkt=jnp.full((DELAY_PAD, MOVE), -1, INT),
+        dl_q=jnp.zeros((DELAY_PAD, MOVE), INT),
+        al_pkt=jnp.full((ADELAY_PAD, n), -1, INT),
         p_sent_t=jnp.full((P,), -1, INT),
         p_ecn=jnp.zeros((P,), bool),
         p_recv=jnp.zeros((P,), bool),
@@ -970,7 +994,7 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
 
         # ---- 3. deliveries (stage-4 pops) ----------------------------------
         deliv = valid & (nxt == -2)
-        dt = t + jnp.int32(cfg.prop_slots)
+        dt = t + prop_slots
         first_del = deliv & ~st["p_recv"][pkc]
         st["p_deliv"] = st["p_deliv"].at[jnp.where(first_del, pk, P)].set(
             dt, mode="drop")
@@ -1002,7 +1026,7 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
 
         # ---- 4. fabric moves ------------------------------------------------
         mover = valid & (nxt >= 0)
-        dslot = (t + jnp.int32(cfg.prop_slots)) % DELAY
+        dslot = (t + prop_slots) % DELAY
         st["dl_pkt"] = st["dl_pkt"].at[dslot, :4 * mid].set(
             jnp.where(mover, pk, -1)[:4 * mid])
         st["dl_q"] = st["dl_q"].at[dslot, :4 * mid].set(
@@ -1396,8 +1420,7 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
             inc = jnp.where(aok & ~over,
                             cfg.sw_ai / jnp.maximum(cw[akf], 1.0), 0.0)
             cw = cw.at[jnp.where(aok, akf, F)].add(inc, mode="drop")
-            can_dec = (t - st["f_last_dec"][akf]) > (cfg.ack_delay
-                                                     + cfg.prop_slots)
+            can_dec = (t - st["f_last_dec"][akf]) > (ack_delay + prop_slots)
             factor = jnp.clip(1.0 - cfg.sw_beta
                               * (delay - cfg.sw_target_slots)
                               / jnp.maximum(delay, 1.0), 0.5, 1.0)

@@ -20,6 +20,7 @@ campaign run (``trace.jsonl``) and optionally its ``results.jsonl``, emit
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, List, Optional
 
 _BLOCKS = " ▁▂▃▄▅▆▇█"
@@ -48,11 +49,16 @@ def _fmt_s(x) -> str:
 def ratio_label(ratio: float) -> str:
     """Honest rendering of a wall-time ratio: values below 1.0 are
     *slowdowns*, not small speedups (a ``speedup_vs_warm`` of 0.49 means
-    the fused path ran at half warm-serial throughput)."""
+    the fused path ran at half warm-serial throughput), and a non-finite
+    or non-positive sample (a failed/aborted bench run writing 0.0, -1 or
+    NaN) is labeled as bad data rather than rendered as an absurd
+    "1000000000.0x slower"."""
+    if not math.isfinite(ratio) or ratio <= 0.0:
+        return "n/a (bad sample)"
     if ratio >= 1.0:
         return f"{ratio:.2f}x speedup"
     return (f"{ratio:.2f}x -- SLOWDOWN "
-            f"({1.0 / max(ratio, 1e-9):.1f}x slower)")
+            f"({1.0 / ratio:.1f}x slower)")
 
 
 def _bench_ratio_lines(bench: Dict) -> List[str]:
@@ -93,6 +99,33 @@ def render_report(spans: List[Dict], records: Optional[List[Dict]] = None,
         emit = end.get("emit_s", 0.0)
         lines.append(f"  total wall {end['wall_s']:.2f}s "
                      f"(trace overhead {emit:.4f}s)")
+
+    # ---- cost-modeled planner: predicted vs realized fill -----------------
+    if plan and plan.get("policy"):
+        lines.append("")
+        lines.append(f"planner: cost-modeled policy {plan['policy']!r}"
+                     + (f" (calibration: {plan['calibration']})"
+                        if plan.get("calibration") else ""))
+        pred = plan.get("predicted") or {}
+        if pred:
+            lines.append(
+                f"  predicted: pkt_fill {pred.get('pkt_fill', 0):.1%} "
+                f"({pred.get('pkt_rows_real', '?')} real rows in "
+                f"{pred.get('pkt_rows_padded', '?')} padded, "
+                f"{pred.get('n_shapes', '?')} shapes, model total "
+                f"{pred.get('total', 0):.0f} rows)")
+        if end and end.get("pkt_rows_padded"):
+            lines.append(
+                f"  realized:  pkt_fill {end.get('pkt_fill', 0):.1%} "
+                f"({end.get('pkt_rows_real', '?')} real rows in "
+                f"{end.get('pkt_rows_padded', '?')} padded)")
+        alts = plan.get("alternatives") or []
+        for a in alts[:4]:
+            lines.append(f"  rejected: {a.get('policy', '?'):<24s} "
+                         f"cost {a.get('cost', 0):.0f} rows "
+                         f"(fill {a.get('pkt_fill', 0):.1%})")
+        if len(alts) > 4:
+            lines.append(f"  ... and {len(alts) - 4} more alternatives")
 
     # ---- dispatch timeline -------------------------------------------------
     if disp:

@@ -10,7 +10,12 @@ campaign (tested in ``tests/test_obs.py`` via :func:`strip_timing`).
 Span kinds (the ``kind`` field):
 
 * ``"plan"``     -- one per campaign, before execution: grid size, dispatch
-  and compiled-shape counts, device count, probe spec.
+  and compiled-shape counts, device count, probe spec.  Cost-mode plans
+  (``Campaign.planner="cost"``) additionally record the chosen bucket
+  policy (``policy``, ``kmap``, ``pkt_exact``), its ``predicted`` cost
+  breakdown (padded packet rows, fill, compile charge), the rejected
+  ``alternatives``, and -- when calibrated via ``--plan-from-trace`` --
+  the ``calibration`` source.
 * ``"dispatch"`` -- one per fused megabatch: member population, padding
   ratios (packet rows, batch-row fill, loop slot budget), shard/device
   fill, wall seconds, optional compile-vs-execute split, compile-cache
@@ -20,7 +25,9 @@ Span kinds (the ``kind`` field):
   trajectories can tell kernel runs from inline-lax runs.
 * ``"campaign"`` -- one per campaign, after execution: totals, including
   the trace's own cumulative emit overhead (``emit_s``), which is how the
-  benchmark measures telemetry cost.
+  benchmark measures telemetry cost, and the *realized* packet-row
+  padding counters (``pkt_rows_real`` / ``pkt_rows_padded`` /
+  ``pkt_fill``) the report sets against a cost-mode plan's prediction.
 
 Robustness spans (the runner's retry / degradation ladder / resume,
 ``sweep.runner``):

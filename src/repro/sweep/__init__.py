@@ -29,6 +29,8 @@ from ..obs import (ProbeSpec, QueueProbe, SweepLogger, TraceWriter,
 from .spec import (Campaign, FailureSpec, GridPoint, PRESETS, WorkloadSpec,
                    preset)
 from .planner import MegaBatch, Plan, SeedBatch, bucket_packets, plan
+from .costmodel import (BucketPolicy, CostParams, PlanCost,
+                        candidate_policies, choose_policy, evaluate_policy)
 from .results import (ResultStore, encode_record, loop_point_record,
                       point_record, summarize, write_summary)
 from .runner import build_links, build_workload, run_campaign
@@ -37,6 +39,8 @@ from . import compile_cache
 __all__ = [
     "Campaign", "FailureSpec", "GridPoint", "PRESETS", "WorkloadSpec",
     "preset", "MegaBatch", "Plan", "SeedBatch", "bucket_packets", "plan",
+    "BucketPolicy", "CostParams", "PlanCost", "candidate_policies",
+    "choose_policy", "evaluate_policy",
     "ResultStore", "encode_record", "loop_point_record", "point_record",
     "summarize", "write_summary", "build_links", "build_workload",
     "run_campaign", "compile_cache",

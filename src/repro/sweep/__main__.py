@@ -68,7 +68,21 @@ def _load_campaign(args) -> Campaign:
         override["shard"] = args.shard
     if getattr(args, "probes", None):
         override["probes"] = _parse_probes(args.probes)
+    # --plan-from-trace implies cost-modeled planning.
+    if getattr(args, "plan", None):
+        override["planner"] = args.plan
+    elif getattr(args, "plan_from_trace", None):
+        override["planner"] = "cost"
     return dataclasses.replace(c, **override) if override else c
+
+
+def _cost_params(args):
+    """The CostParams for a run/plan invocation: trace-calibrated with
+    --plan-from-trace, else None (model defaults)."""
+    if getattr(args, "plan_from_trace", None):
+        from .costmodel import CostParams
+        return CostParams.from_trace(args.plan_from_trace)
+    return None
 
 
 def cmd_run(args) -> int:
@@ -99,7 +113,8 @@ def cmd_run(args) -> int:
         c, store=store, compile_cache_dir=cache_dir,
         trace=trace, log=SweepLogger(level),
         timing_split=args.timing_split, profile_dir=args.profile,
-        retry=args.retry, backoff_s=args.backoff, resume=resume)
+        retry=args.retry, backoff_s=args.backoff, resume=resume,
+        cost_params=_cost_params(args))
     store.close()
     trace.close()
     # Summarize the *store*, not just this invocation's new records: on
@@ -119,8 +134,17 @@ def cmd_run(args) -> int:
 
 def cmd_plan(args) -> int:
     c = _load_campaign(args)
-    p = plan(c)
+    p = plan(c, cost_params=_cost_params(args))
     print(p.describe())
+    if p.policy is not None and p.cost is not None:
+        pred = p.cost
+        print(f"cost model: policy {p.policy.label!r} -- "
+              f"{pred.pkt_rows_padded} padded pkt rows "
+              f"(fill {pred.pkt_fill:.1%}), {pred.n_shapes} shapes, "
+              f"total {pred.total:.0f} rows")
+        for lbl, cost, fill in p.alternatives[:4]:
+            print(f"  rejected: {lbl:<24s} cost {cost:.0f} rows "
+                  f"(fill {fill:.1%})")
     for i, mega in enumerate(p.megabatches):
         print(f"dispatch {i}: engine={mega.engine} "
               f"{mega.n_points} points pad={mega.npk_pad}")
@@ -178,6 +202,14 @@ def main(argv=None) -> int:
         p.add_argument("--backend", choices=["auto", "xla", "pallas"])
         p.add_argument("--shard", choices=["auto", "off"],
                        help="shard fused dispatches across devices")
+        p.add_argument("--plan", choices=["heuristic", "cost"],
+                       help="bucket-policy planner: the fixed greedy-2x/"
+                            "pow2 heuristic, or the per-campaign cost "
+                            "model (repro.sweep.costmodel)")
+        p.add_argument("--plan-from-trace", metavar="TRACE",
+                       help="calibrate the cost model's compile charge "
+                            "from a measured trace.jsonl (spans written "
+                            "under --timing-split); implies --plan cost")
 
     p_run = sub.add_parser("run", help="execute a campaign")
     _spec_args(p_run)

@@ -53,9 +53,16 @@ def bucket_packets(n: int) -> int:
 
 
 @functools.lru_cache(maxsize=256)
-def _kmap(trees: Tuple[int, ...]) -> Dict[int, int]:
-    """Campaign-scoped tree-size buckets (``{k: k_pad}``)."""
+def _kmap_cached(trees: Tuple[int, ...]) -> Dict[int, int]:
     return k_buckets(trees)
+
+
+def _kmap(trees: Tuple[int, ...]) -> Dict[int, int]:
+    """Campaign-scoped tree-size buckets (``{k: k_pad}``).  The cache key is
+    the canonicalized axis -- ``tuple(sorted(set(...)))`` -- so permuted or
+    duplicated ``trees`` tuples (equal grids, equal buckets) hit one entry
+    instead of multiplying equivalent ones."""
+    return _kmap_cached(tuple(sorted({int(k) for k in trees})))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,13 +75,14 @@ class SeedBatch:
     scheme: str
     seeds: Tuple[int, ...]
     g_converge: Optional[int] = None
+    timing: Optional[Tuple[int, int]] = None
 
     def points(self) -> List[GridPoint]:
         return [GridPoint(self.campaign, self.k, self.load, self.failure,
-                          self.scheme, s, self.g_converge)
+                          self.scheme, s, self.g_converge, self.timing)
                 for s in self.seeds]
 
-    def fused_key(self, campaign: Campaign) -> Tuple:
+    def fused_key(self, campaign: Campaign, policy=None) -> Tuple:
         """Megabatch identity: everything the fused dispatch compiles over.
         Loads/failures/g_converge are *not* part of it (their per-packet
         arrays and convergence/rho scalars ride the batch axis, padded to
@@ -82,20 +90,30 @@ class SeedBatch:
         key carries the campaign's k-bucket head, to which every member's
         topology operands pad (packet buckets are taken at the bucket-head
         tree for the same reason).  Loop-engine points additionally key on
-        the static LoopConfig fields and the bucketed slot budget; in-loop
-        randomness is counter-stream based (``core.entropy``), so rand/JSQ
-        loop schemes bucket like every other scheme -- no fused key carries
-        a raw k."""
+        the static LoopConfig fields (timing constants pow2-bucketed --
+        the ring shapes, not the per-row moduli) and the bucketed slot
+        budget; in-loop randomness is counter-stream based
+        (``core.entropy``), so rand/JSQ loop schemes bucket like every
+        other scheme -- no fused key carries a raw k.
+
+        ``policy`` (a ``sweep.costmodel.BucketPolicy``) overrides the
+        default greedy-2x k-buckets / pow2 packet buckets; ``None`` keeps
+        the heuristic."""
         scheme = lbs.by_name(self.scheme)
+        kmap = policy.kmap_dict() if policy is not None else \
+            _kmap(campaign.trees)
+        kb = kmap[self.k]
+        npk = (policy.pkt_bucket(kb, self.load.n_packets(kb))
+               if policy is not None
+               else bucket_packets(self.load.n_packets(kb)))
         if campaign.engine == "loop" or scheme.needs_feedback:
-            kb = _kmap(campaign.trees)[self.k]
-            return ("loop", kb, bucket_packets(self.load.n_packets(kb)),
+            return ("loop", kb, npk,
                     scheme.loop_shape_key(),
-                    loopsim.static_config(campaign.loop_config()),
-                    pow2_bucket(max(int(campaign.max_slots), 1)),
+                    loopsim.static_config(
+                        campaign.loop_config(timing=self.timing)),
+                    pow2_bucket(int(campaign.max_slots)),
                     probe_shape(campaign.probes))
-        kb = _kmap(campaign.trees)[self.k]
-        return ("fast", kb, bucket_packets(self.load.n_packets(kb)),
+        return ("fast", kb, npk,
                 scheme.shape_key(), campaign.backend,
                 float(campaign.prop_slots), probe_shape(campaign.probes))
 
@@ -133,6 +151,14 @@ class Plan:
     campaign: Campaign
     batches: List[SeedBatch]
     megabatches: List[MegaBatch]
+    # Cost-modeled planning (``Campaign.planner == 'cost'`` or an explicit
+    # ``policy=`` argument): the chosen ``costmodel.BucketPolicy``, its
+    # predicted ``costmodel.PlanCost``, and the rejected alternatives as
+    # (label, total cost, predicted pkt fill) rows.  All ``None``/empty
+    # under the default heuristic policy.
+    policy: Optional[object] = None
+    cost: Optional[object] = None
+    alternatives: Tuple = ()
 
     @property
     def n_points(self) -> int:
@@ -147,35 +173,65 @@ class Plan:
         return len({m.key for m in self.megabatches})
 
     def describe(self) -> str:
+        pol = (f" [policy {self.policy.label}]"
+               if self.policy is not None else "")
         return (f"campaign {self.campaign.name!r}: {self.n_points} grid "
                 f"points -> {self.n_dispatches} fused dispatches "
-                f"({self.n_shapes} compiled pipeline shapes)")
+                f"({self.n_shapes} compiled pipeline shapes){pol}")
 
 
-def plan(campaign: Campaign) -> Plan:
+def plan(campaign: Campaign, policy=None, cost_params=None) -> Plan:
     """Group the campaign grid into seed batches, then fuse batches sharing
-    a compiled pipeline into megabatches (one dispatch per compiled shape)."""
+    a compiled pipeline into megabatches (one dispatch per compiled shape).
+
+    With ``campaign.planner == 'cost'`` (and no explicit ``policy``) the
+    ``sweep.costmodel`` cost model picks the bucketing: candidate tree/
+    packet bucketings are scored as padded packet rows + slot-budget waste
+    + a per-new-shape compile charge (``cost_params``, optionally
+    calibrated from a measured trace), the minimizer wins, and dispatches
+    are ordered largest-first so sharded device lanes fill before the
+    small tails run.  An explicit ``policy`` (a
+    ``costmodel.BucketPolicy``) bypasses selection and plans under that
+    policy directly -- that is also how the cost model itself evaluates
+    each candidate."""
+    cost = None
+    alternatives: Tuple = ()
+    if policy is None and campaign.planner == "cost":
+        from .costmodel import choose_policy
+        policy, cost, alternatives = choose_policy(campaign, cost_params)
+
     batches: dict = {}
     for p in campaign.points():
-        key = (p.k, p.load, p.failure, p.scheme, p.g_converge)
+        key = (p.k, p.load, p.failure, p.scheme, p.g_converge, p.timing)
         batches.setdefault(key, []).append(p.seed)
 
     out = [SeedBatch(campaign=campaign.name, k=k, load=load, failure=failure,
-                     scheme=scheme, seeds=tuple(seeds), g_converge=g)
-           for (k, load, failure, scheme, g), seeds in batches.items()]
+                     scheme=scheme, seeds=tuple(seeds), g_converge=g,
+                     timing=tm)
+           for (k, load, failure, scheme, g, tm), seeds in batches.items()]
     # Stable sort by fused key: batches sharing a compiled pipeline become
     # adjacent (and fuse into one dispatch) while the within-group grid
     # order is preserved.
     fused_rank: dict = {}
     for b in out:
-        fused_rank.setdefault(b.fused_key(campaign), len(fused_rank))
-    out.sort(key=lambda b: fused_rank[b.fused_key(campaign)])
+        fused_rank.setdefault(b.fused_key(campaign, policy), len(fused_rank))
+    out.sort(key=lambda b: fused_rank[b.fused_key(campaign, policy)])
 
     megas: List[MegaBatch] = []
     for b in out:
-        key = b.fused_key(campaign)
+        key = b.fused_key(campaign, policy)
         if megas and megas[-1].key == key:
             megas[-1].members.append(b)
         else:
             megas.append(MegaBatch(key=key, members=[b]))
-    return Plan(campaign=campaign, batches=out, megabatches=megas)
+
+    if policy is not None:
+        # Largest-first dispatch order: sharded fused axes fill their
+        # device lanes on the big dispatches before the small tails run
+        # (first-seen rank breaks ties, keeping the order deterministic).
+        first_seen = {id(m): i for i, m in enumerate(megas)}
+        megas.sort(key=lambda m: (-m.n_points * m.npk_pad,
+                                  first_seen[id(m)]))
+        out = [b for m in megas for b in m.members]
+    return Plan(campaign=campaign, batches=out, megabatches=megas,
+                policy=policy, cost=cost, alternatives=alternatives)

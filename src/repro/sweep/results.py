@@ -22,8 +22,10 @@ from ..net.topology import LAYER_NAMES
 from .spec import GridPoint
 
 # Grid-point identity fields, in summary group-by order (everything but seed).
-# Fast-engine records carry no g_converge; .get(None) keeps them grouped.
-_KEY_FIELDS = ("campaign", "k", "workload", "failure", "g_converge", "scheme")
+# Fast-engine records carry no g_converge, and only timing-axis loop records
+# carry prop_slots/ack_delay; .get(None) keeps the others grouped.
+_KEY_FIELDS = ("campaign", "k", "workload", "failure", "g_converge",
+               "prop_slots", "ack_delay", "scheme")
 
 
 def point_record(point: GridPoint, res) -> Dict:
@@ -90,6 +92,12 @@ def loop_point_record(point: GridPoint, res) -> Dict:
         "finished": bool(res.finished),
         "mean_cwnd": float(res.mean_cwnd),
     }
+    if point.timing is not None:
+        # Timing-axis points record their (prop_slots, ack_delay) pair;
+        # points off the axis add no keys, keeping pre-axis campaign files
+        # byte-identical.
+        rec["prop_slots"] = int(point.timing[0])
+        rec["ack_delay"] = int(point.timing[1])
     _attach_probe(rec, res)
     return rec
 

@@ -165,7 +165,8 @@ def _run_loop_mega(mega: MegaBatch, campaign: Campaign, cache: _Cache):
         rho = (cache.rho_auto(b.k, b.load, b.failure) if rho_opt == "auto"
                else float(rho_opt))
         items.append((cache.tree(b.k), cache.workload(b.k, b.load),
-                      lbs.by_name(b.scheme), campaign.loop_config(rho),
+                      lbs.by_name(b.scheme),
+                      campaign.loop_config(rho, timing=b.timing),
                       b.seeds, cache.link_state(b.k, b.failure),
                       b.g_converge, _fault_of(b)))
     n_shards = "auto" if campaign.shard == "auto" else 1
@@ -239,17 +240,22 @@ def _dispatch_span(idx: int, mega: MegaBatch, campaign: Campaign,
 def _point_key(point: GridPoint) -> Tuple:
     """Record-identity tuple of a grid point, matching :func:`_record_key`
     on the record the runner would write for it."""
+    tm = point.timing if point.timing is not None else (None, None)
     return (point.campaign, point.k, point.load.label(),
             point.failure.label() if point.failure else None,
-            point.scheme, point.seed, point.g_converge)
+            point.scheme, point.seed, point.g_converge,
+            int(tm[0]) if tm[0] is not None else None,
+            int(tm[1]) if tm[1] is not None else None)
 
 
 def _record_key(rec: Dict) -> Tuple:
     # Fast-engine records carry no g_converge field; .get(None) matches the
-    # fast-campaign grid's g_converge=None axis value.
+    # fast-campaign grid's g_converge=None axis value.  Likewise
+    # prop_slots/ack_delay appear only on timing-axis loop records.
     return (rec.get("campaign"), rec.get("k"), rec.get("workload"),
             rec.get("failure"), rec.get("scheme"), rec.get("seed"),
-            rec.get("g_converge"))
+            rec.get("g_converge"), rec.get("prop_slots"),
+            rec.get("ack_delay"))
 
 
 def _run_with_recovery(idx: int, mega: MegaBatch, campaign: Campaign,
@@ -327,7 +333,8 @@ def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,
                  profile_dir: Optional[str] = None,
                  retry: int = 0, backoff_s: float = 0.5,
                  sleep: Callable[[float], None] = time.sleep,
-                 resume: bool = False):
+                 resume: bool = False,
+                 cost_params=None):
     """Execute a campaign; returns (records, full_results).
 
     ``records`` is the flat list of per-point dicts (also appended to
@@ -367,6 +374,12 @@ def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,
       a partially-recorded dispatch is truncated off and re-run whole.
       With a canonical JSONL store the finished file is byte-identical to
       an uninterrupted run's (``tests/test_faults.py``).
+    * ``cost_params`` -- a ``sweep.costmodel.CostParams`` for cost-modeled
+      campaigns (``Campaign.planner == 'cost'``), e.g. calibrated from a
+      measured trace via ``CostParams.from_trace``; ``None`` uses the
+      model defaults.  The chosen policy, its predicted cost/fill and the
+      rejected alternatives land in the plan span; the campaign bookend
+      span carries the realized padded-row fill to compare against.
     """
     if log is None:
         log = (SweepLogger("debug", sink=progress) if progress is not None
@@ -375,19 +388,35 @@ def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,
                  else compile_cache.enable(compile_cache_dir))
     import jax
     devices = len(jax.devices())
-    p = plan(campaign)
+    p = plan(campaign, cost_params=cost_params)
     log.info(p.describe())
     if cache_dir:
         log.info(f"persistent compile cache: {cache_dir}")
     if trace:
-        trace.emit({
+        span = {
             "kind": "plan", "campaign": campaign.name,
             "n_points": p.n_points, "n_dispatches": p.n_dispatches,
             "n_shapes": p.n_shapes, "devices": devices,
             "engine": campaign.engine, "shard": campaign.shard,
             "probes": _probe_field(campaign),
             "cache_dir": str(cache_dir) if cache_dir else None,
-        })
+        }
+        if p.policy is not None:
+            # Cost-modeled planning: the chosen policy, its predicted
+            # cost/fill, and the rejected alternatives -- the prediction
+            # the campaign bookend's realized fill is compared against.
+            span["planner"] = "cost"
+            span["policy"] = p.policy.label
+            span["kmap"] = [list(kv) for kv in p.policy.kmap]
+            span["pkt_exact"] = list(p.policy.pkt_exact)
+            if p.cost is not None:
+                span["predicted"] = p.cost.as_dict()
+            span["alternatives"] = [
+                {"policy": lbl, "cost": c, "pkt_fill": f}
+                for (lbl, c, f) in p.alternatives]
+            if cost_params is not None:
+                span["calibration"] = cost_params.source
+        trace.emit(span)
     cache = _Cache()
     store = store if store is not None else ResultStore(None)
     n_before = len(store.records)   # store may be shared across campaigns
@@ -434,6 +463,7 @@ def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,
             log.info(f"jax.profiler unavailable ({e}); profiling skipped")
 
     cache_files0 = _cache_files(cache_dir)
+    real_rows = padded_rows = 0     # realized padded-row fill this run
     t0 = time.perf_counter()
     with prof:
         for idx, mega in enumerate(p.megabatches):
@@ -441,6 +471,8 @@ def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,
                 continue
             span = _dispatch_span(idx, mega, campaign, campaign.shard,
                                   devices)
+            real_rows += span["pkt_rows_real"]
+            padded_rows += span["pkt_rows_padded"]
             run = (_run_loop_mega if mega.engine == "loop"
                    else _run_fast_mega)
             to_record = (loop_point_record if mega.engine == "loop"
@@ -495,6 +527,13 @@ def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,
         trace.emit({
             "kind": "campaign", "campaign": campaign.name,
             "n_points": p.n_points, "n_dispatches": p.n_dispatches,
+            # Realized padded-row fill over the dispatches this run
+            # executed (resume-skipped dispatches excluded): the
+            # measurement the plan span's predicted fill is checked
+            # against, and the input --plan-from-trace calibrates on.
+            "pkt_rows_real": real_rows,
+            "pkt_rows_padded": padded_rows,
+            "pkt_fill": real_rows / max(padded_rows, 1),
             "wall_s": wall,
             "cache_entries_added": (_cache_files(cache_dir) - cache_files0
                                     if cache_dir else 0),

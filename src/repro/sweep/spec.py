@@ -93,12 +93,15 @@ class GridPoint:
     scheme: str
     seed: int
     g_converge: Optional[int] = None   # loop engine routing-convergence slot
+    timing: Optional[Tuple[int, int]] = None  # (prop_slots, ack_delay) sweep
 
     def point_id(self) -> str:
         fail = self.failure.label() if self.failure else "nofail"
         g = "" if self.g_converge is None else f"G{self.g_converge}/"
+        tm = ("" if self.timing is None
+              else f"p{self.timing[0]}a{self.timing[1]}/")
         return (f"{self.campaign}/k{self.k}/{self.load.label()}/{fail}/"
-                f"{g}{self.scheme}/s{self.seed}")
+                f"{g}{tm}{self.scheme}/s{self.seed}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,6 +132,17 @@ class Campaign:
     queue-occupancy time series out of the engines (``repro.obs.probes``);
     ``None`` (the default) leaves every output bitwise-identical to a
     probe-free build.
+    ``timings`` is a loop-engine grid axis of ``(prop_slots, ack_delay)``
+    pairs (``None`` = the campaign's ``prop_slots`` field plus the
+    ``loop_opts`` ``ack_delay``).  The engine buckets both constants to
+    powers of two for its delay-ring *shapes* and indexes the rings modulo
+    the real per-row values, so a timing sweep shares one compiled
+    pipeline per bucket instead of compiling per point.
+    ``planner`` selects the bucket policy: ``'heuristic'`` (greedy 2x
+    k-buckets + pow2 packet buckets) or ``'cost'`` (the
+    ``sweep.costmodel`` per-campaign cost model: candidate bucketings
+    scored by padded packet rows + slot-budget waste + a per-new-shape
+    compile charge, dispatches ordered largest-first).
     """
     name: str
     schemes: Tuple[str, ...]
@@ -144,6 +158,8 @@ class Campaign:
     max_slots: int = 200_000           # loop-engine slot budget
     loop_opts: Tuple[Tuple[str, object], ...] = ()
     probes: Optional[ProbeSpec] = None  # opt-in queue time-series capture
+    timings: Tuple[Optional[Tuple[int, int]], ...] = (None,)
+    planner: str = "heuristic"         # 'heuristic' | 'cost'
 
     def __post_init__(self):
         for s in self.schemes:
@@ -157,6 +173,17 @@ class Campaign:
             raise ValueError(f"unknown engine {self.engine!r}")
         if self.shard not in ("auto", "off"):
             raise ValueError(f"unknown shard policy {self.shard!r}")
+        if self.planner not in ("heuristic", "cost"):
+            raise ValueError(f"unknown planner {self.planner!r}")
+        for tm in self.timings:
+            if tm is None:
+                continue
+            if self.engine != "loop":
+                raise ValueError("timings is a loop-engine axis; fast-"
+                                 "engine campaigns must leave it at (None,)")
+            if len(tm) != 2 or int(tm[0]) < 0 or int(tm[1]) < 0:
+                raise ValueError(f"bad timings entry {tm!r}: expected "
+                                 f"(prop_slots, ack_delay) with both >= 0")
         # Legacy spec migration: g_converge and max_slots used to live in
         # loop_opts; the spec layer is now their single source of truth.
         opts = dict(self.loop_opts)
@@ -172,35 +199,48 @@ class Campaign:
             object.__setattr__(self, "loop_opts", tuple(sorted(opts.items())))
 
     @property
+    def _uniq_trees(self) -> Tuple[int, ...]:
+        """The tree axis with duplicates dropped (first occurrence wins):
+        a repeated ``k`` would emit the exact same grid points twice."""
+        return tuple(dict.fromkeys(int(k) for k in self.trees))
+
+    @property
     def n_points(self) -> int:
         n_sched = sum(isinstance(f, FaultSchedule) for f in self.failures)
         fail_rows = ((len(self.failures) - n_sched) * len(self.g_converge)
                      + n_sched)
-        return (len(self.trees) * len(self.loads) * fail_rows
-                * len(self.schemes) * len(self.seeds))
+        return (len(self._uniq_trees) * len(self.loads) * fail_rows
+                * len(self.timings) * len(self.schemes) * len(self.seeds))
 
     def loop_options(self) -> Dict:
         return dict(self.loop_opts)
 
-    def loop_config(self, rho: float = 1.0):
+    def loop_config(self, rho: float = 1.0,
+                    timing: Optional[Tuple[int, int]] = None):
         """The ``net.loopsim.LoopConfig`` this campaign's loop-engine points
         run under (``rho`` is the one per-point field; 'auto' is resolved by
-        the runner).  The planner keys fused loop dispatches by its static
-        part (``loopsim.static_config``), so this is the single place the
+        the runner; ``timing`` is a grid point's ``timings`` axis value and
+        overrides the ``prop_slots``/``ack_delay`` defaults).  The planner
+        keys fused loop dispatches by its static part
+        (``loopsim.static_config``), so this is the single place the
         spec-to-engine translation happens."""
         from ..net import loopsim
         opts = self.loop_options()
         opts.pop("rho", None)
-        return loopsim.LoopConfig(prop_slots=int(round(self.prop_slots)),
+        prop = int(round(self.prop_slots))
+        if timing is not None:
+            prop = int(timing[0])
+            opts["ack_delay"] = int(timing[1])
+        return loopsim.LoopConfig(prop_slots=prop,
                                   rho=float(rho), max_slots=self.max_slots,
                                   **opts)
 
     def points(self):
         """Expand the grid in a deterministic order (seeds innermost, so
         replicate runs of one point are adjacent for the planner)."""
-        for k, load, failure, g, scheme, seed in itertools.product(
-                self.trees, self.loads, self.failures, self.g_converge,
-                self.schemes, self.seeds):
+        for k, load, failure, g, tm, scheme, seed in itertools.product(
+                self._uniq_trees, self.loads, self.failures,
+                self.g_converge, self.timings, self.schemes, self.seeds):
             if isinstance(failure, FaultSchedule):
                 # Schedule rows ignore the g_converge axis (their reaction
                 # delays live in the schedule): emit once, at g=None,
@@ -210,7 +250,7 @@ class Campaign:
                 g = None
             yield GridPoint(campaign=self.name, k=k, load=load,
                             failure=failure, scheme=scheme, seed=seed,
-                            g_converge=g)
+                            g_converge=g, timing=tm)
 
     # ---- JSON round-trip ---------------------------------------------------
     def to_dict(self) -> Dict:
@@ -238,6 +278,9 @@ class Campaign:
              else FailureSpec(**f)) if f else None
             for f in d.get("failures", [None]))
         d["g_converge"] = tuple(d.get("g_converge", [None]))
+        d["timings"] = tuple(
+            tuple(int(x) for x in tm) if tm is not None else None
+            for tm in d.get("timings", [None]))
         d["shard"] = d.get("shard", "auto")
         d["loop_opts"] = tuple(sorted(d.get("loop_opts", {}).items()))
         pr = d.get("probes")

@@ -1,0 +1,356 @@
+"""Cost-modeled adaptive planner: pow2_bucket edge cases, kmap cache
+canonicalization, policy enumeration/selection invariants, trace
+calibration, timing-axis bucketing, and cost-mode end-to-end equivalence."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.net._batching import k_buckets, pow2_bucket
+from repro.net import loopsim
+from repro.net.topology import FatTree
+from repro.core import lb_schemes as lbs
+from repro import sweep
+from repro.sweep.costmodel import (BucketPolicy, CostParams, PlanCost,
+                                   candidate_policies, choose_policy,
+                                   evaluate_policy)
+from repro.sweep.planner import _kmap, _kmap_cached
+from repro.sweep.runner import build_workload
+from repro.obs import TraceWriter
+
+
+def _campaign(**kw):
+    base = dict(name="cm", schemes=("host_pkt", "simple_rr"),
+                loads=(sweep.WorkloadSpec("permutation", 32,
+                                          inter_pod_only=True),),
+                trees=(4,), seeds=(0, 1))
+    base.update(kw)
+    return sweep.Campaign(**base)
+
+
+def _mixed_a2a(**kw):
+    """The acceptance campaign shape: mixed-k all_to_all, quadratic in
+    hosts -- the case the greedy-2x heuristic pads pathologically."""
+    base = dict(name="cm_a2a", schemes=("host_pkt", "simple_rr"),
+                loads=(sweep.WorkloadSpec("all_to_all", 64),),
+                trees=(4, 6, 8), seeds=(0, 1), planner="cost")
+    base.update(kw)
+    return sweep.Campaign(**base)
+
+
+# ---------------------------------------------------------------------------
+# pow2_bucket edge cases (satellite: n=0 returned 2)
+# ---------------------------------------------------------------------------
+
+def test_pow2_bucket_boundaries():
+    assert pow2_bucket(0) == 1          # was 2: (-1).bit_length() == 1
+    assert pow2_bucket(-3) == 1
+    assert pow2_bucket(1) == 1
+    assert pow2_bucket(2) == 2
+    for m in range(1, 12):
+        assert pow2_bucket(2 ** m) == 2 ** m
+        assert pow2_bucket(2 ** m + 1) == 2 ** (m + 1)
+
+
+def test_pow2_bucket_contract():
+    for n in range(0, 300):
+        b = pow2_bucket(n)
+        assert b >= max(n, 1)
+        assert b & (b - 1) == 0         # a power of two
+        assert b == 1 or b // 2 < max(n, 1)   # the *next* power of two
+
+
+# ---------------------------------------------------------------------------
+# _kmap cache canonicalization (satellite: raw-tuple cache key)
+# ---------------------------------------------------------------------------
+
+def test_kmap_canonicalizes_permuted_and_duplicated_trees():
+    _kmap_cached.cache_clear()
+    a = _kmap((4, 8, 6))
+    b = _kmap((8, 6, 4, 4, 8))
+    c = _kmap((4, 6, 8))
+    assert a == b == c == k_buckets((4, 6, 8))
+    assert _kmap_cached.cache_info().currsize == 1
+
+
+def test_permuted_trees_plan_identically():
+    c1 = _campaign(trees=(4, 8))
+    c2 = dataclasses.replace(c1, trees=(8, 4, 4))
+    p1, p2 = sweep.plan(c1), sweep.plan(c2)
+    # grid order follows the campaign's tree order, but the *grouping* --
+    # each batch's compiled-pipeline identity -- must canonicalize
+    key = lambda p, c: sorted((b.scheme, b.k, b.seeds, b.fused_key(c))
+                              for b in p.batches)
+    assert key(p1, c1) == key(p2, c2)
+    assert p1.n_dispatches == p2.n_dispatches
+    assert p1.n_shapes == p2.n_shapes
+
+
+# ---------------------------------------------------------------------------
+# Policy enumeration and selection
+# ---------------------------------------------------------------------------
+
+def test_heuristic_is_candidate_zero():
+    c = _mixed_a2a()
+    cands = candidate_policies(c)
+    assert cands[0].label == "greedy2x/pow2"
+    assert cands[0].kmap == tuple(sorted(k_buckets(c.trees).items()))
+    sigs = {(p.kmap, p.pkt_exact) for p in cands}
+    assert len(sigs) == len(cands)      # no duplicate candidates
+
+
+def test_chosen_policy_never_costs_more_than_heuristic_or_pow2():
+    params = CostParams()
+    for c in (_campaign(), _mixed_a2a(), _campaign(trees=(4, 6, 8, 10)),
+              _campaign(engine="loop", max_slots=3000,
+                        loads=(sweep.WorkloadSpec("permutation", 16,
+                                                  inter_pod_only=True),))):
+        pol, cost, alts = choose_policy(c, params)
+        heur = evaluate_policy(c, BucketPolicy.heuristic(c.trees), params)
+        assert cost.total <= heur.total
+        for _, alt_total, _ in alts:
+            assert cost.total <= alt_total
+
+
+def test_choose_policy_deterministic():
+    c = _mixed_a2a()
+    choose_policy.cache_clear()
+    first = choose_policy(c, CostParams())
+    choose_policy.cache_clear()
+    second = choose_policy(c, CostParams())
+    assert first == second
+    # and a byte-equal campaign built separately hits the lru cache
+    again = choose_policy(_mixed_a2a(), CostParams())
+    assert again == second
+
+
+def test_cost_plan_splits_mixed_k_all_to_all():
+    """The model's reason to exist: mixed-k all_to_all pads quadratically
+    under greedy-2x fusion, so the cost plan buys the split."""
+    c = _mixed_a2a()
+    p_cost = sweep.plan(c)
+    p_heur = sweep.plan(dataclasses.replace(c, planner="heuristic"))
+
+    def padded(p):
+        return sum(m.n_points * m.npk_pad for m in p.megabatches)
+
+    assert p_cost.policy is not None
+    assert padded(p_cost) < padded(p_heur)
+    # extra dispatches are bounded by what the compile charge lets it buy
+    assert p_cost.cost.total <= evaluate_policy(
+        dataclasses.replace(c, planner="heuristic"),
+        BucketPolicy.heuristic(c.trees)).total
+    assert p_cost.n_dispatches == p_cost.n_shapes
+
+
+def test_cost_mode_plans_largest_first():
+    megas = sweep.plan(_mixed_a2a()).megabatches
+    sizes = [m.n_points * m.npk_pad for m in megas]
+    assert sizes == sorted(sizes, reverse=True)
+
+
+@pytest.mark.parametrize("name", sorted(sweep.PRESETS))
+def test_presets_cost_mode_one_dispatch_per_shape(name):
+    c = dataclasses.replace(sweep.preset(name), planner="cost")
+    p = sweep.plan(c)
+    assert p.n_dispatches == p.n_shapes
+    assert sum(len(b.seeds) for b in p.batches) == c.n_points
+    # deterministic given (campaign, calibration)
+    q = sweep.plan(dataclasses.replace(sweep.preset(name), planner="cost"))
+    assert [(b.scheme, b.k, b.seeds) for b in p.batches] == \
+           [(b.scheme, b.k, b.seeds) for b in q.batches]
+
+
+# ---------------------------------------------------------------------------
+# Trace calibration
+# ---------------------------------------------------------------------------
+
+def _dispatch_span(i, compile_s, execute_s, padded):
+    return {"kind": "dispatch", "dispatch": i, "compile_s": compile_s,
+            "execute_s": execute_s, "pkt_rows_padded": padded,
+            "pkt_rows_real": padded, "engine": "fast"}
+
+
+def test_cost_params_from_trace(tmp_path):
+    path = tmp_path / "trace.jsonl"
+    spans = [{"kind": "plan", "schema": 1},
+             _dispatch_span(0, 2.0, 1.0, 1000),
+             _dispatch_span(1, 4.0, 3.0, 3000)]
+    path.write_text("".join(json.dumps(s) + "\n" for s in spans))
+    params = CostParams.from_trace(path)
+    # rate = 4s / 4000 rows = 1e-3 s/row; median compile = 4.0s -> 4000 rows
+    assert params.compile_rows == pytest.approx(4000.0)
+    assert params.source == str(path)
+
+
+def test_cost_params_from_trace_without_timing_split(tmp_path):
+    path = tmp_path / "trace.jsonl"
+    spans = [{"kind": "plan"}, {"kind": "dispatch", "dispatch": 0,
+                                "wall_s": 1.0, "pkt_rows_padded": 100}]
+    path.write_text("".join(json.dumps(s) + "\n" for s in spans))
+    params = CostParams.from_trace(path)
+    assert params.compile_rows == CostParams().compile_rows
+    assert "defaults" in params.source
+
+
+def test_compile_charge_steers_fusion():
+    """A huge compile charge keeps even all_to_all fused; a tiny one splits
+    everything it can."""
+    c = dataclasses.replace(_mixed_a2a(), planner="heuristic")
+    pol_hi, _, _ = choose_policy(c, CostParams(compile_rows=1e11))
+    pol_lo, _, _ = choose_policy(c, CostParams(compile_rows=0.0))
+    heur = BucketPolicy.heuristic(c.trees)
+    assert pol_hi.kmap == heur.kmap
+    assert len({pad for _, pad in pol_lo.kmap}) == len(set(c.trees))
+
+
+# ---------------------------------------------------------------------------
+# Timing-axis bucketing (tentpole B)
+# ---------------------------------------------------------------------------
+
+def test_timing_pairs_in_same_pow2_bucket_fuse():
+    c = _campaign(engine="loop", max_slots=3000,
+                  loads=(sweep.WorkloadSpec("permutation", 16,
+                                            inter_pod_only=True),),
+                  schemes=("jsq",),
+                  timings=((9, 33), (12, 40), (3, 5)))
+    p = sweep.plan(c)
+    # (9,33) and (12,40) share pow2 buckets (16, 64); (3,5) gets (4, 8)
+    fused = {tuple(sorted(b.timing for b in m.members))
+             for m in p.megabatches}
+    assert ((3, 5),) in fused
+    assert ((9, 33), (12, 40)) in fused
+    assert p.n_dispatches == 2
+
+
+def test_static_config_buckets_timing_constants():
+    cfg = dataclasses.replace(loopsim.LoopConfig(), prop_slots=9,
+                              ack_delay=33)
+    st = loopsim.static_config(cfg)
+    assert st.prop_slots == 16 and st.ack_delay == 64
+    other = loopsim.static_config(
+        dataclasses.replace(cfg, prop_slots=12, ack_delay=40))
+    assert st == other                  # same compiled pipeline identity
+
+
+def test_timings_validation():
+    with pytest.raises(ValueError):
+        _campaign(timings=((1, 2),))               # fast engine: loop-only
+    with pytest.raises(ValueError):
+        _campaign(engine="loop", timings=((-1, 2),))
+    with pytest.raises(ValueError):
+        _campaign(planner="nope")
+
+
+def test_campaign_timings_json_roundtrip():
+    c = _campaign(engine="loop", max_slots=3000, schemes=("jsq",),
+                  timings=((9, 33), None), planner="cost",
+                  loads=(sweep.WorkloadSpec("permutation", 16,
+                                            inter_pod_only=True),))
+    d = json.loads(json.dumps(c.to_dict()))
+    c2 = sweep.Campaign.from_dict(d)
+    assert c2.timings == c.timings
+    assert c2.planner == "cost"
+    assert c2 == c
+
+
+def test_timing_sweep_bitwise_vs_serial_loopsim():
+    """Fused timing-sweep dispatches reproduce per-point serial
+    loopsim.simulate exactly, including pairs sharing one compile."""
+    c = _campaign(engine="loop", max_slots=3000, schemes=("jsq",),
+                  seeds=(0, 1),
+                  loads=(sweep.WorkloadSpec("permutation", 16,
+                                            inter_pod_only=True),),
+                  timings=((9, 33), (12, 40)))
+    store = sweep.ResultStore(None)
+    sweep.run_campaign(c, store=store)
+    assert len(store.records) == c.n_points
+    tree = FatTree(4)
+    for rec in store.records:
+        tm = (rec["prop_slots"], rec["ack_delay"])
+        pt = next(p for p in c.points()
+                  if p.seed == rec["seed"] and p.timing == tm)
+        wl = build_workload(tree, pt.load)
+        res = loopsim.simulate(tree, wl, lbs.by_name(pt.scheme),
+                               c.loop_config(timing=tm), seed=pt.seed,
+                               g_converge=pt.g_converge)
+        assert rec["cct"] == float(res.cct_slots)
+        assert rec["cct_acked"] == float(res.cct_acked_slots)
+        assert rec["max_queue"] == float(res.max_queue)
+        assert rec["drops"] == int(res.drops)
+        assert rec["mean_cwnd"] == float(res.mean_cwnd)
+
+
+def test_cost_mode_timing_sweep_loop_bitwise_vs_serial():
+    """The acceptance shape end-to-end on the slotted engine: a cost-mode
+    plan over a timing sweep still reproduces per-point serial simulate
+    exactly."""
+    c = _campaign(engine="loop", max_slots=3000, schemes=("jsq",),
+                  seeds=(0,), planner="cost",
+                  loads=(sweep.WorkloadSpec("permutation", 8,
+                                            inter_pod_only=True),),
+                  timings=((9, 33), (12, 40)))
+    p = sweep.plan(c)
+    assert p.policy is not None
+    assert p.n_dispatches == p.n_shapes
+    store = sweep.ResultStore(None)
+    sweep.run_campaign(c, store=store)
+    tree = FatTree(4)
+    wl = build_workload(tree, c.loads[0])
+    for rec in store.records:
+        tm = (rec["prop_slots"], rec["ack_delay"])
+        res = loopsim.simulate(tree, wl, lbs.by_name(rec["scheme"]),
+                               c.loop_config(timing=tm), seed=rec["seed"])
+        assert rec["cct"] == float(res.cct_slots)
+        assert rec["max_queue"] == float(res.max_queue)
+
+
+def test_timing_axis_off_records_have_no_timing_keys():
+    c = _campaign(engine="loop", max_slots=3000, schemes=("jsq",),
+                  loads=(sweep.WorkloadSpec("permutation", 16,
+                                            inter_pod_only=True),))
+    store = sweep.ResultStore(None)
+    sweep.run_campaign(c, store=store)
+    for rec in store.records:
+        assert "prop_slots" not in rec and "ack_delay" not in rec
+
+
+# ---------------------------------------------------------------------------
+# Cost-mode end-to-end: equivalence, trace spans, report
+# ---------------------------------------------------------------------------
+
+def test_cost_mode_results_match_heuristic_mode():
+    """Planner choice moves rows between dispatches; it must never change
+    the physics.  Same campaign under both planners -> same record set."""
+    base = _campaign(trees=(4, 6),
+                     loads=(sweep.WorkloadSpec("all_to_all", 8),))
+    s_h, s_c = sweep.ResultStore(None), sweep.ResultStore(None)
+    sweep.run_campaign(base, store=s_h)
+    sweep.run_campaign(dataclasses.replace(base, planner="cost"), store=s_c)
+    key = lambda r: (r["scheme"], r["k"], r["workload"], r["seed"])
+    a = {key(r): sweep.encode_record(r) for r in s_h.records}
+    b = {key(r): sweep.encode_record(r) for r in s_c.records}
+    assert a == b
+
+
+def test_cost_mode_trace_spans_and_report(tmp_path):
+    c = _mixed_a2a(loads=(sweep.WorkloadSpec("all_to_all", 8),),
+                   trees=(4, 6))
+    tw = TraceWriter(tmp_path / "trace.jsonl")
+    store = sweep.ResultStore(None)
+    sweep.run_campaign(c, store=store, trace=tw)
+    tw.close()
+    spans = sweep.load_trace(tmp_path / "trace.jsonl")
+    plan_span = next(s for s in spans if s["kind"] == "plan")
+    assert plan_span["planner"] == "cost"
+    assert plan_span["policy"]
+    assert plan_span["predicted"]["pkt_rows_padded"] > 0
+    assert isinstance(plan_span["alternatives"], list)
+    end = next(s for s in spans if s["kind"] == "campaign")
+    assert end["pkt_rows_real"] <= end["pkt_rows_padded"]
+    # predicted padded rows == realized padded rows (model mirrors planner)
+    assert plan_span["predicted"]["pkt_rows_padded"] == \
+        end["pkt_rows_padded"]
+    text = sweep.render_report(spans, store.records)
+    assert "cost-modeled policy" in text
+    assert "predicted:" in text and "realized:" in text

@@ -262,6 +262,18 @@ def test_summarize_tolerates_extra_and_foreign_records(fast_off):
     assert [{k: v for k, v in r.items()} for r in rows] == base
 
 
+def test_ratio_label_bad_samples():
+    """Non-finite / non-positive ratios are bad data, not absurd slowdowns
+    (a failed bench run writing 0.0 used to render as
+    '1000000000.0x slower')."""
+    from repro.obs.report import ratio_label
+    for bad in (0.0, -1.0, float("nan"), float("inf"), float("-inf")):
+        assert ratio_label(bad) == "n/a (bad sample)"
+    assert ratio_label(2.0) == "2.00x speedup"
+    label = ratio_label(0.5)
+    assert "SLOWDOWN" in label and "2.0x slower" in label
+
+
 def test_bench_json_merge(tmp_path, monkeypatch):
     sweep_bench = pytest.importorskip(
         "benchmarks.sweep_bench",
