@@ -40,15 +40,26 @@ class FabricModel:
 
 @dataclasses.dataclass
 class Plan:
-    impl: str           # 'xla' | 'rotation' | 'ring' | 'rs_ag'
+    impl: str           # 'xla' | 'rotation' | 'ring' | 'rs_ag' | 'none'
     est_time_s: float
     reason: str
+
+
+def _empty_plan(what: str) -> Plan:
+    """Degenerate collective: a single participant or non-positive bytes
+    moves no traffic, so return an explicit empty plan instead of letting
+    the queue laws divide by zero / go negative."""
+    return Plan("none", 0.0, f"degenerate collective ({what}): no traffic")
 
 
 def plan_all_to_all(bytes_per_pair: float, n: int,
                     fabric: FabricModel = FabricModel(),
                     intra_pod: bool = True) -> Plan:
     """Choose the AllToAll schedule across an axis of size n."""
+    if n <= 1:
+        return _empty_plan(f"n={n}")
+    if bytes_per_pair <= 0:
+        return _empty_plan(f"bytes_per_pair={bytes_per_pair:g}")
     m_pkts = bytes_per_pair / fabric.packet_B
     ser = bytes_per_pair * (n - 1) / fabric.link_bw_Bps
     if intra_pod:
@@ -78,6 +89,10 @@ def plan_all_to_all(bytes_per_pair: float, n: int,
 def plan_all_reduce(bytes_total: float, n: int,
                     fabric: FabricModel = FabricModel(),
                     intra_pod: bool = True) -> Plan:
+    if n <= 1:
+        return _empty_plan(f"n={n}")
+    if bytes_total <= 0:
+        return _empty_plan(f"bytes_total={bytes_total:g}")
     ser = 2 * bytes_total * (n - 1) / n / fabric.link_bw_Bps
     if intra_pod:
         return Plan("xla", ser + fabric.rtt_s, "ICI: fused all-reduce")

@@ -106,6 +106,8 @@ def _ranks_and_starts(sorted_gkey: jnp.ndarray,
     """Given group keys sorted ascending, return (rank within group, segment
     start flags)."""
     n = sorted_gkey.shape[0]
+    if n == 0:      # zero-packet workload: no groups, no scan
+        return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), bool))
     idx = jnp.arange(n, dtype=jnp.float32)
     flag = jnp.concatenate([jnp.ones((1,), bool),
                             sorted_gkey[1:] != sorted_gkey[:-1]])
@@ -127,6 +129,9 @@ def _lindley_layer(qid, a, tie, n_queues: int, backend: str):
     perturb the float reduction order (see :func:`_postprocess`).
     """
     npk = qid.shape[0]
+    if npk == 0:    # zero-packet workload: the leading seg-start flag of
+        # the scan below would be 1-long against 0-long values
+        return a, jnp.zeros((n_queues,), jnp.int32), jnp.zeros((0,))
     real = qid >= 0
     qkey = jnp.where(real, qid, jnp.int32(2**30))
     order = jnp.lexsort((tie, a, qkey))
@@ -196,7 +201,8 @@ def _jsq_layer(switch, a, tie, active, *, n_switches: int, pad: int, h: int,
     ss = skey[order]
     av = a[order]
     rank, _ = _ranks_and_starts(ss, backend)
-    max_rank = jnp.max(jnp.where(ss < 2**30, rank, 0))
+    max_rank = (jnp.max(jnp.where(ss < 2**30, rank, 0)) if npk
+                else jnp.int32(0))
 
     valid = ss < 2**30
     # Inactive packets scatter to row n_switches, which is out of bounds and
@@ -544,6 +550,9 @@ def _postprocess(out: dict, wl: Workload, probes=None) -> FastSimResult:
     delivery = out["delivery"]
     flow_completion = np.full(wl.n_flows, -np.inf)
     np.maximum.at(flow_completion, wl.flow, delivery)
+    # Zero-packet flows (msg_packets=0, empty phases) receive no delivery
+    # and would stay -inf; they complete instantly by definition.
+    flow_completion[np.isneginf(flow_completion)] = 0.0
     layers = {}
     max_q = 0.0
     for li, name in enumerate(LAYER_NAMES):
@@ -560,7 +569,8 @@ def _postprocess(out: dict, wl: Workload, probes=None) -> FastSimResult:
     probe = (QueueProbe(probe_shape(probes)[0], np.asarray(out["probe_q"]))
              if "probe_q" in out else None)
     return FastSimResult(delivery=delivery, flow_completion=flow_completion,
-                         cct=float(delivery.max()), layers=layers,
+                         cct=float(delivery.max()) if delivery.size else 0.0,
+                         layers=layers,
                          max_queue=max_q, a_used=out["a_used"],
                          c_used=out["c_used"], probe=probe)
 

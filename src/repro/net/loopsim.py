@@ -246,6 +246,11 @@ def _prepare(tree: FatTree, wl: Workload, scheme: LBScheme,
     np.cumsum(fsize, out=pkt_base[1:])
     if not (wl.flow == np.repeat(np.arange(F), fsize)).all():
         raise ValueError("loopsim expects flow-contiguous packet layout")
+    # Per-flow start gate (collective-phase schedules): a flow may not send
+    # before its phase's start slot.  All-zero (every static workload) is
+    # bitwise-inert in the engine's send mask.
+    f_start = (np.zeros(F, dtype=np.int32) if wl.flow_start is None
+               else np.asarray(wl.flow_start, dtype=np.int32))
 
     fp1 = tree.host_pod(fsrc).astype(np.int32)
     fe1 = tree.host_edge(fsrc).astype(np.int32)
@@ -381,7 +386,7 @@ def _prepare(tree: FatTree, wl: Workload, scheme: LBScheme,
 
     tables = dict(
         fsrc=fsrc, fdst=fdst, fsize=fsize, pkt_base=pkt_base,
-        fp1=fp1, fe1=fe1, fp2=fp2, fe2=fe2,
+        fp1=fp1, fe1=fe1, fp2=fp2, fe2=fe2, f_start=f_start,
         f_inter=f_inter, f_leaves=f_leaves, host_flows=host_flows,
         alive=alive, ep_start=ep_start, r_start=r_start,
         e_ports=e_ports, e_pcnt=e_pcnt, a_ports=a_ports, a_pcnt=a_pcnt,
@@ -476,13 +481,17 @@ def _postprocess(out: dict, cfg: LoopConfig, n_packets: int,
     data_done = out["f_data_done"][:n_flows]
     f_cwnd = np.asarray(out["f_cwnd"][:n_flows], np.float32)
     finished = bool((comp >= 0).all())
+    # Zero-flow workloads (msg_packets=0, empty phases): vacuously finished
+    # at slot 0 -- the empty maxima below would raise.
     return LoopSimResult(
         delivered_slot=out["delivered_slot"][:n_packets],
         flow_complete_slot=comp,
         flow_data_done_slot=data_done,
-        cct_slots=float(data_done.max()) if (data_done >= 0).all()
+        cct_slots=0.0 if n_flows == 0
+        else float(data_done.max()) if (data_done >= 0).all()
         else float(cfg.max_slots),
-        cct_acked_slots=float(comp.max()) if finished else float(cfg.max_slots),
+        cct_acked_slots=0.0 if n_flows == 0
+        else float(comp.max()) if finished else float(cfg.max_slots),
         drops=int(out["drops"]),
         retransmissions=int(out["rtx"]),
         max_queue=int(out["max_q"]),
@@ -506,6 +515,15 @@ def simulate(tree: FatTree, wl: Workload, scheme: LBScheme,
     ``fault``: a ``repro.faults.FaultSchedule`` -- the dynamic alternative
     to the (links, g_converge) pair (mutually exclusive with it).
     """
+    if wl.n_packets == 0:
+        # The slotted engine gathers per-packet state each step, which
+        # needs a packet axis of at least 1.  An all-degenerate workload
+        # (msg_packets=0, or a phase schedule whose collectives are all
+        # n<=1/zero-byte) runs as a one-point megabatch padded to one
+        # inert packet row -- bitwise what the fused runner path does.
+        return simulate_megabatch(
+            [(tree, wl, scheme, cfg, [seed], links, g_converge, fault)],
+            npk_pad=1, probes=probes)[0][0]
     plan = _prepare(tree, wl, scheme, cfg, links, g_converge, probes=probes,
                     fault=fault)
     tables = {**plan.tables, **_draw_seed_inputs(plan, seed)}
@@ -624,7 +642,9 @@ def _repad_seed(d: dict, plan: LoopPlan, tp: TreePad) -> dict:
 
 
 # Seed-independent per-point operands that carry a padded flow/packet axis.
-_F_PAD0 = ("fsrc", "fdst", "fsize", "fp1", "fe1", "fp2", "fe2")
+# (f_start pads with 0; pad flows have fsize 0 and complete at slot 0, so
+# their gate value never matters.)
+_F_PAD0 = ("fsrc", "fdst", "fsize", "fp1", "fe1", "fp2", "fe2", "f_start")
 
 
 def simulate_megabatch(items, *, npk_pad: Optional[int] = None,
@@ -689,7 +709,9 @@ def simulate_megabatch(items, *, npk_pad: Optional[int] = None,
     pads = [TreePad(p.tree, tree_pad) for p in plans]
 
     P_max = max(p.wl.n_packets for p in plans)
-    npk_pad = P_max if npk_pad is None else max(int(npk_pad), P_max)
+    # The engine's per-step packet gathers need a non-empty packet axis
+    # even when every member is degenerate (all-empty phase schedules).
+    npk_pad = max(P_max if npk_pad is None else max(int(npk_pad), P_max), 1)
     F_pad = max(p.wl.n_flows for p in plans)
     Fh_pad = max(p.static.Fh for p in plans)
     E_pad = max(p.n_epochs for p in plans)
@@ -814,8 +836,8 @@ def _tbl(stale, eps, attr, n_ep):
 # rest carry the seed batch axis.  In the megabatched variant *every*
 # argument carries the fused (scheme x load x failure x seed) axis.
 _STATIC_KEYS = ("fsrc", "fdst", "fsize", "pkt_base", "fp1", "fe1", "fp2",
-                "fe2", "f_inter", "f_leaves", "host_flows", "alive",
-                "ep_start", "r_start",
+                "fe2", "f_start", "f_inter", "f_leaves", "host_flows",
+                "alive", "ep_start", "r_start",
                 "e_ports", "e_pcnt", "a_ports", "a_pcnt", "e_dead", "a_dead",
                 "f_vpaths", "f_vcnt", "rho", "max_slots", "h_log",
                 "prop_slots", "ack_delay")
@@ -855,7 +877,7 @@ def _run(static: _Static, tables: dict, batch=False, n_shards: int = 1):
 
 
 def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
-            f_inter, f_leaves, host_flows, alive, ep_start, r_start,
+            f_start, f_inter, f_leaves, host_flows, alive, ep_start, r_start,
             e_ports, e_pcnt, a_ports, a_pcnt, e_dead, a_dead,
             f_vpaths, f_vcnt, rho, max_slots, h_log, prop_slots, ack_delay,
             a_stale, c_stale, a_conv, c_conv, rand_pool,
@@ -914,7 +936,10 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
         f_cum=jnp.zeros((F,), INT),
         f_hi=jnp.full((F,), -1, INT),
         f_complete=jnp.full((F,), -1, INT),
-        f_data_done=jnp.full((F,), -1, INT),
+        # Zero-size flows (phase padding, msg_packets=0) are data-done at
+        # slot 0, not at the first slot the delivery check can fire
+        # (t + prop_slots).
+        f_data_done=jnp.where(fsize > 0, INT(-1), INT(0)),
         f_last_ack_t=jnp.full((F,), -1, INT),
         f_lost=jnp.zeros((F,), INT),
         f_cwnd=jnp.full((F,), jnp.float32(min(cfg.bdp_pkts * 2.0,
@@ -1047,7 +1072,11 @@ def _engine(s: _Static, *, fsrc, fdst, fsize, pkt_base, fp1, fe1, fp2, fe2,
             need_rtx = (st["f_hi"] >= 0) & (gap > cfg.sack_thresh) & (
                 st["f_cum"] < fsize)
             remaining = (st["f_next"] < fsize) | need_rtx
-        sendable = window_ok & remaining & (st["f_complete"] < 0)
+        # Phase gate (collective-phase schedules): a flow may not send
+        # before its phase's start slot.  f_start == 0 everywhere (every
+        # static workload) keeps the mask all-true -- bitwise-inert.
+        sendable = (window_ok & remaining & (st["f_complete"] < 0)
+                    & (t >= f_start))
 
         hf = host_flows
         hf_ok = jnp.where(hf >= 0, sendable[jnp.maximum(hf, 0)], False)

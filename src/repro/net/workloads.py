@@ -45,6 +45,12 @@ class Workload:
     flow_src: np.ndarray   # (F,) int64
     flow_dst: np.ndarray   # (F,) int64
     flow_size: np.ndarray  # (F,) int64  packets per flow
+    # Optional per-flow start slot (collective-phase schedules,
+    # ``repro.phases``): the slotted engine gates each flow's first send on
+    # it, the fast engine sees the same offsets folded into ``t_release``.
+    # ``None`` (every static workload) means all-zero and is
+    # bitwise-equivalent to a zero array on both engines.
+    flow_start: Optional[np.ndarray] = None   # (F,) int64  (slots)
 
     @property
     def n_packets(self) -> int:
@@ -94,8 +100,14 @@ def _packets_from_flows(name: str, n_hosts: int, flow_src: np.ndarray,
             flow=flow_ids, seq=seq, t_release=t_rel,
             flow_src=flow_src, flow_dst=flow_dst, flow_size=flow_size)
 
-    # General (non-uniform sizes) fallback: per-host python round-robin.
-    src_l, dst_l, flow_l, seq_l, rel_l = [], [], [], [], []
+    # General (non-uniform sizes, possibly zero-size flows) fallback:
+    # per-host python round-robin pacing, emitted FLOW-CONTIGUOUS -- the
+    # slotted engine requires packets grouped by flow in flow-id order, so
+    # the release times are computed in host-time order but written out
+    # per flow.  Zero-size flows contribute no packets but keep their flow
+    # row (searchsorted release binding and pkt_base edge-padding stay
+    # well-formed downstream).
+    rel_by_flow = [[] for _ in range(n_flows)]
     for h in range(n_hosts):
         fl = np.flatnonzero(flow_src == h)
         if len(fl) == 0:
@@ -108,21 +120,22 @@ def _packets_from_flows(name: str, n_hosts: int, flow_src: np.ndarray,
             fi = r % len(fl)
             r += 1
             if counters[fi] < sizes[fi]:
-                src_l.append(h)
-                dst_l.append(int(flow_dst[fl[fi]]))
-                flow_l.append(int(fl[fi]))
-                seq_l.append(int(counters[fi]))
-                rel_l.append(float(t))
+                rel_by_flow[int(fl[fi])].append(float(t))
                 counters[fi] += 1
                 remaining -= 1
                 t += 1
+    flow_l = np.repeat(np.arange(n_flows), flow_size)
+    seq_l = (np.concatenate([np.arange(s) for s in flow_size.tolist()])
+             if n_flows else np.empty(0, dtype=np.int64))
+    rel_l = np.asarray([t for rs in rel_by_flow for t in rs],
+                       dtype=np.float64)
     return Workload(
         name=name, n_hosts=n_hosts,
-        src=np.asarray(src_l, dtype=np.int64),
-        dst=np.asarray(dst_l, dtype=np.int64),
-        flow=np.asarray(flow_l, dtype=np.int64),
-        seq=np.asarray(seq_l, dtype=np.int64),
-        t_release=np.asarray(rel_l, dtype=np.float64),
+        src=flow_src[flow_l],
+        dst=flow_dst[flow_l],
+        flow=flow_l.astype(np.int64),
+        seq=seq_l.astype(np.int64),
+        t_release=rel_l,
         flow_src=flow_src, flow_dst=flow_dst, flow_size=flow_size,
     )
 

@@ -211,6 +211,35 @@ def render_report(spans: List[Dict], records: Optional[List[Dict]] = None,
             lines.append("  (lost points have no rows in results.jsonl; "
                          "re-run with --resume after fixing the cause)")
 
+    # ---- iteration time (collective-phase records) ------------------------
+    phased = [r for r in (records or []) if r.get("iter_makespan")]
+    if phased:
+        groups: Dict[tuple, List[Dict]] = {}
+        order: List[tuple] = []
+        for r in phased:
+            key = (r.get("scheme"), r.get("phases"))
+            if key not in groups:
+                groups[key] = []
+                order.append(key)
+            groups[key].append(r)
+        lines.append("")
+        lines.append("iteration time (collective-phase campaigns; slots, "
+                     "mean over seeds/loads):")
+        for scheme, ph in order:
+            rs = groups[(scheme, ph)]
+            n_it = max(len(r["iter_makespan"]) for r in rs)
+            per_it = []
+            for i in range(n_it):
+                vals = [r["iter_makespan"][i] for r in rs
+                        if len(r["iter_makespan"]) > i]
+                per_it.append(sum(vals) / len(vals))
+            mean = (sum(r.get("iter_time_mean", 0.0) for r in rs)
+                    / len(rs))
+            per = ", ".join(f"{v:.0f}" for v in per_it)
+            lines.append(f"  {str(scheme):<16s} {str(ph):<32s} "
+                         f"iter {mean:8.1f}  per-iter [{per}]  "
+                         f"({len(rs)} point(s))")
+
     # ---- top queue trajectories (needs probe-carrying results) -------------
     probed = [r for r in (records or []) if r.get("probe_queue")]
     if probed:

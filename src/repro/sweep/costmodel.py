@@ -207,7 +207,7 @@ def evaluate_policy(campaign: Campaign, policy: BucketPolicy,
     loop_padded = 0
     for mega in p.megabatches:
         rows = mega.n_points
-        real += sum(len(b.seeds) * b.load.n_packets(b.k)
+        real += sum(len(b.seeds) * b.n_packets(b.k)
                     for b in mega.members)
         padded += rows * mega.npk_pad
         if mega.engine == "loop":

@@ -76,11 +76,21 @@ class SeedBatch:
     seeds: Tuple[int, ...]
     g_converge: Optional[int] = None
     timing: Optional[Tuple[int, int]] = None
+    phase: Optional[object] = None     # repro.phases.PhaseSchedule
 
     def points(self) -> List[GridPoint]:
         return [GridPoint(self.campaign, self.k, self.load, self.failure,
-                          self.scheme, s, self.g_converge, self.timing)
+                          self.scheme, s, self.g_converge, self.timing,
+                          self.phase)
                 for s in self.seeds]
+
+    def n_packets(self, k: int) -> int:
+        """Packet count of this batch's (possibly phased) traffic on a
+        fat-tree of size ``k`` -- the planner's bucketing input and the
+        cost model / fill accounting's "real rows" term."""
+        if self.phase is not None:
+            return self.phase.n_packets(k, self.load.msg_packets)
+        return self.load.n_packets(k)
 
     def fused_key(self, campaign: Campaign, policy=None) -> Tuple:
         """Megabatch identity: everything the fused dispatch compiles over.
@@ -103,9 +113,9 @@ class SeedBatch:
         kmap = policy.kmap_dict() if policy is not None else \
             _kmap(campaign.trees)
         kb = kmap[self.k]
-        npk = (policy.pkt_bucket(kb, self.load.n_packets(kb))
+        npk = (policy.pkt_bucket(kb, self.n_packets(kb))
                if policy is not None
-               else bucket_packets(self.load.n_packets(kb)))
+               else bucket_packets(self.n_packets(kb)))
         if campaign.engine == "loop" or scheme.needs_feedback:
             return ("loop", kb, npk,
                     scheme.loop_shape_key(),
@@ -202,13 +212,15 @@ def plan(campaign: Campaign, policy=None, cost_params=None) -> Plan:
 
     batches: dict = {}
     for p in campaign.points():
-        key = (p.k, p.load, p.failure, p.scheme, p.g_converge, p.timing)
+        key = (p.k, p.load, p.failure, p.scheme, p.g_converge, p.timing,
+               p.phase)
         batches.setdefault(key, []).append(p.seed)
 
     out = [SeedBatch(campaign=campaign.name, k=k, load=load, failure=failure,
                      scheme=scheme, seeds=tuple(seeds), g_converge=g,
-                     timing=tm)
-           for (k, load, failure, scheme, g, tm), seeds in batches.items()]
+                     timing=tm, phase=ph)
+           for (k, load, failure, scheme, g, tm, ph), seeds
+           in batches.items()]
     # Stable sort by fused key: batches sharing a compiled pipeline become
     # adjacent (and fuse into one dispatch) while the within-group grid
     # order is preserved.

@@ -22,15 +22,52 @@ from ..net.topology import LAYER_NAMES
 from .spec import GridPoint
 
 # Grid-point identity fields, in summary group-by order (everything but seed).
-# Fast-engine records carry no g_converge, and only timing-axis loop records
-# carry prop_slots/ack_delay; .get(None) keeps the others grouped.
+# Fast-engine records carry no g_converge, only timing-axis loop records
+# carry prop_slots/ack_delay, and only collective-phase records carry
+# "phases"; .get(None) keeps the others grouped.
 _KEY_FIELDS = ("campaign", "k", "workload", "failure", "g_converge",
-               "prop_slots", "ack_delay", "scheme")
+               "prop_slots", "ack_delay", "phases", "scheme")
 
 
-def point_record(point: GridPoint, res) -> Dict:
+def _phase_fields(rec: Dict, point: GridPoint, phases, done) -> None:
+    """Attach the collective-phase / iteration-time fields to a record.
+
+    Only-when-set (the timings pattern): points without a phase schedule
+    add no keys, keeping pre-phase campaign files byte-identical.  ``done``
+    is the per-packet completion-slot vector of the point's engine
+    (fast: ``delivery``; loop: ``delivered_slot``); ``phases`` is the
+    runner-cached ``repro.phases.CompiledPhases`` (None under degraded
+    paths that lack it -- the identity fields still land).
+    """
+    if point.phase is None:
+        return
+    rec["phases"] = point.phase.label()
+    rec["n_phases"] = int(point.phase.n_phases)
+    rec["iterations"] = int(point.phase.iterations)
+    if phases is None:
+        return
+    done = np.asarray(done, dtype=np.float64)
+    comp = []
+    for lo, hi, st in zip(phases.pkt_lo.tolist(), phases.pkt_hi.tolist(),
+                          phases.phase_start.tolist()):
+        # An empty phase (degenerate collective) completes at its start.
+        comp.append(float(done[lo:hi].max()) if hi > lo else float(st))
+    rec["phase_completion"] = comp
+    mks = []
+    for it in range(int(point.phase.iterations)):
+        m = phases.iter_of == it
+        if not m.any():
+            continue
+        end = max(c for c, sel in zip(comp, m.tolist()) if sel)
+        mks.append(end - float(phases.phase_start[m].min()))
+    rec["iter_makespan"] = mks
+    rec["iter_time_mean"] = float(np.mean(mks)) if mks else 0.0
+
+
+def point_record(point: GridPoint, res, phases=None) -> Dict:
     """Flatten one ``fastsim.FastSimResult`` into a JSON-safe record."""
     delivery = np.asarray(res.delivery)
+    fcomp = np.asarray(res.flow_completion)
     rec = {
         "campaign": point.campaign,
         "k": point.k,
@@ -42,9 +79,14 @@ def point_record(point: GridPoint, res) -> Dict:
         "n_packets": int(delivery.shape[0]),
         "cct": float(res.cct),
         "max_queue": float(res.max_queue),
-        "delivery_p50": float(np.percentile(delivery, 50)),
-        "delivery_p99": float(np.percentile(delivery, 99)),
-        "flow_completion_p99": float(np.percentile(res.flow_completion, 99)),
+        # Zero-packet workloads (msg_packets=0, all-degenerate phases)
+        # have no percentiles to take.
+        "delivery_p50": float(np.percentile(delivery, 50))
+        if delivery.size else 0.0,
+        "delivery_p99": float(np.percentile(delivery, 99))
+        if delivery.size else 0.0,
+        "flow_completion_p99": float(np.percentile(fcomp, 99))
+        if fcomp.size else 0.0,
     }
     for name in LAYER_NAMES:
         st = res.layers[name]
@@ -58,6 +100,7 @@ def point_record(point: GridPoint, res) -> Dict:
             rec[f"overload_{tag}"] = float(used.max() / ideal - 1.0)
         else:
             rec[f"overload_{tag}"] = 0.0
+    _phase_fields(rec, point, phases, res.delivery)
     _attach_probe(rec, res)
     return rec
 
@@ -72,7 +115,7 @@ def _attach_probe(rec: Dict, res) -> None:
         rec["probe_queue"] = np.asarray(probe.series).tolist()
 
 
-def loop_point_record(point: GridPoint, res) -> Dict:
+def loop_point_record(point: GridPoint, res, phases=None) -> Dict:
     """Flatten one ``loopsim.LoopSimResult`` into a JSON-safe record."""
     rec = {
         "campaign": point.campaign,
@@ -98,6 +141,7 @@ def loop_point_record(point: GridPoint, res) -> Dict:
         # byte-identical.
         rec["prop_slots"] = int(point.timing[0])
         rec["ack_delay"] = int(point.timing[1])
+    _phase_fields(rec, point, phases, res.delivered_slot)
     _attach_probe(rec, res)
     return rec
 
@@ -247,6 +291,11 @@ def summarize(records: List[Dict]) -> List[Dict]:
             "max_queue_mean": float(mq.mean()),
             "max_queue_max": float(mq.max()),
         })
+        # Iteration time (collective-phase points; only-when-set).
+        its = [r["iter_time_mean"] for r in rs if "iter_time_mean" in r]
+        if its:
+            row["iter_time_mean"] = float(np.mean(its))
+            row["iter_time_max"] = float(np.max(its))
         out.append(row)
     return out
 

@@ -84,6 +84,7 @@ class _Cache:
     def __init__(self):
         self.trees: Dict[int, FatTree] = {}
         self.wls: Dict[Tuple, object] = {}
+        self.cps: Dict[Tuple, object] = {}
         self.links: Dict[Tuple, LinkState] = {}
         self.rhos: Dict[Tuple, float] = {}
 
@@ -92,7 +93,18 @@ class _Cache:
             self.trees[k] = FatTree(k)
         return self.trees[k]
 
-    def workload(self, k: int, load: WorkloadSpec):
+    def compiled_phases(self, k: int, load: WorkloadSpec, phase):
+        """The ``repro.phases.CompiledPhases`` of a phased point (its fused
+        workload plus the per-phase bookkeeping the records need)."""
+        key = (k, load, phase)
+        if key not in self.cps:
+            self.cps[key] = phase.compile(self.tree(k), load.msg_packets,
+                                          rng_seed=load.rng_seed)
+        return self.cps[key]
+
+    def workload(self, k: int, load: WorkloadSpec, phase=None):
+        if phase is not None:
+            return self.compiled_phases(k, load, phase).workload
         key = (k, load)
         if key not in self.wls:
             self.wls[key] = build_workload(self.tree(k), load)
@@ -122,11 +134,12 @@ class _Cache:
             return links if links.any_failure() else None
         return self.link_state(k, failure)
 
-    def rho_auto(self, k: int, load: WorkloadSpec, failure) -> float:
-        key = (k, load, failure)
+    def rho_auto(self, k: int, load: WorkloadSpec, failure,
+                 phase=None) -> float:
+        key = (k, load, failure, phase)
         if key not in self.rhos:
             links = self.rho_links(k, failure)
-            wl = self.workload(k, load)
+            wl = self.workload(k, load, phase)
             self.rhos[key] = (rho_max(self.tree(k), links, wl.flow_src,
                                       wl.flow_dst)
                               if links is not None else 1.0)
@@ -141,7 +154,7 @@ def _fault_of(b: SeedBatch):
 
 def _run_fast_mega(mega: MegaBatch, campaign: Campaign, cache: _Cache):
     """One fused dispatch for all member batches; returns results per member."""
-    items = [(cache.tree(b.k), cache.workload(b.k, b.load),
+    items = [(cache.tree(b.k), cache.workload(b.k, b.load, b.phase),
               lbs.by_name(b.scheme), b.seeds,
               cache.link_state(b.k, b.failure), _fault_of(b))
              for b in mega.members]
@@ -162,9 +175,9 @@ def _run_loop_mega(mega: MegaBatch, campaign: Campaign, cache: _Cache):
     rho_opt = campaign.loop_options().get("rho", 1.0)
     items = []
     for b in mega.members:
-        rho = (cache.rho_auto(b.k, b.load, b.failure) if rho_opt == "auto"
-               else float(rho_opt))
-        items.append((cache.tree(b.k), cache.workload(b.k, b.load),
+        rho = (cache.rho_auto(b.k, b.load, b.failure, b.phase)
+               if rho_opt == "auto" else float(rho_opt))
+        items.append((cache.tree(b.k), cache.workload(b.k, b.load, b.phase),
                       lbs.by_name(b.scheme),
                       campaign.loop_config(rho, timing=b.timing),
                       b.seeds, cache.link_state(b.k, b.failure),
@@ -206,7 +219,7 @@ def _dispatch_span(idx: int, mega: MegaBatch, campaign: Campaign,
     n_shards = (max(1, min(devices, rows))
                 if n_shards_pol == "auto" else 1)
     rows_padded = -(-rows // n_shards) * n_shards
-    pkt_rows_real = sum(b.load.n_packets(b.k) * len(b.seeds)
+    pkt_rows_real = sum(b.n_packets(b.k) * len(b.seeds)
                         for b in mega.members)
     pkt_rows_padded = rows_padded * mega.npk_pad
     span = {
@@ -234,6 +247,14 @@ def _dispatch_span(idx: int, mega: MegaBatch, campaign: Campaign,
         span["slot_budget"] = int(campaign.max_slots)
         from ..kernels.slot_step import ops as _slot
         span["impl"] = _slot.resolve_impl(campaign.loop_config().impl)
+    # Collective-phase members (only-when-set: phase-free campaigns keep
+    # byte-identical spans): which schedules ride this dispatch and how
+    # many of its fused points are phased.
+    phased = [b for b in mega.members if b.phase is not None]
+    if phased:
+        span["phases"] = sorted({b.phase.label() for b in phased})
+        span["phase_points"] = sum(len(b.seeds) for b in phased)
+        span["phase_instances"] = max(b.phase.n_instances for b in phased)
     return span
 
 
@@ -245,17 +266,20 @@ def _point_key(point: GridPoint) -> Tuple:
             point.failure.label() if point.failure else None,
             point.scheme, point.seed, point.g_converge,
             int(tm[0]) if tm[0] is not None else None,
-            int(tm[1]) if tm[1] is not None else None)
+            int(tm[1]) if tm[1] is not None else None,
+            point.phase.label() if point.phase is not None else None)
 
 
 def _record_key(rec: Dict) -> Tuple:
     # Fast-engine records carry no g_converge field; .get(None) matches the
     # fast-campaign grid's g_converge=None axis value.  Likewise
-    # prop_slots/ack_delay appear only on timing-axis loop records.
+    # prop_slots/ack_delay appear only on timing-axis loop records and
+    # "phases" only on collective-phase records (pre-phase results.jsonl
+    # files resume byte-identically).
     return (rec.get("campaign"), rec.get("k"), rec.get("workload"),
             rec.get("failure"), rec.get("scheme"), rec.get("seed"),
             rec.get("g_converge"), rec.get("prop_slots"),
-            rec.get("ack_delay"))
+            rec.get("ack_delay"), rec.get("phases"))
 
 
 def _run_with_recovery(idx: int, mega: MegaBatch, campaign: Campaign,
@@ -401,6 +425,9 @@ def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,
             "probes": _probe_field(campaign),
             "cache_dir": str(cache_dir) if cache_dir else None,
         }
+        if any(ph is not None for ph in campaign.phases):
+            span["phases"] = [ph.label() if ph is not None else None
+                              for ph in campaign.phases]
         if p.policy is not None:
             # Cost-modeled planning: the chosen policy, its predicted
             # cost/fill, and the rejected alternatives -- the prediction
@@ -508,10 +535,12 @@ def run_campaign(campaign: Campaign, store: Optional[ResultStore] = None,
                 trace.emit(span)
             log.info(dispatch_line(span, p.n_dispatches))
             for batch, results in zip(mega.members, per_member):
+                cp = (cache.compiled_phases(batch.k, batch.load, batch.phase)
+                      if batch.phase is not None else None)
                 for point, res in zip(batch.points(), results):
                     if res is None:     # terminal failure: error span only
                         continue
-                    store.append(to_record(point, res))
+                    store.append(to_record(point, res, phases=cp))
                     if keep_full:
                         full[point] = res
                 # Apportion the fused dispatch's wall time over members by

@@ -21,6 +21,7 @@ from typing import Dict, Optional, Tuple, Union
 from ..core import lb_schemes as lbs
 from ..faults import FaultSchedule
 from ..obs.probes import ProbeSpec
+from ..phases import PhaseSchedule, phases_from_dict
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,14 +95,29 @@ class GridPoint:
     seed: int
     g_converge: Optional[int] = None   # loop engine routing-convergence slot
     timing: Optional[Tuple[int, int]] = None  # (prop_slots, ack_delay) sweep
+    # Collective-phase schedule (repro.phases): when set, the point's
+    # traffic is the schedule compiled on its tree (the load contributes
+    # msg_packets scaling + traffic rng seed; its kind is ignored).
+    phase: Optional[PhaseSchedule] = None
 
     def point_id(self) -> str:
         fail = self.failure.label() if self.failure else "nofail"
         g = "" if self.g_converge is None else f"G{self.g_converge}/"
         tm = ("" if self.timing is None
               else f"p{self.timing[0]}a{self.timing[1]}/")
-        return (f"{self.campaign}/k{self.k}/{self.load.label()}/{fail}/"
+        ph = "" if self.phase is None else f"{self.phase.label()}/"
+        return (f"{self.campaign}/k{self.k}/{self.load.label()}/{ph}{fail}/"
                 f"{g}{tm}{self.scheme}/s{self.seed}")
+
+    def n_packets(self, k: Optional[int] = None) -> int:
+        """Packet count of this point's (possibly phased) traffic on a
+        fat-tree of size ``k`` (default: the point's own tree) without
+        materializing it -- shared by the planner's shape bucketing, the
+        cost model and the runner's fill accounting."""
+        k = self.k if k is None else int(k)
+        if self.phase is not None:
+            return self.phase.n_packets(k, self.load.msg_packets)
+        return self.load.n_packets(k)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,6 +176,11 @@ class Campaign:
     probes: Optional[ProbeSpec] = None  # opt-in queue time-series capture
     timings: Tuple[Optional[Tuple[int, int]], ...] = (None,)
     planner: str = "heuristic"         # 'heuristic' | 'cost'
+    # Collective-phase axis (repro.phases.PhaseSchedule): ``None`` rows are
+    # the static workloads; schedule rows compile phased traffic from the
+    # row's load (msg_packets scaling + rng seed) and ride the fused
+    # campaign axis like any other grid dimension.
+    phases: Tuple[Optional[PhaseSchedule], ...] = (None,)
 
     def __post_init__(self):
         for s in self.schemes:
@@ -175,6 +196,10 @@ class Campaign:
             raise ValueError(f"unknown shard policy {self.shard!r}")
         if self.planner not in ("heuristic", "cost"):
             raise ValueError(f"unknown planner {self.planner!r}")
+        for ph in self.phases:
+            if ph is not None and not isinstance(ph, PhaseSchedule):
+                raise ValueError(f"phases entries must be PhaseSchedule or "
+                                 f"None, got {type(ph).__name__}")
         for tm in self.timings:
             if tm is None:
                 continue
@@ -209,8 +234,9 @@ class Campaign:
         n_sched = sum(isinstance(f, FaultSchedule) for f in self.failures)
         fail_rows = ((len(self.failures) - n_sched) * len(self.g_converge)
                      + n_sched)
-        return (len(self._uniq_trees) * len(self.loads) * fail_rows
-                * len(self.timings) * len(self.schemes) * len(self.seeds))
+        return (len(self._uniq_trees) * len(self.loads) * len(self.phases)
+                * fail_rows * len(self.timings) * len(self.schemes)
+                * len(self.seeds))
 
     def loop_options(self) -> Dict:
         return dict(self.loop_opts)
@@ -238,8 +264,8 @@ class Campaign:
     def points(self):
         """Expand the grid in a deterministic order (seeds innermost, so
         replicate runs of one point are adjacent for the planner)."""
-        for k, load, failure, g, tm, scheme, seed in itertools.product(
-                self._uniq_trees, self.loads, self.failures,
+        for k, load, phase, failure, g, tm, scheme, seed in itertools.product(
+                self._uniq_trees, self.loads, self.phases, self.failures,
                 self.g_converge, self.timings, self.schemes, self.seeds):
             if isinstance(failure, FaultSchedule):
                 # Schedule rows ignore the g_converge axis (their reaction
@@ -250,7 +276,7 @@ class Campaign:
                 g = None
             yield GridPoint(campaign=self.name, k=k, load=load,
                             failure=failure, scheme=scheme, seed=seed,
-                            g_converge=g, timing=tm)
+                            g_converge=g, timing=tm, phase=phase)
 
     # ---- JSON round-trip ---------------------------------------------------
     def to_dict(self) -> Dict:
@@ -264,6 +290,13 @@ class Campaign:
         d["loop_opts"] = dict(self.loop_opts)
         if self.probes is not None:
             d["probes"] = dataclasses.asdict(self.probes)
+        # Only-when-set (the timings/records pattern): pre-phase specs
+        # round-trip byte-identically.
+        if all(p is None for p in self.phases):
+            d.pop("phases")
+        else:
+            d["phases"] = [p.to_dict() if p is not None else None
+                           for p in self.phases]
         return d
 
     @classmethod
@@ -282,6 +315,8 @@ class Campaign:
             tuple(int(x) for x in tm) if tm is not None else None
             for tm in d.get("timings", [None]))
         d["shard"] = d.get("shard", "auto")
+        d["phases"] = tuple(phases_from_dict(p)
+                            for p in d.get("phases", [None]))
         d["loop_opts"] = tuple(sorted(d.get("loop_opts", {}).items()))
         pr = d.get("probes")
         d["probes"] = ProbeSpec(**pr) if isinstance(pr, dict) else pr
@@ -401,6 +436,27 @@ def _fig12(trees: Tuple[int, ...] = (8,),
         loop_opts=(("loss", "sack"), ("sack_thresh", 32)))
 
 
+def _train_iter(trees: Tuple[int, ...] = (4,),
+                seeds: Tuple[int, ...] = (0, 1),
+                iterations: int = 2) -> Campaign:
+    """Collective-phase training campaign: the Table-2 contender schemes
+    under a DeepSeek-V3-671B-derived phase schedule (MoE dispatch/combine
+    all-to-alls, the gradient all-reduce, the over-pod FSDP ring) repeated
+    for ``iterations`` training steps, crossed with two message-size loads.
+    The iteration-time section of ``sweep report`` reads this campaign's
+    per-iteration makespans; phased points fuse exactly like static ones
+    (``n_dispatches == n_shapes``)."""
+    sched = PhaseSchedule.from_model("deepseek-v3-671b", ep=8, dp=8,
+                                     iterations=iterations)
+    return Campaign(
+        name="train_iter",
+        schemes=("flow_ecmp", "host_pkt", "host_dr", "ofan"),
+        loads=(WorkloadSpec("permutation", 8),
+               WorkloadSpec("permutation", 16)),
+        trees=trees, seeds=seeds,
+        phases=(sched,))
+
+
 PRESETS = {
     "table2": _table2,
     "fig1": _fig1,
@@ -409,6 +465,7 @@ PRESETS = {
     "failures": _failures,
     "flap": _flap,
     "fig12": _fig12,
+    "train_iter": _train_iter,
 }
 
 

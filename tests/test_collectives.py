@@ -97,3 +97,19 @@ def test_planner_all_reduce_schedules():
     big = planner.plan_all_reduce(1 << 30, 2, intra_pod=False)
     assert big.impl in ("rs_ag", "xla")
     assert big.est_time_s > 0
+
+
+def test_planner_degenerate_inputs():
+    """n<=1 or zero/negative traffic must return an explicit empty plan
+    (impl 'none', zero time) instead of dividing by zero -- the phase
+    compiler maps these to empty phases."""
+    for plan in (planner.plan_all_to_all(1 << 20, 1),
+                 planner.plan_all_to_all(1 << 20, 0),
+                 planner.plan_all_to_all(0, 16),
+                 planner.plan_all_to_all(-5.0, 16),
+                 planner.plan_all_reduce(1 << 30, 1),
+                 planner.plan_all_reduce(0, 16),
+                 planner.plan_all_reduce(-1.0, 16)):
+        assert plan.impl == "none"
+        assert plan.est_time_s == 0.0
+        assert "degenerate" in plan.reason

@@ -124,3 +124,42 @@ def test_ata_packet_schemes_near_bound():
     # bound: per-host serialization + pipeline latency through the fabric
     bound = per_host + 5 * (1 + 12.0)
     assert res.cct <= bound * 1.15   # k=4 is noisy; paper's ~1% is at k=8
+
+
+# ---- zero-packet flows (msg_packets=0, degenerate phases) ------------------
+
+def test_zero_packet_workload(tree):
+    """An all-empty workload (every flow size 0) must not crash the
+    max-plus pipeline (empty segmented scans) and reports CCT 0 with
+    finite flow completions, not -inf."""
+    wl = workloads.permutation(tree, 0, np.random.default_rng(1))
+    assert wl.n_packets == 0 and wl.n_flows > 0
+    for name in ("host_pkt", "flow_ecmp", "jsq", "ofan", "host_dr"):
+        res = fastsim.simulate(tree, wl, lbs.by_name(name), seed=0)
+        assert res.cct == 0.0, name
+        assert res.delivery.shape == (0,)
+        assert np.isfinite(res.flow_completion).all(), name
+        assert (np.asarray(res.flow_completion) == 0.0).all(), name
+
+
+def test_mixed_zero_flows_inert(tree):
+    """Flows of size 0 mixed into a real workload keep the packet layout
+    flow-contiguous, pace the nonzero flows exactly as if absent (zero
+    flows never consume a release slot), and complete at 0."""
+    fsize = np.array([3, 0, 2, 0, 1, 4, 0, 2])
+    src = np.arange(8)
+    dst = (np.arange(8) + 3) % tree.n_hosts
+    mixed = workloads._packets_from_flows("mix", tree.n_hosts, src, dst,
+                                          fsize)
+    keep = fsize > 0
+    dense = workloads._packets_from_flows("dense", tree.n_hosts, src[keep],
+                                          dst[keep], fsize[keep])
+    np.testing.assert_array_equal(
+        np.asarray(mixed.flow), np.repeat(np.arange(8), fsize))
+    np.testing.assert_array_equal(mixed.t_release, dense.t_release)
+    np.testing.assert_array_equal(mixed.src, dense.src)
+    res = fastsim.simulate(tree, mixed, lbs.by_name("host_pkt"), seed=0)
+    fcomp = np.asarray(res.flow_completion)
+    assert np.isfinite(fcomp).all()
+    assert (fcomp[fsize == 0] == 0.0).all()
+    assert (fcomp[fsize > 0] > 0.0).all()

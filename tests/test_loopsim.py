@@ -224,3 +224,44 @@ def test_megabatch_rejects_mixed_pipeline_identities(tree, wl):
         loopsim.simulate_megabatch(
             [(tree, wl, lbs.host_pkt(), _CFGS["erasure"], [0], None, None),
              (tree, wl, lbs.host_pkt(), _CFGS["sack"], [0], None, None)])
+
+
+# ---- zero-packet flows (msg_packets=0, degenerate phases) ------------------
+
+def test_zero_packet_workload(tree):
+    """An all-empty workload (every flow size 0) runs, finishes, and
+    reports CCT 0 -- not the pipeline latency of the first delivery
+    check, and not a crash on the empty maxima."""
+    wl = workloads.permutation(tree, 0, np.random.default_rng(1))
+    assert wl.n_packets == 0 and wl.n_flows > 0
+    res = loopsim.simulate(tree, wl, lbs.host_pkt(),
+                           loopsim.LoopConfig(max_slots=500), seed=0)
+    assert res.finished
+    assert res.cct_slots == 0.0 and res.cct_acked_slots == 0.0
+    assert res.delivered_slot.shape == (0,)
+    assert (res.flow_complete_slot == 0).all()
+    assert (res.flow_data_done_slot == 0).all()
+
+
+def test_mixed_zero_flows_inert(tree):
+    """Flows of size 0 mixed into a real workload are inert: they complete
+    at slot 0 and the nonzero flows run exactly as if the empty ones were
+    absent (same packet layout contract the phase compiler relies on)."""
+    fsize = np.array([3, 0, 2, 0, 1, 4, 0, 2])
+    src = np.arange(8)
+    dst = (np.arange(8) + 3) % tree.n_hosts
+    mixed = workloads._packets_from_flows("mix", tree.n_hosts, src, dst,
+                                          fsize)
+    np.testing.assert_array_equal(
+        np.asarray(mixed.flow), np.repeat(np.arange(8), fsize))
+    cfg = loopsim.LoopConfig(max_slots=500)
+    res = loopsim.simulate(tree, mixed, lbs.host_pkt(), cfg, seed=0)
+    assert res.finished
+    assert (res.flow_complete_slot[fsize == 0] == 0).all()
+    assert (res.flow_data_done_slot[fsize == 0] == 0).all()
+    keep = fsize > 0
+    dense = workloads._packets_from_flows("dense", tree.n_hosts, src[keep],
+                                          dst[keep], fsize[keep])
+    ref = loopsim.simulate(tree, dense, lbs.host_pkt(), cfg, seed=0)
+    np.testing.assert_array_equal(res.delivered_slot, ref.delivered_slot)
+    assert res.cct_slots == ref.cct_slots

@@ -1,0 +1,324 @@
+"""Collective-phase training campaigns (``repro.phases``).
+
+The PhaseSchedule axis follows the FaultSchedule contract: it rides the
+fused campaign grid (phase shape folds into the fused key, so
+``n_dispatches == n_shapes`` still holds), and its differential
+obligations mirror the faults suite:
+
+  (a) a single-phase schedule is **bitwise-identical** to the static
+      workload path on BOTH engines;
+  (b) a fused multi-phase mixed-k campaign -- including a phases x faults
+      point -- reproduces per-point serial simulation bitwise;
+  (c) phase/iteration record fields are only-when-set, so pre-phase
+      campaign files stay byte-identical under ``--resume``.
+
+Plus the schedule-level invariants: ``n_packets`` agrees with ``compile``
+without materializing, compiled packets stay flow-contiguous (the loop
+engine's layout contract), JSON round-trips preserve identity and label,
+and degenerate collectives (n<=1, zero bytes) compile to empty phases
+instead of dividing by zero.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import sweep
+from repro.core import lb_schemes as lbs
+from repro.faults import FaultSchedule
+from repro.net import fastsim, loopsim, workloads
+from repro.net.topology import FatTree
+from repro.obs.report import render_report
+from repro.phases import Phase, PhaseSchedule, phases_from_dict
+from repro.sweep.results import ResultStore, summarize
+from repro.sweep.runner import build_workload, run_campaign
+from repro.sweep.spec import PRESETS, Campaign, WorkloadSpec
+
+
+@pytest.fixture(scope="module")
+def tree():
+    return FatTree(4)
+
+
+def _model_sched(iterations=2):
+    return PhaseSchedule.from_model("deepseek-v3-671b", ep=8, dp=8,
+                                    iterations=iterations)
+
+
+# ---- schedule-level invariants --------------------------------------------
+
+def test_from_model_phase_structure():
+    s = _model_sched()
+    names = [p.name for p in s.phases]
+    assert names == ["moe_dispatch", "moe_combine", "grad_allreduce",
+                     "fsdp_allgather"]
+    kinds = [p.collective for p in s.phases]
+    assert kinds == ["all_to_all", "all_to_all", "all_reduce", "fsdp_ring"]
+    assert all(p.bytes > 0 and p.n > 1 for p in s.phases)
+
+
+def test_label_and_roundtrip():
+    s = _model_sched()
+    lab = s.label()
+    assert lab.startswith("deepseek-v3-671b-4p2i-")
+    d = json.loads(json.dumps(s.to_dict()))
+    assert d["kind"] == "phases"
+    back = phases_from_dict(d)
+    assert back == s
+    assert back.label() == lab
+    # label discriminates on phase content, not just shape
+    other = PhaseSchedule(s.name, s.phases[:-1] + (
+        Phase("fsdp_allgather", "fsdp_ring", 1.0, s.phases[-1].n),),
+        iterations=s.iterations)
+    assert other.label() != lab
+    assert phases_from_dict(None) is None
+
+
+def test_n_packets_matches_compile(tree):
+    s = _model_sched()
+    cp = s.compile(tree, 8)
+    assert s.n_packets(4, 8) == cp.workload.n_packets
+    assert cp.n_instances == s.n_phases * s.iterations
+    # starts are strictly increasing and packet ranges partition the axis
+    assert (np.diff(cp.phase_start) > 0).all()
+    assert cp.pkt_lo[0] == 0 and cp.pkt_hi[-1] == cp.workload.n_packets
+    assert (cp.pkt_lo[1:] == cp.pkt_hi[:-1]).all()
+
+
+def test_compiled_packets_flow_contiguous(tree):
+    wl = _model_sched().compile(tree, 8).workload
+    expect = np.repeat(np.arange(wl.n_flows), np.asarray(wl.flow_size))
+    np.testing.assert_array_equal(np.asarray(wl.flow), expect)
+    assert wl.flow_start is not None and wl.flow_start.shape == (wl.n_flows,)
+
+
+def test_degenerate_phases_compile_empty(tree):
+    s = PhaseSchedule("degen", (
+        Phase("solo_a2a", "all_to_all", 1 << 20, 1),     # n=1: no pairs
+        Phase("no_bytes", "all_reduce", 0.0, 16),        # no traffic
+    ))
+    cp = s.compile(tree, 8)
+    assert cp.workload.n_packets == 0
+    assert cp.workload.n_flows == 0
+    assert cp.n_instances == 2
+
+
+def test_iterations_replicate_phases(tree):
+    one = _model_sched(iterations=1)
+    two = _model_sched(iterations=2)
+    assert two.n_packets(4, 8) == 2 * one.n_packets(4, 8)
+    cp = two.compile(tree, 8)
+    np.testing.assert_array_equal(cp.iter_of,
+                                  np.repeat([0, 1], one.n_phases))
+
+
+# ---- differential (a): single phase == static path ------------------------
+
+def test_single_phase_equals_static_fast(tree):
+    s = PhaseSchedule("a2a1", (Phase("a2a", "all_to_all", 1.0,
+                                     tree.n_hosts),))
+    assert s._impl_of(s.phases[0], s.plans()[0]) == "xla"
+    wl_ph = s.compile(tree, 4).workload
+    wl_st = workloads.all_to_all(tree, 4)
+    for name in ("flow_ecmp", "host_pkt", "host_dr", "ofan", "jsq"):
+        scheme = lbs.by_name(name)
+        got = fastsim.simulate(tree, wl_ph, scheme, seed=3)
+        ref = fastsim.simulate(tree, wl_st, scheme, seed=3)
+        np.testing.assert_array_equal(np.asarray(got.delivery),
+                                      np.asarray(ref.delivery), err_msg=name)
+        assert got.cct == ref.cct, name
+
+
+def test_single_phase_equals_static_loop(tree):
+    s = PhaseSchedule("a2a1", (Phase("a2a", "all_to_all", 1.0,
+                                     tree.n_hosts),))
+    wl_ph = s.compile(tree, 4).workload
+    wl_st = workloads.all_to_all(tree, 4)
+    cfg = loopsim.LoopConfig(max_slots=3000)
+    for name in ("host_pkt", "host_pkt_ar", "ofan"):
+        scheme = lbs.by_name(name)
+        got = loopsim.simulate(tree, wl_ph, scheme, cfg, seed=3)
+        ref = loopsim.simulate(tree, wl_st, scheme, cfg, seed=3)
+        np.testing.assert_array_equal(got.delivered_slot, ref.delivered_slot,
+                                      err_msg=name)
+        assert got.cct_slots == ref.cct_slots, name
+        assert got.retransmissions == ref.retransmissions, name
+
+
+def test_loop_phase_gate_respected(tree):
+    """No packet of a later phase may deliver before that phase's start
+    slot -- the ``f_start`` operand gates host injection."""
+    cp = _model_sched().compile(tree, 8)
+    wl = cp.workload
+    res = loopsim.simulate(tree, wl, lbs.by_name("host_pkt"),
+                           loopsim.LoopConfig(max_slots=4000), seed=0)
+    assert res.finished
+    ds = np.asarray(res.delivered_slot)
+    start = np.asarray(wl.flow_start)[np.asarray(wl.flow)]
+    assert (ds[ds >= 0] > start[ds >= 0]).all()
+
+
+def test_fast_phase_release_offsets(tree):
+    """Fast engine: per-phase completions are bounded below by the phase's
+    release offset (phase offsets ride ``t_release``)."""
+    cp = _model_sched().compile(tree, 8)
+    res = fastsim.simulate(tree, cp.workload, lbs.by_name("host_pkt"),
+                           seed=0)
+    d = np.asarray(res.delivery)
+    for i in range(cp.n_instances):
+        lo, hi = int(cp.pkt_lo[i]), int(cp.pkt_hi[i])
+        assert d[lo:hi].min() > cp.phase_start[i]
+
+
+# ---- differential (b): fused phased campaign == serial --------------------
+
+FLAP = FaultSchedule.flap(layer="ea", pod=0, i=0, j=1, t0=4, period=12,
+                          cycles=1, host_react=0, switch_react=0)
+
+
+def _phased_campaign(engine, sched, **kw):
+    return Campaign(name=f"ph_{engine}", schemes=("host_pkt",),
+                    loads=(WorkloadSpec("permutation", 4),),
+                    trees=(4, 6), seeds=(0, 1), engine=engine,
+                    phases=(None, sched), **kw)
+
+
+def test_fused_phased_campaign_bitwise_fast(tree):
+    """Mixed-k campaign with phased AND unphased rows -- plus a
+    phases x faults point -- must reproduce serial fastsim bitwise.
+    (``gpus_per_server=2`` divides both trees' host counts: 16 and 54.)"""
+    sched = PhaseSchedule.from_model("deepseek-v3-671b", ep=8, dp=8,
+                                     iterations=1, gpus_per_server=2)
+    c = _phased_campaign("fast", sched, failures=(None, FLAP))
+    plan = sweep.plan(c)
+    assert plan.n_dispatches == plan.n_shapes
+    _, full = run_campaign(c, keep_full=True)
+    assert len(full) == c.n_points == 16
+    for point, res in full.items():
+        t = FatTree(point.k)
+        wl = (point.phase.compile(t, point.load.msg_packets,
+                                  rng_seed=point.load.rng_seed).workload
+              if point.phase is not None
+              else build_workload(t, point.load))
+        ref = fastsim.simulate(t, wl, lbs.by_name(point.scheme),
+                               seed=point.seed, fault=point.failure)
+        np.testing.assert_array_equal(np.asarray(res.delivery),
+                                      np.asarray(ref.delivery))
+        assert res.cct == ref.cct
+
+
+def test_fused_phased_campaign_bitwise_loop():
+    sched = PhaseSchedule("mini", (
+        Phase("a2a", "all_to_all", 1.0, 16),
+        Phase("ring", "all_reduce", 1.0, 16, gap_slots=4),
+    ), iterations=2, slack=1.0)
+    c = _phased_campaign("loop", sched, max_slots=4000)
+    plan = sweep.plan(c)
+    assert plan.n_dispatches == plan.n_shapes
+    _, full = run_campaign(c, keep_full=True)
+    assert len(full) == c.n_points == 8
+    for point, res in full.items():
+        t = FatTree(point.k)
+        wl = (point.phase.compile(t, point.load.msg_packets,
+                                  rng_seed=point.load.rng_seed).workload
+              if point.phase is not None
+              else build_workload(t, point.load))
+        ref = loopsim.simulate(t, wl, lbs.by_name(point.scheme),
+                               c.loop_config(), seed=point.seed)
+        np.testing.assert_array_equal(res.delivered_slot, ref.delivered_slot)
+        assert res.cct_slots == ref.cct_slots
+
+
+# ---- grid integration / records / report ----------------------------------
+
+def test_train_iter_preset_plans_fused():
+    c = PRESETS["train_iter"]()
+    plan = sweep.plan(c)
+    assert plan.n_dispatches == plan.n_shapes
+    assert any(b.phase is not None for b in plan.batches)
+
+
+def test_phase_records_and_summary(tmp_path):
+    sched = _model_sched(iterations=2)
+    c = Campaign(name="ph_rec", schemes=("host_pkt", "ofan"),
+                 loads=(WorkloadSpec("permutation", 4),),
+                 trees=(4,), seeds=(0,), phases=(sched,))
+    store = ResultStore(tmp_path / "results.jsonl")
+    run_campaign(c, store=store)
+    store.close()
+    assert len(store.records) == 2
+    for r in store.records:
+        assert r["phases"] == sched.label()
+        assert r["n_phases"] == 4 and r["iterations"] == 2
+        assert len(r["phase_completion"]) == 8
+        assert len(r["iter_makespan"]) == 2
+        assert r["iter_time_mean"] == pytest.approx(
+            np.mean(r["iter_makespan"]))
+        assert all(v >= 0 for v in r["phase_completion"])
+    rows = summarize(store.records)
+    assert all("iter_time_mean" in row for row in rows)
+    rep = render_report([], store.records)
+    assert "iteration time" in rep
+    assert sched.label() in rep
+
+
+def test_unphased_records_carry_no_phase_keys():
+    c = Campaign(name="plain", schemes=("host_pkt",),
+                 loads=(WorkloadSpec("permutation", 4),),
+                 trees=(4,), seeds=(0,))
+    recs, _ = run_campaign(c)
+    for r in recs:
+        assert "phases" not in r and "iter_makespan" not in r
+        assert "n_phases" not in r and "iter_time_mean" not in r
+    row = summarize(recs)[0]
+    assert "iter_time_mean" not in row
+
+
+def test_resume_byte_identical_with_phases(tmp_path):
+    """Differential (c): a campaign mixing pre-phase (unphased) and phased
+    rows, killed mid-run and resumed, reproduces the uninterrupted file
+    byte-for-byte -- the phase fields are only-when-set, so the unphased
+    prefix is exactly what a pre-phase producer wrote."""
+    sched = PhaseSchedule("mini", (
+        Phase("a2a", "all_to_all", 1.0, 16),
+        Phase("ring", "all_reduce", 1.0, 16),
+    ), slack=1.0)
+    c = Campaign(name="ph_resume", schemes=("host_pkt", "ofan"),
+                 loads=(WorkloadSpec("permutation", 4),),
+                 trees=(4,), seeds=(0, 1), phases=(None, sched))
+    a = tmp_path / "a"
+    store = ResultStore(a / "results.jsonl")
+    run_campaign(c, store=store, compile_cache_dir=False)
+    store.close()
+    golden = (a / "results.jsonl").read_bytes()
+    # unphased rows carry no phase keys: byte-compatible with pre-phase files
+    head = json.loads(golden.decode().splitlines()[0])
+    assert "phases" not in head
+
+    lines = golden.decode().splitlines(keepends=True)
+    cut = len(lines) // 2
+    b = tmp_path / "b"
+    b.mkdir()
+    (b / "results.jsonl").write_text(
+        "".join(lines[:cut]) + lines[cut][: len(lines[cut]) // 2])
+    store = ResultStore(b / "results.jsonl", overwrite=False)
+    run_campaign(c, store=store, compile_cache_dir=False, resume=True)
+    store.close()
+    assert (b / "results.jsonl").read_bytes() == golden
+
+
+def test_campaign_dict_roundtrip_with_phases():
+    sched = _model_sched()
+    c = Campaign(name="rt", schemes=("host_pkt",),
+                 loads=(WorkloadSpec("permutation", 4),),
+                 trees=(4,), seeds=(0,), phases=(None, sched))
+    d = json.loads(json.dumps(c.to_dict()))
+    back = Campaign.from_dict(d)
+    assert back.phases == (None, sched)
+    assert back.n_points == c.n_points == 2
+    # all-None phase axis serializes away entirely (pre-phase compat)
+    plain = Campaign(name="rt2", schemes=("host_pkt",),
+                     loads=(WorkloadSpec("permutation", 4),),
+                     trees=(4,), seeds=(0,))
+    assert "phases" not in plain.to_dict()
+    assert Campaign.from_dict(plain.to_dict()).phases == (None,)
